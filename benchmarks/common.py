@@ -1,0 +1,107 @@
+"""Shared benchmark infrastructure.
+
+Metrics, matching the paper's Section 4 evaluation:
+  * iterations-to-converge: steps until ||θ_t − θ*|| < tol·||θ*||;
+  * simulated wall time: per-step time = (shifted-exponential worker latency,
+    waiting for the fastest w−s workers) + measured master-side computation.
+    The worker latencies are simulated (no real cluster here — DESIGN.md §3);
+    the master decode/combine cost is real measured CPU time of the jit'd
+    step, which preserves the paper's LDPC-decode-is-cheap comparison.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FixedCountStragglers,
+    DelayModel,
+    Scheme2Blocked,
+    make_regular_ldpc,
+    run_pgd,
+    second_moment,
+)
+from repro.core.schemes import Karakus, Replication, Uncoded
+
+W = 40  # the paper's worker count
+
+
+def build_code(seed=0):
+    """The paper's (40, 20) rate-1/2 LDPC code."""
+    return make_regular_ldpc(20, l=3, r=6, seed=seed)
+
+
+def build_schemes(prob, *, projection=None, seed=0) -> dict:
+    """All compared schemes on one problem (paper Fig. 1-3 lineup)."""
+    from repro.optim import projections as Pj
+    proj = projection or Pj.identity
+    mom = second_moment(prob.X, prob.y)
+    code = build_code(seed)
+    return {
+        "ldpc-moment (this paper)": Scheme2Blocked.build(
+            code, mom, lr=prob.lr, decode_iters=12, projection=proj),
+        "uncoded": Uncoded(prob.X, prob.y, w=W, lr=prob.lr, projection=proj),
+        "2-replication": Replication(prob.X, prob.y, w=W, lr=prob.lr, r=2,
+                                     projection=proj),
+        "KSDY17-hadamard": Karakus.build(prob.X, prob.y, W, lr=prob.lr * 0.8,
+                                         kind="hadamard", seed=seed,
+                                         projection=proj),
+        "KSDY17-gaussian": Karakus.build(prob.X, prob.y, W, lr=prob.lr * 0.8,
+                                         kind="gaussian", seed=seed,
+                                         projection=proj),
+    }
+
+
+def iterations_to_converge(scheme, prob, s: int, *, steps=1500, tol=2e-2,
+                           key=None) -> tuple[int | None, float]:
+    """(first step with rel-err < tol, final rel-err)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    res = run_pgd(scheme, jnp.zeros_like(prob.theta_star),
+                  FixedCountStragglers(s), steps,
+                  theta_star=prob.theta_star, key=key)
+    norm = float(jnp.linalg.norm(prob.theta_star))
+    errs = np.asarray(res.errors) / norm
+    hit = np.nonzero(errs < tol)[0]
+    return (int(hit[0]) + 1 if hit.size else None), float(errs[-1])
+
+
+def master_step_seconds(scheme, prob, s: int, *, reps=20) -> float:
+    """Measured master-side cost of one jit'd coded step."""
+    mask = FixedCountStragglers(s).sample(jax.random.PRNGKey(0), scheme.w)
+    theta = jnp.zeros_like(prob.theta_star)
+    step = jax.jit(lambda t, m: scheme.step(t, m)[0])
+    step(theta, mask).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        theta = step(theta, mask)
+    theta.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def simulated_wall_time(iters: int, master_s: float, s: int, *,
+                        key=None, tau=0.5e-3, mu=2000.0) -> float:
+    """Total time: per-step worker latency (wait for fastest w−s) + master."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    dm = DelayModel(tau=tau, mu=mu)
+    total = 0.0
+    for t in range(iters):
+        key, k = jax.random.split(key)
+        delays = dm.sample_delays(k, W)
+        _, cutoff = DelayModel.mask_and_time(delays, W - s)
+        total += float(cutoff) + master_s
+    return total
+
+
+def print_table(title: str, header: list[str], rows: list[list]):
+    print(f"\n### {title}")
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+              for i, h in enumerate(header)]
+    line = " | ".join(str(h).ljust(w) for h, w in zip(header, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))

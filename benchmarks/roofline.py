@@ -1,0 +1,82 @@
+"""§Roofline report: aggregates artifacts/dryrun/*.json into the per
+(arch x shape x mesh) table — compute / memory / collective terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio — and nominates hillclimb
+candidates (worst roofline fraction; most collective-bound; most
+paper-representative).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import print_table
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_reports() -> list[dict]:
+    if not ARTIFACTS.exists():
+        return []
+    out = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        try:
+            out.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return [r for r in out if r.get("ok")]
+
+
+def _write_markdown(reports):
+    """Emit artifacts/roofline.md (EXPERIMENTS.md §Dry-run table source)."""
+    lines = ["| arch | shape | mesh | compute_ms | memory_ms | collective_ms "
+             "| bound | useful | extrap |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"],
+                                            r.get("variant", ""), r["mesh"])):
+        shape = r["shape"] + (f"+{r['variant']}" if r.get("variant") else "")
+        lines.append(
+            f"| {r['arch']} | {shape} | {r['mesh']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {'y' if r.get('extrapolated') else ''} |")
+    (ARTIFACTS.parent / "roofline.md").write_text("\n".join(lines) + "\n")
+
+
+def main(quick: bool = False):
+    reports = [r for r in load_reports() if r["mesh"] != "2x2"]
+    if not reports:
+        print("\n### Roofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun --all first)")
+        return []
+    rows = []
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"],
+                                            r.get("variant", ""), r["mesh"])):
+        shape = r["shape"] + (f"+{r['variant']}" if r.get("variant") else "")
+        rows.append([
+            r["arch"], shape, r["mesh"],
+            f"{r['compute_s']*1e3:.2f}", f"{r['memory_s']*1e3:.2f}",
+            f"{r['collective_s']*1e3:.2f}", r["dominant"],
+            f"{r['useful_ratio']:.2f}",
+        ])
+    print_table("Roofline terms per (arch x shape x mesh) — ms/step, per chip",
+                ["arch", "shape", "mesh", "compute_ms", "memory_ms",
+                 "collective_ms", "bound", "useful"], rows)
+    _write_markdown(reports)
+
+    # hillclimb candidate nomination
+    single = [r for r in reports if r["mesh"] == "16x16"]
+    if single:
+        def frac(r):
+            tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+            return r["compute_s"] / tot if tot else 0.0
+        worst = min(single, key=frac)
+        coll = max(single, key=lambda r: r["collective_s"] /
+                   max(r["compute_s"] + r["memory_s"] + r["collective_s"], 1e-12))
+        print(f"\nhillclimb candidates: worst-compute-fraction = "
+              f"{worst['arch']} x {worst['shape']}; most-collective-bound = "
+              f"{coll['arch']} x {coll['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

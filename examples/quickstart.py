@@ -1,0 +1,45 @@
+"""Quickstart: LDPC moment-encoded gradient descent (paper Scheme 2) vs the
+uncoded baseline, on a 40-worker simulated cluster with stragglers.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FixedCountStragglers,
+    Scheme2Blocked,
+    make_regular_ldpc,
+    run_pgd,
+    second_moment,
+)
+from repro.core.schemes import Uncoded
+from repro.data import make_linear_problem
+
+
+def main():
+    # least squares: m = 2048 samples, k = 400 features, w = 40 workers,
+    # 10 stragglers per step — the paper's Fig. 1 setting.
+    prob = make_linear_problem(m=2048, k=400, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    code = make_regular_ldpc(20, l=3, r=6, seed=0)  # the paper's (40, 20) code
+    print(f"LDPC code: N={code.N} K={code.K} rate={code.rate} "
+          f"(l={code.l}, r={code.r})")
+
+    ldpc = Scheme2Blocked.build(code, mom, lr=prob.lr, decode_iters=12)
+    uncoded = Uncoded(prob.X, prob.y, w=40, lr=prob.lr)
+
+    model = FixedCountStragglers(10)  # wait for the fastest 30 of 40
+    for name, scheme in [("ldpc-moment", ldpc), ("uncoded", uncoded)]:
+        res = run_pgd(scheme, jnp.zeros(400), model, steps=60,
+                      theta_star=prob.theta_star, key=jax.random.PRNGKey(1))
+        errs = res.errors / jnp.linalg.norm(prob.theta_star)
+        marks = [0, 5, 10, 20, 40, 59]
+        curve = "  ".join(f"t={t}: {float(errs[t]):.2e}" for t in marks)
+        print(f"{name:12s} {curve}")
+    print("LDPC moment encoding converges in fewer steps under the same "
+          "straggler budget — the paper's headline result.")
+
+
+if __name__ == "__main__":
+    main()

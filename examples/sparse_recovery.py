@@ -1,0 +1,47 @@
+"""Sparse recovery (paper Figs. 2-3): iterative hard thresholding with
+LDPC moment-encoded gradients, in both the overdetermined and the
+underdetermined regime.
+
+  PYTHONPATH=src python examples/sparse_recovery.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BernoulliStragglers,
+    Scheme2Blocked,
+    make_regular_ldpc,
+    run_pgd,
+    second_moment,
+)
+from repro.data import make_sparse_problem
+from repro.optim import projections
+
+
+def recover(m, k, u, q0, steps=400):
+    prob = make_sparse_problem(m=m, k=k, u=u, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    code = make_regular_ldpc(20, l=3, r=6, seed=0)
+    scheme = Scheme2Blocked.build(code, mom, lr=prob.lr, decode_iters=12,
+                                  projection=projections.hard_threshold(u))
+    res = run_pgd(scheme, jnp.zeros(k), BernoulliStragglers(q0), steps,
+                  theta_star=prob.theta_star, key=jax.random.PRNGKey(0))
+    rel = float(res.errors[-1] / jnp.linalg.norm(prob.theta_star))
+    # support recovery
+    got = set(map(int, jnp.nonzero(res.theta)[0].tolist()))
+    true = set(map(int, jnp.nonzero(prob.theta_star)[0].tolist()))
+    return rel, len(got & true), u
+
+
+def main():
+    print("overdetermined (m=2048 > k=800), u = 80, Bernoulli(0.15) stragglers")
+    rel, hits, u = recover(2048, 800, 80, 0.15)
+    print(f"  rel err {rel:.2e}; support recovered {hits}/{u}")
+
+    print("underdetermined (m=1024 < k=2000), u = 100 — IHT regime")
+    rel, hits, u = recover(1024, 2000, 100, 0.15, steps=800)
+    print(f"  rel err {rel:.2e}; support recovered {hits}/{u}")
+
+
+if __name__ == "__main__":
+    main()

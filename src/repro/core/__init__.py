@@ -1,0 +1,23 @@
+"""The paper's primary contribution: LDPC moment-encoded robust gradient descent."""
+from repro.core.ldpc import LDPCCode, make_regular_ldpc, make_ldgm
+from repro.core.decoder import peel_decode, peel_decode_adaptive, DecodeResult
+from repro.core.density_evolution import qd_sequence, q_final, threshold
+from repro.core.encoding import Moments, second_moment, encode_moment, encode_moment_blocks
+from repro.core.coded_step import Scheme1, Scheme2, Scheme2Blocked, run_pgd, RunResult
+from repro.core.straggler import (
+    BernoulliStragglers,
+    FixedCountStragglers,
+    AdversarialStragglers,
+    DelayModel,
+)
+from repro.core.grad_agg import CodedAggregator, flatten_grads
+
+__all__ = [
+    "LDPCCode", "make_regular_ldpc", "make_ldgm",
+    "peel_decode", "peel_decode_adaptive", "DecodeResult",
+    "qd_sequence", "q_final", "threshold",
+    "Moments", "second_moment", "encode_moment", "encode_moment_blocks",
+    "Scheme1", "Scheme2", "Scheme2Blocked", "run_pgd", "RunResult",
+    "BernoulliStragglers", "FixedCountStragglers", "AdversarialStragglers", "DelayModel",
+    "CodedAggregator", "flatten_grads",
+]

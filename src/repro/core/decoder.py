@@ -1,0 +1,156 @@
+"""Iterative (peeling) erasure decoder for real-valued LDPC codes, in JAX.
+
+The classic peeling decoder resolves degree-1 checks one at a time.  On TPU
+we use the equivalent *flooding* schedule: in each round, every parity check
+with exactly one erased neighbour resolves that neighbour.  A flooding round
+is a dense ``H``-structured matvec (MXU-friendly) and the fixed number of
+rounds ``D`` is exactly the paper's decoding-iteration knob — the quality of
+the recovered gradient is monotone in ``D`` (Remark 3).
+
+The decoder is fully ``jit``-able (fixed ``D`` → ``lax.fori_loop``;
+adaptive → ``lax.while_loop`` with early exit) and batched over symbol
+payloads: ``values`` may be ``(N,)`` scalars (the paper's inner products) or
+``(N, V)`` vectors (coded gradient aggregation, where each symbol is a chunk
+of a partial gradient).
+
+Erased coordinates that remain unresolved are left as-is in ``values`` but
+flagged in the returned mask; callers zero-fill per the paper's Scheme 2
+(both ``ĉ`` and ``b̂`` are zeroed on the unresolved set so the estimate stays
+an unbiased scaled gradient — Lemma 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ldpc import LDPCCode
+
+__all__ = ["DecodeResult", "peel_round", "peel_decode", "peel_decode_adaptive", "erased_after"]
+
+
+class DecodeResult(NamedTuple):
+    values: jax.Array  # (N,) or (N, V); decoded where possible
+    erased: jax.Array  # (N,) bool; True where still unresolved
+    rounds_used: jax.Array  # () int32 (== D for fixed-D decode)
+
+
+def _expand(values: jax.Array) -> tuple[jax.Array, bool]:
+    if values.ndim == 1:
+        return values[:, None], True
+    return values, False
+
+
+def peel_round(
+    H: jax.Array, Hb: jax.Array, values: jax.Array, erased: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One flooding round. values: (N, V), erased: (N,) bool.
+
+    For every check row with exactly one erased neighbour ``j``:
+      ``c_j = -(sum_{j' known} H[i, j'] c_{j'}) / H[i, j]``.
+    Rows that resolve the same coordinate write consistent values (they are
+    parity checks of the same codeword), so duplicate scatters are benign.
+    """
+    N = values.shape[0]
+    e = erased.astype(H.dtype)  # (N,)
+    cnt = Hb.astype(H.dtype) @ e  # (p,) number of erased neighbours per check
+    solvable = cnt == 1.0  # (p,)
+    known = values * (1.0 - e)[:, None]  # zero out erased entries
+    row_sums = H @ known  # (p, V)
+    # The (unique) erased neighbour of each row; arbitrary for non-solvable rows.
+    pos = jnp.argmax(Hb & erased[None, :], axis=1)  # (p,)
+    coeff = jnp.take_along_axis(H, pos[:, None], axis=1)[:, 0]  # (p,)
+    new_val = -row_sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+    # Out-of-bounds scatter with mode="drop" discards non-solvable rows.
+    safe_pos = jnp.where(solvable, pos, N)
+    values = values.at[safe_pos].set(new_val, mode="drop")
+    erased = erased.at[safe_pos].set(False, mode="drop")
+    return values, erased
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _peel_fixed(H, Hb, values, erased, iters: int):
+    def body(_, carry):
+        v, e = carry
+        return peel_round(H, Hb, v, e)
+
+    values, erased = jax.lax.fori_loop(0, iters, body, (values, erased))
+    return values, erased
+
+
+def peel_decode(
+    code: LDPCCode | tuple[jax.Array, jax.Array],
+    values: jax.Array,
+    erased: jax.Array,
+    iters: int,
+) -> DecodeResult:
+    """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode)."""
+    H, Hb = _mats(code, values.dtype)
+    v, squeeze = _expand(jnp.asarray(values))
+    v, e = _peel_fixed(H, Hb, v, jnp.asarray(erased, bool), int(iters))
+    if squeeze:
+        v = v[:, 0]
+    return DecodeResult(v, e, jnp.int32(iters))
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def _peel_adaptive(H, Hb, values, erased, max_iters: int):
+    def cond(carry):
+        _, e, d, progressed = carry
+        return (d < max_iters) & progressed & e.any()
+
+    def body(carry):
+        v, e, d, _ = carry
+        v2, e2 = peel_round(H, Hb, v, e)
+        return v2, e2, d + 1, (e2 != e).any()
+
+    v, e, d, _ = jax.lax.while_loop(
+        cond, body, (values, erased, jnp.int32(0), jnp.bool_(True))
+    )
+    return v, e, d
+
+
+def peel_decode_adaptive(
+    code: LDPCCode | tuple[jax.Array, jax.Array],
+    values: jax.Array,
+    erased: jax.Array,
+    max_iters: int | None = None,
+) -> DecodeResult:
+    """Decode until fixpoint (no check resolves) or ``max_iters`` rounds.
+
+    This is the "decoding effort adapts to the number of stragglers" mode:
+    with few erasures the loop exits after 1-2 rounds.
+    """
+    H, Hb = _mats(code, values.dtype)
+    if max_iters is None:
+        max_iters = int(H.shape[1])
+    v, squeeze = _expand(jnp.asarray(values))
+    v, e, d = _peel_adaptive(H, Hb, v, jnp.asarray(erased, bool), int(max_iters))
+    if squeeze:
+        v = v[:, 0]
+    return DecodeResult(v, e, d)
+
+
+def erased_after(code: LDPCCode, erased: np.ndarray, iters: int) -> np.ndarray:
+    """Structure-only decode: which coordinates remain erased after D rounds.
+
+    Used by tests and by the density-evolution comparison; does not touch the
+    payload values.
+    """
+    dummy = jnp.zeros((code.N,), jnp.float32)
+    res = peel_decode(code, dummy, jnp.asarray(erased, bool), iters)
+    return np.asarray(res.erased)
+
+
+def _mats(code, dtype) -> tuple[jax.Array, jax.Array]:
+    if isinstance(code, LDPCCode):
+        H = jnp.asarray(code.H, dtype=dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
+        Hb = jnp.asarray(code.H_mask)
+    else:
+        H, Hb = code
+        H = jnp.asarray(H)
+        Hb = jnp.asarray(Hb, bool)
+    return H, Hb

@@ -1,0 +1,65 @@
+"""Moment encoding (the paper's preprocessing step).
+
+Given data ``X in R^{m x k}`` and labels ``y in R^m``, the gradient of the
+squared loss is ``∇L(θ) = M θ - b`` with ``M = X^T X`` and ``b = X^T y``.
+``M`` is computed ONCE and encoded:
+
+* Scheme 2 (``K == k``): ``C = G @ M in R^{N x k}``; worker ``j`` stores row
+  ``c_j`` and computes the scalar ``⟨c_j, θ⟩`` per step.  ``C θ`` is a
+  codeword whose first ``k`` coordinates are ``M θ`` (systematic G).
+
+* Scheme 1 (``K | k``): the rows of ``M`` are partitioned into ``k/K``
+  blocks, each encoded separately: ``C^(i) = G M_{P_i}``; worker ``j`` holds
+  row ``j`` of every block (α = k/K rows total) and returns α scalars.
+
+Encoding cost is one (N x K) @ (K x k) matmul — the Pallas ``block_matmul``
+kernel covers this at scale; here the jnp path is the reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ldpc import LDPCCode
+
+__all__ = ["Moments", "second_moment", "encode_moment", "encode_moment_blocks"]
+
+
+class Moments(NamedTuple):
+    M: jax.Array  # (k, k)
+    b: jax.Array  # (k,)
+
+
+def second_moment(X: jax.Array, y: jax.Array) -> Moments:
+    """M = X^T X, b = X^T y — the one-time preprocessing pass."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    return Moments(X.T @ X, X.T @ y)
+
+
+def encode_moment(code: LDPCCode, M: jax.Array) -> jax.Array:
+    """Scheme 2 encode: C = G @ M, shape (N, k); requires code.K == k."""
+    M = jnp.asarray(M)
+    if code.K != M.shape[0]:
+        raise ValueError(f"code dimension K={code.K} != k={M.shape[0]}; "
+                         "use encode_moment_blocks for K | k")
+    G = jnp.asarray(code.G, M.dtype)
+    return G @ M
+
+
+def encode_moment_blocks(code: LDPCCode, M: jax.Array) -> jax.Array:
+    """Scheme 1 encode: stack of per-block codeword matrices.
+
+    Returns ``C`` of shape (k/K, N, k): ``C[i] = G @ M[i*K:(i+1)*K]``.
+    Worker ``j`` is assigned ``C[:, j, :]`` (α = k/K rows).
+    """
+    M = jnp.asarray(M)
+    k = M.shape[0]
+    if k % code.K != 0:
+        raise ValueError(f"K={code.K} must divide k={k}")
+    nb = k // code.K
+    G = jnp.asarray(code.G, M.dtype)
+    blocks = M.reshape(nb, code.K, k)
+    return jnp.einsum("nk,bkj->bnj", G, blocks)

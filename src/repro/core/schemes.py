@@ -1,0 +1,240 @@
+"""Baseline straggler-mitigation schemes the paper compares against.
+
+All schemes share the interface of :class:`repro.core.coded_step.Scheme2`
+(``.w``, ``.gradient(theta, mask)``, ``.step(theta, mask)``) so the same
+``run_pgd`` driver and benchmark harness drive every scheme:
+
+* :class:`Uncoded` — w workers each hold m/w samples; the master sums the
+  partial gradients that arrive (stragglers' contributions are simply lost).
+* :class:`Replication` — r-fold replication of data partitions; a
+  partition's gradient is lost only if ALL its replicas straggle.
+* :class:`Karakus` — data encoding of Karakus et al. (NeurIPS'17): solve
+  ``min ||S(y - Xθ)||²`` with an encoding matrix S (subsampled Hadamard or
+  Gaussian); workers hold row-blocks of SX, Sy and return partial gradients
+  of the encoded objective.
+* :class:`MDSLee` — Lee et al.: two MDS-coded matvec rounds per step
+  (u = Xθ then X^T u); exact recovery via least squares on surviving rows;
+  exhibits the Vandermonde conditioning issue the paper criticizes.
+* :class:`GradientCodingFR` — Tandon et al. fractional-repetition gradient
+  coding: groups of (s+1) workers replicate a block set; exact for any s
+  stragglers; each worker ships a k-vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import projections
+
+__all__ = ["Uncoded", "Replication", "Karakus", "MDSLee", "GradientCodingFR",
+           "hadamard_matrix"]
+
+
+def _pad_blocks(X: jax.Array, y: jax.Array, parts: int) -> tuple[jax.Array, jax.Array]:
+    """Split samples into ``parts`` equal blocks, zero-padding the tail.
+
+    Zero rows contribute nothing to X^T(Xθ - y), so padding is exact (the
+    paper's 40-worker / m=2048 setup has uneven partitions too).
+    """
+    m = X.shape[0]
+    pad = (-m) % parts
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+    mp = m + pad
+    return X.reshape(parts, mp // parts, -1), y.reshape(parts, mp // parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Uncoded:
+    X: jax.Array  # (m, k)
+    y: jax.Array  # (m,)
+    w: int
+    lr: float
+    projection: Callable = projections.identity
+
+    def gradient(self, theta, straggler_mask):
+        Xb, yb = _pad_blocks(self.X, self.y, self.w)
+        resid = jnp.einsum("wmk,k->wm", Xb, theta) - yb  # (w, m/w)
+        partial = jnp.einsum("wmk,wm->wk", Xb, resid)  # (w, k)
+        alive = (~straggler_mask).astype(theta.dtype)
+        return jnp.einsum("wk,w->k", partial, alive), jnp.int32(straggler_mask.sum())
+
+    def step(self, theta, mask):
+        g, aux = self.gradient(theta, mask)
+        return self.projection(theta - self.lr * g), aux
+
+
+@dataclasses.dataclass(frozen=True)
+class Replication:
+    """r-fold replication: partition p is held by workers {p, p + w/r, ...}."""
+
+    X: jax.Array
+    y: jax.Array
+    w: int
+    lr: float
+    r: int = 2
+    projection: Callable = projections.identity
+
+    def __post_init__(self):
+        assert self.w % self.r == 0
+
+    def gradient(self, theta, straggler_mask):
+        parts = self.w // self.r
+        Xb, yb = _pad_blocks(self.X, self.y, parts)
+        resid = jnp.einsum("pmk,k->pm", Xb, theta) - yb
+        partial = jnp.einsum("pmk,pm->pk", Xb, resid)  # (parts, k)
+        # replica r of partition p is worker p + r*parts
+        alive = (~straggler_mask).reshape(self.r, parts)  # [replica, partition]
+        covered = alive.any(axis=0).astype(theta.dtype)  # partition recovered?
+        lost = parts - covered.sum()
+        return jnp.einsum("pk,p->k", partial, covered), lost.astype(jnp.int32)
+
+    def step(self, theta, mask):
+        g, aux = self.gradient(theta, mask)
+        return self.projection(theta - self.lr * g), aux
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix, n a power of two, entries ±1/sqrt scale-free."""
+    assert n & (n - 1) == 0 and n > 0, "n must be a power of two"
+    H = np.array([[1.0]])
+    while H.shape[0] < n:
+        H = np.block([[H, H], [H, -H]])
+    return H
+
+
+@dataclasses.dataclass(frozen=True)
+class Karakus:
+    """Data encoding of Karakus et al.: workers hold blocks of (SX, Sy)."""
+
+    SX: jax.Array  # (n_enc, k)
+    Sy: jax.Array  # (n_enc,)
+    w: int
+    lr: float
+    projection: Callable = projections.identity
+
+    @classmethod
+    def build(cls, X, y, w: int, *, lr: float, kind: str = "hadamard",
+              redundancy: float = 2.0, seed: int = 0, **kw) -> "Karakus":
+        m, _ = X.shape
+        n_enc = int(m * redundancy)
+        n_enc += (-n_enc) % w  # divisible by w
+        if kind == "hadamard":
+            npow = 1 << (max(n_enc, m) - 1).bit_length()
+            Hm = hadamard_matrix(npow)
+            rng = np.random.default_rng(seed)
+            rows = rng.choice(npow, size=n_enc, replace=False)
+            cols = rng.choice(npow, size=m, replace=False)
+            S = Hm[np.ix_(rows, cols)] / np.sqrt(n_enc)
+        elif kind == "gaussian":
+            rng = np.random.default_rng(seed)
+            S = rng.standard_normal((n_enc, m)) / np.sqrt(n_enc)
+        else:
+            raise ValueError(kind)
+        S = jnp.asarray(S, X.dtype)
+        return cls(SX=S @ X, Sy=S @ y, w=w, lr=lr, **kw)
+
+    def gradient(self, theta, straggler_mask):
+        Xb, yb = _pad_blocks(self.SX, self.Sy, self.w)
+        resid = jnp.einsum("wmk,k->wm", Xb, theta) - yb
+        partial = jnp.einsum("wmk,wm->wk", Xb, resid)
+        alive = (~straggler_mask).astype(theta.dtype)
+        return jnp.einsum("wk,w->k", partial, alive), jnp.int32(straggler_mask.sum())
+
+    def step(self, theta, mask):
+        g, aux = self.gradient(theta, mask)
+        return self.projection(theta - self.lr * g), aux
+
+
+def _vandermonde(n: int, k: int) -> np.ndarray:
+    # Chebyshev evaluation points in [-1, 1]: the best-conditioned choice for
+    # a real Vandermonde — and it STILL degrades exponentially in k, which is
+    # precisely the noise-stability criticism the paper levels at MDS-coded
+    # schemes (test_mds_lee_conditioning_degrades exhibits it).
+    pts = np.cos(np.pi * (2 * np.arange(n) + 1) / (2 * n))
+    return np.vander(pts, k, increasing=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class MDSLee:
+    """Lee et al. MDS-coded gradient descent: two coded matvecs per step."""
+
+    X: jax.Array
+    y: jax.Array
+    w: int
+    lr: float
+    K_code: int  # MDS code dimension (number of systematic row blocks)
+    projection: Callable = projections.identity
+
+    @classmethod
+    def build(cls, X, y, w: int, *, lr: float, K_code: int | None = None, **kw):
+        if K_code is None:
+            K_code = w // 2
+        return cls(X=X, y=y, w=w, lr=lr, K_code=K_code, **kw)
+
+    def _coded_matvec(self, A, v, mask):
+        """Recover A @ v from surviving MDS-coded row-block products."""
+        rows = A.shape[0]
+        Kc = self.K_code
+        pad = (-rows) % Kc
+        Ap = jnp.pad(A, ((0, pad), (0, 0)))
+        blocks = Ap.reshape(Kc, -1, A.shape[1])  # (Kc, rb, k)
+        G = jnp.asarray(_vandermonde(self.w, Kc), A.dtype)  # (w, Kc)
+        coded = jnp.einsum("wK,Krk->wrk", G, blocks)  # worker w holds coded block
+        prods = jnp.einsum("wrk,k->wr", coded, v)  # worker products
+        alive = (~mask).astype(A.dtype)
+        Gw = G * alive[:, None]
+        Pw = prods * alive[:, None]
+        sol, *_ = jnp.linalg.lstsq(Gw, Pw)  # (Kc, rb) block products
+        return sol.reshape(-1)[: rows]
+
+    def gradient(self, theta, straggler_mask):
+        # round 1: u = X theta; round 2: g = X^T u - X^T y
+        u = self._coded_matvec(self.X, theta, straggler_mask)
+        g = self._coded_matvec(self.X.T, u, straggler_mask) - self.X.T @ self.y
+        return g, jnp.int32(straggler_mask.sum())
+
+    def step(self, theta, mask):
+        g, aux = self.gradient(theta, mask)
+        return self.projection(theta - self.lr * g), aux
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientCodingFR:
+    """Tandon et al. gradient coding, fractional-repetition construction.
+
+    Workers are split into w/(s+1) groups; all members of group g hold the
+    same (s+1) data blocks and send the sum of their partial gradients.  Any
+    one survivor per group suffices; exact for up to s stragglers per group
+    (and for ANY s stragglers overall in the FR construction).
+    """
+
+    X: jax.Array
+    y: jax.Array
+    w: int
+    s: int
+    lr: float
+    projection: Callable = projections.identity
+
+    def __post_init__(self):
+        assert self.w % (self.s + 1) == 0
+
+    def gradient(self, theta, straggler_mask):
+        groups = self.w // (self.s + 1)
+        Xb, yb = _pad_blocks(self.X, self.y, groups)
+        resid = jnp.einsum("gmk,k->gm", Xb, theta) - yb
+        group_grad = jnp.einsum("gmk,gm->gk", Xb, resid)  # (groups, k)
+        # worker j belongs to group j % groups; group alive if any member alive
+        alive = (~straggler_mask).reshape(self.s + 1, groups).any(axis=0)
+        lost = groups - alive.sum()
+        g = jnp.einsum("gk,g->k", group_grad, alive.astype(theta.dtype))
+        return g, lost.astype(jnp.int32)
+
+    def step(self, theta, mask):
+        g, aux = self.gradient(theta, mask)
+        return self.projection(theta - self.lr * g), aux

@@ -1,0 +1,95 @@
+"""Straggler models.
+
+The paper analyzes Assumption 1 (each worker independently straggles with
+probability ``q0``) and experiments with a fixed straggler count ``s`` out of
+``w = 40`` workers.  On a synchronous TPU mesh there are no real stragglers,
+so the mask is *injected*: it is exactly the erasure-channel abstraction the
+analysis is built on.  Masks are produced with JAX PRNG so coded steps stay
+jit-able, and a shifted-exponential delay model supports wall-clock
+simulation for the benchmark harness (time of a step = the order statistic
+of worker delays at the wait-for threshold).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "StragglerModel",
+    "BernoulliStragglers",
+    "FixedCountStragglers",
+    "AdversarialStragglers",
+    "DelayModel",
+]
+
+
+class StragglerModel(Protocol):
+    def sample(self, key: jax.Array, w: int) -> jax.Array:
+        """Return a (w,) bool mask, True = straggler (erased)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliStragglers:
+    """Assumption 1: i.i.d. Bernoulli(q0) straggling per worker per step."""
+
+    q0: float
+
+    def sample(self, key: jax.Array, w: int) -> jax.Array:
+        return jax.random.bernoulli(key, self.q0, (w,))
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedCountStragglers:
+    """Exactly ``s`` uniformly-random stragglers per step (the paper's
+    experimental setting: wait for the fastest ``w - s`` workers)."""
+
+    s: int
+
+    def sample(self, key: jax.Array, w: int) -> jax.Array:
+        scores = jax.random.uniform(key, (w,))
+        thresh = jax.lax.top_k(scores, self.s)[0][-1] if self.s > 0 else jnp.inf
+        return scores >= thresh if self.s > 0 else jnp.zeros((w,), bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialStragglers:
+    """The same fixed set of workers straggles every step (worst case for
+    schemes without redundancy diversity)."""
+
+    indices: tuple[int, ...]
+
+    def sample(self, key: jax.Array, w: int) -> jax.Array:
+        del key
+        mask = jnp.zeros((w,), bool)
+        if self.indices:
+            mask = mask.at[jnp.asarray(self.indices)].set(True)
+        return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Shifted-exponential worker latency: d_j = tau + Exp(rate=mu).
+
+    ``sample_delays`` gives per-worker latencies; ``step_time(delays, wait)``
+    is the wall-clock cost of waiting for the fastest ``wait`` workers, and
+    the implied straggler mask is "not among the fastest ``wait``".
+    This reproduces the paper's wall-time comparisons without a real cluster.
+    """
+
+    tau: float = 1.0
+    mu: float = 1.0
+
+    def sample_delays(self, key: jax.Array, w: int) -> jax.Array:
+        return self.tau + jax.random.exponential(key, (w,)) / self.mu
+
+    @staticmethod
+    def mask_and_time(delays: jax.Array, wait_for: int) -> tuple[jax.Array, jax.Array]:
+        w = delays.shape[0]
+        order = jnp.argsort(delays)
+        cutoff = delays[order[wait_for - 1]]
+        mask = delays > cutoff  # stragglers: slower than the wait-for cutoff
+        return mask, cutoff

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    LinearProblem,
+    make_linear_problem,
+    make_sparse_problem,
+    token_batches,
+)
+
+__all__ = ["LinearProblem", "make_linear_problem", "make_sparse_problem", "token_batches"]

@@ -1,0 +1,39 @@
+"""Concrete batch construction per architecture family (smoke tests,
+examples, CPU training drivers).  The modality frontends are stubs per the
+assignment: audio frames / VLM patches arrive as embeddings at d_model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["make_batch", "make_decode_inputs"]
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    if cfg.family == "vlm":
+        n_text = seq - cfg.n_patches
+        toks = jax.random.randint(k1, (batch, n_text), 0, cfg.vocab)
+        return {
+            "tokens": toks,
+            "patches": jax.random.normal(k2, (batch, cfg.n_patches, cfg.d_model), dt),
+        }
+    if cfg.family == "audio":
+        toks = jax.random.randint(k1, (batch, seq), 0, cfg.vocab)
+        labels = jnp.roll(toks, -1, axis=1)
+        return {
+            "tokens": toks,
+            "labels": labels,
+            "frames": jax.random.normal(k2, (batch, cfg.enc_seq, cfg.d_model), dt),
+        }
+    toks = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_decode_inputs(cfg: ArchConfig, batch: int, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(1)
+    return {"token": jax.random.randint(key, (batch, 1), 0, cfg.vocab)}

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper (padding, grid setup, epilogue)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels are validated with interpret=True (the kernel
+body executes in Python); the BlockSpecs are written for TPU VMEM/MXU tiling
+(128-aligned matmul dims, f32 accumulation).
+
+Kernels:
+  ldpc_peel       — fused check-node pass of the peeling decoder (the paper's
+                    per-step master-side hot loop)
+  block_matmul    — tiled C = A @ B (moment encode G@M; worker matvec C@theta)
+  flash_attention — causal online-softmax attention (zoo serving/training)
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.block_matmul.ops import block_matmul, coded_matvec, encode_gm
+
+__all__ = ["block_matmul", "coded_matvec", "encode_gm"]

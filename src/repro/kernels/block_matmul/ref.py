@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tiled matmul."""
+import jax.numpy as jnp
+
+
+def block_matmul_ref(A, B):
+    return (A.astype(jnp.float32) @ B.astype(jnp.float32)).astype(jnp.float32)
+
+
+def coded_matvec_ref(C, theta):
+    return (C.astype(jnp.float32) @ theta.astype(jnp.float32)).astype(jnp.float32)

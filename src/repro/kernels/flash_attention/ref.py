@@ -1,0 +1,18 @@
+"""Naive softmax attention oracle for the flash kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q (BH, Sq, d), k/v (BH, Sk, d) -> (BH, Sq, d)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,btd->bqt", qf, kf) / jnp.sqrt(d)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqt,btd->bqd", p, vf).astype(q.dtype)

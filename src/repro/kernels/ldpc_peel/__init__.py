@@ -1,0 +1,3 @@
+from repro.kernels.ldpc_peel.ops import peel_round_pallas, peel_decode_pallas
+
+__all__ = ["peel_round_pallas", "peel_decode_pallas"]

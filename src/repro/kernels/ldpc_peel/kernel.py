@@ -1,0 +1,87 @@
+"""Fused check-node pass of the LDPC peeling decoder, as a Pallas TPU kernel.
+
+Per flooding round, for every parity check row i we need four quantities:
+
+  cnt_i   = #erased neighbours              (solvable iff == 1)
+  sums_i  = H[i,:] @ (values ⊙ known)       (the resolved value numerator)
+  pos_i   = index of the (unique) erased neighbour
+  coeff_i = H[i, pos_i]
+
+The reference decoder computes these with three separate dense ops over H
+(mask matvec, matmul, argmax) — three passes over the H block from HBM.  The
+kernel fuses them into ONE pass: each grid step loads a (BP x N) tile of H
+into VMEM once and produces all four outputs.
+
+TPU notes:
+  * matmul dims padded to multiples of 128 (MXU), f32 accumulation;
+  * pos is computed with broadcasted_iota + max (no 1-D iota on TPU);
+  * 1-D per-check outputs are materialized as (BP, 1) tiles (TPU wants >=2D);
+  * grid = (p/BP, V/BV): the H tile is re-used across the V (payload) axis,
+    value tiles stream through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["check_pass"]
+
+
+def _check_kernel(H_ref, vals_ref, erased_ref, sums_ref, cnt_ref, pos_ref,
+                  coeff_ref):
+    H = H_ref[...]  # (BP, N) f32
+    e = erased_ref[...][:, 0]  # (N,) f32: 1.0 = erased
+    Hb = (H != 0.0).astype(jnp.float32)
+
+    cnt = jax.lax.dot(Hb, e[:, None], precision=jax.lax.Precision.HIGHEST)  # (BP,1)
+    known = vals_ref[...] * (1.0 - e)[:, None]  # (N, BV)
+    sums = jax.lax.dot(H, known, precision=jax.lax.Precision.HIGHEST)  # (BP,BV)
+
+    # erased-neighbour index per row: max over iota masked to erased edges
+    idx = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)
+    mask = (Hb * e[None, :]) > 0.0
+    pos = jnp.max(jnp.where(mask, idx, -1), axis=1)  # (BP,)
+    onehot = (idx == pos[:, None]).astype(jnp.float32)
+    coeff = jnp.sum(H * onehot, axis=1)  # (BP,)
+
+    sums_ref[...] = sums
+    cnt_ref[...] = cnt
+    pos_ref[...] = pos[:, None]
+    coeff_ref[...] = coeff[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bv", "interpret"))
+def check_pass(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
+               bp: int = 128, bv: int = 128, interpret: bool = True):
+    """Inputs (already padded by ops.py): H (p, N) f32, values (N, V) f32,
+    erased_f (N, 1) f32.  p % bp == 0, V % bv == 0, N % 128 == 0.
+
+    Returns (sums (p, V), cnt (p, 1), pos (p, 1) i32, coeff (p, 1))."""
+    p, N = H.shape
+    V = values.shape[1]
+    grid = (p // bp, V // bv)
+    return pl.pallas_call(
+        _check_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, N), lambda i, j: (i, 0)),   # H tile: reused over j
+            pl.BlockSpec((N, bv), lambda i, j: (0, j)),   # payload tile
+            pl.BlockSpec((N, 1), lambda i, j: (0, 0)),    # erasure mask
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, V), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(H, values, erased_f)

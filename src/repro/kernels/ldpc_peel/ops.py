@@ -1,0 +1,60 @@
+"""jit'd wrapper: padding, kernel invocation, and the scatter epilogue that
+turns the fused check-node pass into a full peeling round / D-round decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ldpc_peel.kernel import check_pass
+
+__all__ = ["peel_round_pallas", "peel_decode_pallas"]
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
+def peel_round_pallas(H, values, erased, *, interpret: bool = True,
+                      bp: int = 128, bv: int = 128):
+    """One flooding round. H (p,N) f32; values (N,) or (N,V); erased (N,) bool.
+    Returns (values, erased) updated — same contract as decoder.peel_round."""
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N = vals.shape[0]
+    p = H.shape[0]
+
+    bp_eff = min(bp, max(8, p))
+    Hp = _pad_to(_pad_to(H.astype(jnp.float32), bp_eff, 0), 128, 1)
+    vp = _pad_to(_pad_to(vals.astype(jnp.float32), 128, 0), bv, 1)
+    ep = _pad_to(erased.astype(jnp.float32)[:, None], 128, 0)
+
+    sums, cnt, pos, coeff = check_pass(Hp, vp, ep, bp=bp_eff,
+                                       bv=min(bv, vp.shape[1]),
+                                       interpret=interpret)
+    sums, cnt, pos, coeff = (sums[:p, : vals.shape[1]], cnt[:p, 0],
+                             pos[:p, 0], coeff[:p, 0])
+
+    solvable = cnt == 1.0
+    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+    safe_pos = jnp.where(solvable, pos, N)
+    out_vals = vals.at[safe_pos].set(new_val.astype(vals.dtype), mode="drop")
+    out_erased = erased.at[safe_pos].set(False, mode="drop")
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_pallas(H, values, erased, iters: int, *, interpret: bool = True):
+    """Fixed-D decode via the Pallas round (python loop: D is small)."""
+    for _ in range(iters):
+        values, erased = peel_round_pallas(H, values, erased,
+                                           interpret=interpret)
+    return values, erased

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused check-node pass (and the full round)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["check_pass_ref", "peel_round_ref"]
+
+
+def check_pass_ref(H, values, erased_f):
+    """H (p,N) f32, values (N,V) f32, erased_f (N,1) f32 ->
+    (sums (p,V), cnt (p,1), pos (p,1) i32, coeff (p,1))."""
+    e = erased_f[:, 0]
+    Hb = (H != 0.0).astype(jnp.float32)
+    cnt = Hb @ e
+    known = values * (1.0 - e)[:, None]
+    sums = H @ known
+    idx = jnp.broadcast_to(jnp.arange(H.shape[1], dtype=jnp.int32), H.shape)
+    mask = (Hb * e[None, :]) > 0
+    pos = jnp.max(jnp.where(mask, idx, -1), axis=1)
+    coeff = jnp.sum(H * (idx == pos[:, None]), axis=1)
+    return sums, cnt[:, None], pos[:, None], coeff[:, None]
+
+
+def peel_round_ref(H, values, erased):
+    """One full flooding round (matches repro.core.decoder.peel_round)."""
+    from repro.core.decoder import peel_round
+    Hb = H != 0.0
+    return peel_round(H, Hb, values, erased)

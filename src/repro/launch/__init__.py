@@ -1,0 +1,2 @@
+# Launcher package. NOTE: dryrun.py must be executed as a script/module
+# (python -m repro.launch.dryrun) so its XLA_FLAGS lines run before jax init.

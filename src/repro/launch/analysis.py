@@ -1,0 +1,171 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e hardware constants (the TARGET; the runtime here is CPU):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+Terms (per step, per chip — the HLO after SPMD partitioning is the
+per-device program, so compiled.as_text() shapes are LOCAL):
+
+  compute_s    = HLO_FLOPs / (chips x peak)     [cost_analysis is global]
+  memory_s     = HLO_bytes / (chips x HBM_bw)
+  collective_s = collective_bytes_local / link_bw
+
+collective_bytes is not in cost_analysis: we parse the partitioned HLO and
+sum the result-shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute, with an x2 factor for all-reduce (ring
+AR = RS + AG).  This is a standard first-order traffic model, documented in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze_compiled",
+           "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # B/s per chip
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(?([a-z0-9]+)\[([\d,]*)\][^)]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum modeled collective traffic (bytes) per op kind from HLO text."""
+    out: dict[str, float] = {k: 0.0 for k in _FACTORS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start|-done)?\(", line)
+        if not m or not line.startswith("%") and " = " not in line:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # count the -start, not the -done
+        lhs = line.split(" = ", 1)
+        if len(lhs) != 2:
+            continue
+        shapes = _SHAPE_RE.findall(lhs[1].split("(", 1)[0])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += nbytes * _FACTORS[kind]
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _FACTORS)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float          # global, from cost_analysis
+    hlo_gbytes: float          # global bytes accessed
+    coll_gbytes_local: float   # per-chip collective traffic (modeled)
+    coll_counts: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_gflops: float        # 6*N_active*D (train) / 2*N_active*B (decode)
+    useful_ratio: float        # model_flops / hlo_flops
+    bytes_per_device: dict     # memory_analysis fields (may be {})
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s * 1e3:.3f} | {self.memory_s * 1e3:.3f} | "
+                f"{self.collective_s * 1e3:.3f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} |")
+
+
+def model_flops(cfg, model, params_shapes, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params), 2*N per decoded
+    token; prefill = 2*N*D forward-only."""
+    n_active = 0
+    import jax
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        keys = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        sz = int(np.prod(leaf.shape))
+        if "experts" in keys and cfg.moe:
+            sz = sz * cfg.moe.top_k // cfg.moe.n_experts
+        if "embed" in keys or "unembed" in keys:
+            continue  # lookups aren't matmul flops (unembed added below)
+        n_active += sz
+    unembed = cfg.vocab * cfg.d_model
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    per_tok = 2 * (n_active + unembed)
+    mult = 3.0 if kind == "train" else 1.0  # fwd + 2x bwd
+    return mult * per_tok * tokens
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                     chips: int, mflops: float) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0] if cost else {}
+    # NOTE (verified empirically): compiled.cost_analysis() reports the
+    # PER-DEVICE partitioned module — flops(8 devices) == flops(1)/8.
+    hlo_flops = float(cost.get("flops", 0.0))          # per chip
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))  # per chip
+    coll = collective_bytes(compiled.as_text())
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(ma, f, None)
+                if v is not None:
+                    mem[f] = int(v)
+    except Exception:
+        pass
+    compute_s = hlo_flops / HW["peak_flops"]
+    memory_s = hlo_bytes / HW["hbm_bw"]
+    collective_s = coll["total"] / HW["ici_bw"]
+    global_flops = hlo_flops * chips
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_gflops=hlo_flops / 1e9, hlo_gbytes=hlo_bytes / 1e9,
+        coll_gbytes_local=coll["total"] / 1e9,
+        coll_counts={k: v for k, v in coll.items() if k != "total"},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_gflops=mflops / 1e9,
+        useful_ratio=(mflops / global_flops) if global_flops else 0.0,
+        bytes_per_device=mem,
+    )

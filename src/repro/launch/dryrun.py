@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, with NO device allocation (ShapeDtypeStruct inputs).
+
+  single-pod mesh: (16, 16)    -> ("data", "model")       256 chips
+  multi-pod mesh : (2, 16, 16) -> ("pod", "data", "model") 512 chips
+
+Per combination this prints compiled.memory_analysis() (fits?) and
+cost_analysis() (FLOPs/bytes for the roofline), and writes a JSON artifact
+under artifacts/dryrun/ that benchmarks/roofline.py consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 10 x 4 single-pod
+  python -m repro.launch.dryrun --all --multi-pod     # + (2,16,16)
+  python -m repro.launch.dryrun --arch ... --reduced  # tiny mesh smoke (2,2)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config, list_configs
+from repro.launch.analysis import analyze_compiled, model_flops
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.specs import SHAPES
+from repro.launch.steps import build_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+ASSIGNED = [
+    "qwen3-1.7b", "codeqwen1.5-7b", "jamba-1.5-large-398b", "whisper-medium",
+    "minitron-8b", "deepseek-v2-236b", "kimi-k2-1t-a32b", "qwen2-1.5b",
+    "internvl2-2b", "rwkv6-3b",
+]
+
+
+def _lower_compile(cfg, mesh, shape, *, remat, attn_chunk, unroll, **step_kw):
+    t0 = time.time()
+    built = build_step(cfg, mesh, shape, remat=remat, attn_chunk=attn_chunk,
+                       unroll=unroll, **step_kw)
+    lowered = built.jitted.lower(*built.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return built, compiled, t_lower, time.time() - t0
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            reduced: bool = False, remat: bool = True, attn_chunk: int = 512,
+            verbose: bool = True, save: bool = True, variant: str = "",
+            **step_kw) -> dict:
+    import dataclasses
+    from repro.launch.analysis import collective_bytes
+
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+        mesh = make_mesh((2, 2), ("data", "model"))
+        mesh_desc = "2x2"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_desc = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+
+    kind = SHAPES[shape].kind
+    # Fully-unrolled 60-72-layer MoE/Mamba modules take XLA:CPU >1h to
+    # compile.  For those, do the PROOF compile with the scan form (fast,
+    # exact memory_analysis), and extrapolate per-layer flops/bytes/
+    # collectives from 1-block and 2-block unrolled compiles — all numbers
+    # still come from compiled artifacts (documented in EXPERIMENTS.md).
+    heavy = (cfg.moe is not None or cfg.mamba is not None) and not reduced \
+        and kind in ("train", "prefill")
+
+    if not heavy:
+        built, compiled, t_lower, t_compile = _lower_compile(
+            cfg, mesh, shape, remat=remat, attn_chunk=attn_chunk, unroll=True,
+            **step_kw)
+        extrapolated = False
+    else:
+        built, compiled, t_lower, t_compile = _lower_compile(
+            cfg, mesh, shape, remat=remat, attn_chunk=attn_chunk, unroll=False,
+            **step_kw)
+        extrapolated = True
+
+    mflops = model_flops(cfg, built.model, built.args[0], built.kind,
+                         SHAPES[shape].batch if not reduced else 2,
+                         SHAPES[shape].seq if not reduced else 32)
+    rep = analyze_compiled(compiled, arch=arch, shape=shape, mesh_desc=mesh_desc,
+                           chips=chips, mflops=mflops)
+
+    if heavy:
+        # sub-model compiles: prefix + 1 block vs prefix + 2 blocks, unrolled
+        pl_, per = built.model.prefix_len, built.model.period
+        nb = built.model.n_blocks
+        sub = {}
+        for blocks in (1, 2):
+            cfg_s = dataclasses.replace(cfg, n_layers=pl_ + blocks * per)
+            _, comp_s, _, _ = _lower_compile(cfg_s, mesh, shape, remat=remat,
+                                             attn_chunk=attn_chunk, unroll=True,
+                                             **step_kw)
+            cost = comp_s.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0] if cost else {}
+            sub[blocks] = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": collective_bytes(comp_s.as_text())["total"],
+            }
+        def extr(k):
+            return sub[1][k] + (nb - 1) * (sub[2][k] - sub[1][k])
+        from repro.launch.analysis import HW
+        rep.hlo_gflops = extr("flops") / 1e9
+        rep.hlo_gbytes = extr("bytes") / 1e9
+        rep.coll_gbytes_local = extr("coll") / 1e9
+        rep.compute_s = extr("flops") / HW["peak_flops"]
+        rep.memory_s = extr("bytes") / HW["hbm_bw"]
+        rep.collective_s = extr("coll") / HW["ici_bw"]
+        g = extr("flops") * chips
+        rep.useful_ratio = mflops / g if g else 0.0
+
+    if verbose:
+        print(f"== {arch} x {shape} on {mesh_desc} ({chips} chips) ==")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        try:
+            print("   memory_analysis:", compiled.memory_analysis())
+        except Exception as e:  # CPU backend may not implement it
+            print("   memory_analysis: <unavailable>", e)
+        print("   cost_analysis: flops=%.3e bytes=%.3e" %
+              (rep.hlo_gflops * 1e9, rep.hlo_gbytes * 1e9))
+        print(f"   collectives: {rep.coll_counts}")
+        print(f"   roofline: compute={rep.compute_s*1e3:.3f}ms "
+              f"memory={rep.memory_s*1e3:.3f}ms "
+              f"collective={rep.collective_s*1e3:.3f}ms -> {rep.dominant}-bound")
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_desc, "chips": chips,
+        "ok": True, "extrapolated": extrapolated, "variant": variant,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "hlo_gflops": rep.hlo_gflops, "hlo_gbytes": rep.hlo_gbytes,
+        "coll_gbytes_local": rep.coll_gbytes_local,
+        "coll_counts": rep.coll_counts,
+        "compute_s": rep.compute_s, "memory_s": rep.memory_s,
+        "collective_s": rep.collective_s, "dominant": rep.dominant,
+        "model_gflops": rep.model_gflops, "useful_ratio": rep.useful_ratio,
+        "bytes_per_device": rep.bytes_per_device,
+    }
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        tag = f"+{variant}" if variant else ""
+        out = ARTIFACTS / f"{arch}__{shape}{tag}__{mesh_desc.replace('x', '_')}.json"
+        out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list_configs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all assigned archs x shapes")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch subset (with --all semantics)")
+    ap.add_argument("--reduced", action="store_true", help="tiny mesh (2,2) smoke")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip pairs whose artifact JSON already exists")
+    ap.add_argument("--variant", default="", help="artifact tag for A/B runs")
+    ap.add_argument("--seq-shard-kv", action="store_true",
+                    help="§Perf H1: shard decode KV caches over seq dim when "
+                         "KV heads don't divide the model axis")
+    ap.add_argument("--moe-groups", type=int, default=None,
+                    help="§Perf H2: data-aligned MoE routing groups")
+    ap.add_argument("--mamba-chunk", type=int, default=None,
+                    help="chunked parallel-in-time SSM prefill (assoc scan)")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all or args.archs:
+        archs = args.archs.split(",") if args.archs else ASSIGNED
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for a in archs:
+            for s in shapes:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all/--archs")
+        pairs = [(args.arch, args.shape)]
+
+    if args.skip_existing:
+        mesh_desc = ("2x16x16" if args.multi_pod else "16x16").replace("x", "_")
+        def exists(a, s):
+            return (ARTIFACTS / f"{a}__{s}__{mesh_desc}.json").exists()
+        pairs = [(a, s) for a, s in pairs if not exists(a, s)]
+
+    failures = []
+    for a, s in pairs:
+        try:
+            run_one(a, s, multi_pod=args.multi_pod, reduced=args.reduced,
+                    remat=not args.no_remat, variant=args.variant,
+                    seq_shard_kv=args.seq_shard_kv,
+                    moe_groups=args.moe_groups,
+                    mamba_chunk=args.mamba_chunk)
+        except Exception as e:
+            failures.append((a, s, repr(e)))
+            print(f"!! FAILED {a} x {s}: {e}")
+            traceback.print_exc()
+            if not args.continue_on_error:
+                sys.exit(1)
+    if failures:
+        print(f"{len(failures)} failures: {failures}")
+        sys.exit(1)
+    print(f"dry-run OK: {len(pairs)} combination(s)")
+
+
+if __name__ == "__main__":
+    main()

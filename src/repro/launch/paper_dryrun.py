@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import (same contract as dryrun.py).
+"""Production-scale dry-run of the PAPER'S OWN workload: LDPC moment-encoded
+PGD (Scheme 2, blocked) on the (16,16) / (2,16,16) meshes.
+
+This is the "most representative of the paper's technique" §Perf pair: a
+k-feature linear model whose encoded moment C = G·M is sharded over the
+mesh (rows → "model", feature columns → "data"), worker products are the
+sharded matvec z = Cθ, and the master-side peeling decode runs as D
+unrolled flooding rounds over a sharded parity-check matrix.
+
+  python -m repro.launch.paper_dryrun --k 32768 --multi-pod
+  python -m repro.launch.paper_dryrun --k 32768 --dtype bf16 --decode-iters 4
+
+Writes artifacts/dryrun/paper-coded-gd__scheme2-k<k>-D<D>-<dtype>__<mesh>.json
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.analysis import HW, analyze_compiled
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
+                        mesh, *, decode: str = "dense", r: int = 6):
+    """Functional Scheme2Blocked step at scale, with explicit shardings.
+
+    Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
+    C_blocks (nb, N, k) sharded (None, model, data);
+    theta/b (k,) replicated.
+
+    decode variants (the §Perf hillclimb):
+      dense       — paper-faithful baseline: H and its boolean mask Hb are
+                    two dense (p, N) operands per round (3 passes over H).
+      dense-fused — Hb computed on the fly from H (one dense operand/round).
+      sparse      — H stored as (p, r) neighbour indices + edge values
+                    (the Tanner graph IS r-regular): decode rounds become
+                    gathers/scatters, no dense (p, N) traffic at all.
+    """
+    N, p, nb = 2 * K, K, k // K
+    dax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dspec = dax if len(dax) > 1 else dax[0]
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+
+    def epilogue(vals, erased, theta, b, lr):
+        unresolved = erased[:K]                           # same for all blocks
+        c_hat = jnp.where(unresolved[:, None], 0.0, vals[:K])  # (K, nb)
+        c_flat = c_hat.T.reshape(-1)                      # (k,)
+        b_hat = jnp.where(jnp.tile(unresolved, nb), 0.0, b)
+        return theta - lr * (c_flat - b_hat)
+
+    def worker_products(C_blocks, theta, mask):
+        z = jnp.einsum("bnk,k->nb", C_blocks, theta.astype(C_blocks.dtype))
+        return jnp.where(mask[:, None], 0.0, z.astype(jnp.float32))  # (N, nb)
+
+    c_spec = jax.ShapeDtypeStruct((nb, N, k), dtype)
+    common = (
+        jax.ShapeDtypeStruct((k,), jnp.float32),          # theta
+        jax.ShapeDtypeStruct((k,), jnp.float32),          # b
+        jax.ShapeDtypeStruct((N,), jnp.bool_),            # mask
+        jax.ShapeDtypeStruct((), jnp.float32),            # lr
+    )
+    common_sh = (sh(), sh(), sh(), sh())
+
+    if decode in ("dense", "dense-fused"):
+        def step(C_blocks, H, theta, b, mask, lr):
+            z = worker_products(C_blocks, theta, mask)
+            erased, vals = mask, z
+            Hb = (H != 0.0).astype(jnp.float32)
+            for _ in range(decode_iters):
+                e = erased.astype(jnp.float32)
+                cnt = Hb @ e
+                known = vals * (1.0 - e)[:, None]
+                sums = H @ known
+                idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), H.shape)
+                emask = (Hb > 0) & (e[None, :] > 0)
+                pos = jnp.max(jnp.where(emask, idx, -1), axis=1)
+                coeff = jnp.sum(H * (idx == pos[:, None]), axis=1)
+                solvable = cnt == 1.0
+                new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+                safe = jnp.where(solvable, pos, N)
+                vals = vals.at[safe].set(new_val, mode="drop")
+                erased = erased.at[safe].set(False, mode="drop")
+            return epilogue(vals, erased, theta, b, lr)
+
+        if decode == "dense":
+            # paper-faithful: Hb is a SECOND materialized dense operand
+            def step_dense(C_blocks, H, Hb_in, theta, b, mask, lr):
+                z = worker_products(C_blocks, theta, mask)
+                erased, vals = mask, z
+                for _ in range(decode_iters):
+                    e = erased.astype(jnp.float32)
+                    cnt = Hb_in @ e
+                    known = vals * (1.0 - e)[:, None]
+                    sums = H @ known
+                    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32),
+                                           H.shape)
+                    emask = (Hb_in > 0) & (e[None, :] > 0)
+                    pos = jnp.max(jnp.where(emask, idx, -1), axis=1)
+                    coeff = jnp.sum(H * (idx == pos[:, None]), axis=1)
+                    solvable = cnt == 1.0
+                    new_val = -sums / jnp.where(coeff == 0.0, 1.0,
+                                                coeff)[:, None]
+                    safe = jnp.where(solvable, pos, N)
+                    vals = vals.at[safe].set(new_val, mode="drop")
+                    erased = erased.at[safe].set(False, mode="drop")
+                return epilogue(vals, erased, theta, b, lr)
+
+            args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32),
+                    jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+            in_sh = (sh(None, "model", dspec), sh("model", None),
+                     sh("model", None), *common_sh)
+            return jax.jit(step_dense, in_shardings=in_sh,
+                           out_shardings=sh()), args
+
+        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+        in_sh = (sh(None, "model", dspec), sh("model", None), *common_sh)
+        return jax.jit(step, in_shardings=in_sh, out_shardings=sh()), args
+
+    # sparse decode: H as neighbour lists (p, r) — the Tanner graph is
+    # r-regular, so this is exact, and removes ALL dense (p, N) traffic.
+    def step_sparse(C_blocks, H_idx, H_val, theta, b, mask, lr):
+        z = worker_products(C_blocks, theta, mask)
+        erased, vals = mask, z
+        for _ in range(decode_iters):
+            e = erased.astype(jnp.float32)
+            neigh_e = e[H_idx]                            # (p, r)
+            cnt = neigh_e.sum(axis=1)
+            neigh_v = vals[H_idx]                         # (p, r, nb)
+            known = neigh_v * (1.0 - neigh_e)[:, :, None]
+            sums = jnp.einsum("prb,pr->pb", known, H_val)
+            slot = jnp.argmax(neigh_e, axis=1)            # (p,)
+            pos = jnp.take_along_axis(H_idx, slot[:, None], 1)[:, 0]
+            coeff = jnp.take_along_axis(H_val, slot[:, None], 1)[:, 0]
+            solvable = cnt == 1.0
+            new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+            safe = jnp.where(solvable, pos, N)
+            vals = vals.at[safe].set(new_val, mode="drop")
+            erased = erased.at[safe].set(False, mode="drop")
+        return epilogue(vals, erased, theta, b, lr)
+
+    args = (c_spec, jax.ShapeDtypeStruct((p, r), jnp.int32),
+            jax.ShapeDtypeStruct((p, r), jnp.float32), *common)
+    in_sh = (sh(None, "model", dspec), sh("model", None), sh("model", None),
+             *common_sh)
+    return jax.jit(step_sparse, in_shardings=in_sh, out_shardings=sh()), args
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--k", type=int, default=32768)
+    ap.add_argument("--K", type=int, default=16384)
+    ap.add_argument("--decode-iters", type=int, default=8)
+    ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--decode", default="dense",
+                    choices=["dense", "dense-fused", "sparse"])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_desc = "2x16x16" if args.multi_pod else "16x16"
+    dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
+
+    t0 = time.time()
+    jitted, specs = build_coded_gd_step(args.k, args.K, args.decode_iters,
+                                        dtype, mesh, decode=args.decode)
+    lowered = jitted.lower(*specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # MODEL_FLOPS for this workload: the useful work is z = Cθ (2·N·k·nb)
+    # plus the decode matmuls (2·p·N·nb per round).
+    N, p, nb = 2 * args.K, args.K, args.k // args.K
+    mflops = 2 * N * args.k * nb + args.decode_iters * 2 * p * N * nb
+    shape_tag = (f"scheme2-k{args.k}-D{args.decode_iters}-{args.dtype}"
+                 f"-{args.decode}")
+    rep = analyze_compiled(compiled, arch="paper-coded-gd", shape=shape_tag,
+                           mesh_desc=mesh_desc, chips=mesh.devices.size,
+                           mflops=float(mflops))
+    print(f"== paper-coded-gd {shape_tag} on {mesh_desc} ==")
+    print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    try:
+        print("   memory_analysis:", compiled.memory_analysis())
+    except Exception as e:
+        print("   memory_analysis unavailable:", e)
+    print("   cost_analysis: flops=%.3e bytes=%.3e (per chip)" %
+          (rep.hlo_gflops * 1e9, rep.hlo_gbytes * 1e9))
+    print(f"   collectives: {rep.coll_counts}")
+    print(f"   roofline: compute={rep.compute_s*1e3:.3f}ms "
+          f"memory={rep.memory_s*1e3:.3f}ms "
+          f"collective={rep.collective_s*1e3:.3f}ms -> {rep.dominant}-bound")
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    out = {
+        "arch": "paper-coded-gd", "shape": shape_tag, "mesh": mesh_desc,
+        "chips": mesh.devices.size, "ok": True, "extrapolated": False,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "hlo_gflops": rep.hlo_gflops, "hlo_gbytes": rep.hlo_gbytes,
+        "coll_gbytes_local": rep.coll_gbytes_local,
+        "coll_counts": rep.coll_counts, "compute_s": rep.compute_s,
+        "memory_s": rep.memory_s, "collective_s": rep.collective_s,
+        "dominant": rep.dominant, "model_gflops": rep.model_gflops,
+        "useful_ratio": rep.useful_ratio,
+    }
+    (ARTIFACTS / f"paper-coded-gd__{shape_tag}__{mesh_desc.replace('x','_')}.json"
+     ).write_text(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Input specs for the dry-run: ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, NO device allocation).
+
+The four assigned input shapes:
+
+  train_4k     seq=4,096    global_batch=256   (training)
+  prefill_32k  seq=32,768   global_batch=32    (inference prefill)
+  decode_32k   seq=32,768   global_batch=128   (inference decode: ONE new
+                                                token + a seq-length cache)
+  long_500k    seq=524,288  global_batch=1     (long-context decode)
+
+long_500k policy (DESIGN.md §shape/skip): attention mixers use the
+sliding-window ring cache (cfg.sliding_window); MLA keeps the FULL latent
+cache (576 B/token makes 500k affordable — that's the MLA selling point);
+Mamba/RWKV state is O(1) regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Model
+
+
+class ShapeSpec(NamedTuple):
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+    window: int | None = None  # decode-time attention window override
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode", 32_768, 128),
+    "long_500k": ShapeSpec("decode", 524_288, 1, window=None),  # window from cfg
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs mirroring repro.data.batches.make_batch."""
+    dt = cfg.jdtype
+    if cfg.family == "vlm":
+        return {
+            "tokens": _sds((batch, seq - cfg.n_patches), jnp.int32),
+            "patches": _sds((batch, cfg.n_patches, cfg.d_model), dt),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": _sds((batch, seq), jnp.int32),
+            "labels": _sds((batch, seq), jnp.int32),
+            "frames": _sds((batch, cfg.enc_seq, cfg.d_model), dt),
+        }
+    return {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+
+
+def decode_window(cfg: ArchConfig, shape: ShapeSpec) -> int | None:
+    """Attention-cache window for a decode shape (None = full seq)."""
+    if shape.seq <= 40_000:
+        return None  # decode_32k: full cache
+    if cfg.mla is not None:
+        return None  # MLA latent cache is cheap at 500k — keep it full
+    # long_500k with plain attention mixers: sliding window variant
+    return cfg.sliding_window
+
+
+def cache_specs(cfg: ArchConfig, model: Model, batch: int, seq: int,
+                window: int | None) -> Any:
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, seq, window=window))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, model: Model | None = None):
+    """Returns (kind, kwargs_dict_of_ShapeDtypeStructs) for the step fn."""
+    shape = SHAPES[shape_name]
+    model = model or Model(cfg)
+    if shape.kind == "train":
+        return shape.kind, {"batch": batch_specs(cfg, shape.batch, shape.seq)}
+    if shape.kind == "prefill":
+        cache = cache_specs(cfg, model, shape.batch, shape.seq, None)
+        return shape.kind, {"batch": batch_specs(cfg, shape.batch, shape.seq),
+                            "cache": cache}
+    # decode: one token at position seq-1, with a seq-length (or windowed) cache
+    window = decode_window(cfg, shape)
+    cache = cache_specs(cfg, model, shape.batch, shape.seq, window)
+    return shape.kind, {
+        "token": _sds((shape.batch, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache,
+    }

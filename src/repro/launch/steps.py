@@ -1,0 +1,104 @@
+"""Step builders: jitted train / prefill / decode steps with explicit
+in/out shardings for a given (arch, shape, mesh).
+
+Used by the dry-run (lower+compile on placeholder meshes), by the real
+trainer (single-device or small meshes on CPU), and by the roofline
+analyzer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.specs import input_specs
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import (
+    batch_sharding,
+    cache_sharding,
+    make_param_shardings,
+    opt_state_shardings,
+)
+
+__all__ = ["BuiltStep", "build_step"]
+
+
+class BuiltStep(NamedTuple):
+    kind: str
+    jitted: Any          # jax.jit'd step fn
+    args: tuple          # ShapeDtypeStruct args matching the jitted signature
+    model: Model
+    param_shardings: Any
+
+
+def build_step(cfg: ArchConfig, mesh, shape_name: str, *,
+               opt: AdamWConfig | None = None, remat: bool = True,
+               attn_chunk: int = 512, donate: bool = True,
+               unroll: bool = True, seq_shard_kv: bool = False,
+               moe_groups: int | None = None,
+               mamba_chunk: int | None = None) -> BuiltStep:
+    # unroll=True (dry-run default): python-loop layer blocks so
+    # cost_analysis counts all layers (XLA counts while bodies once).
+    if moe_groups is None:
+        moe_groups = 1
+    model = Model(cfg, remat=remat, attn_chunk=attn_chunk, unroll=unroll,
+                  moe_groups=moe_groups, mamba_chunk=mamba_chunk)
+    kind, specs = input_specs(cfg, shape_name, model)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = make_param_shardings(cfg, params_shapes, mesh)
+    rep = NamedSharding(mesh, P())
+    opt = opt or AdamWConfig()
+
+    if kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        o_sh = opt_state_shardings(cfg, params_shapes, mesh)
+        b_sh = batch_sharding(cfg, mesh, specs["batch"])
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            new_params, new_opt = adamw_update(params, grads, opt_state, opt)
+            return new_params, new_opt, loss
+
+        jitted = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, rep),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return BuiltStep(kind, jitted, (params_shapes, opt_shapes, specs["batch"]),
+                         model, p_sh)
+
+    if kind == "prefill":
+        b_sh = batch_sharding(cfg, mesh, specs["batch"])
+        c_sh = cache_sharding(cfg, mesh, specs["cache"])
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(rep, c_sh),
+            donate_argnums=(2,) if donate else (),
+        )
+        return BuiltStep(kind, jitted, (params_shapes, specs["batch"],
+                                        specs["cache"]), model, p_sh)
+
+    # decode
+    c_sh = cache_sharding(cfg, mesh, specs["cache"], seq_shard_kv=seq_shard_kv)
+    t_sh = batch_sharding(cfg, mesh, {"token": specs["token"]})["token"]
+
+    def decode_step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(p_sh, t_sh, rep, c_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(3,) if donate else (),
+    )
+    return BuiltStep(kind, jitted, (params_shapes, specs["token"], specs["pos"],
+                                    specs["cache"]), model, p_sh)

@@ -1,0 +1,116 @@
+"""Layer primitives shared by the architecture zoo (pure-functional JAX).
+
+Parameters are plain nested dicts of jnp arrays; every module is a pair of
+``init_*`` / ``apply`` functions so stacks can be built with ``lax.scan``
+over stacked parameter pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
+    "mlp_init", "mlp", "rope_freqs", "apply_rope", "embed_init",
+    "cross_entropy_loss",
+]
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    p = {"w": _he(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d: int, d_ff: int, *, act: str = "swiglu", bias: bool = False,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "gate": dense_init(k1, d, d_ff, bias=bias, dtype=dtype),
+            "up": dense_init(k2, d, d_ff, bias=bias, dtype=dtype),
+            "down": dense_init(k3, d_ff, d, bias=bias, dtype=dtype),
+        }
+    return {  # gelu / relu2 two-matrix MLP
+        "up": dense_init(k1, d, d_ff, bias=bias, dtype=dtype),
+        "down": dense_init(k2, d_ff, d, bias=bias, dtype=dtype),
+    }
+
+
+def mlp(p, x, *, act: str = "swiglu"):
+    if act == "swiglu":
+        return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+    if act == "gelu":
+        return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+    if act == "relu2":
+        return dense(p["down"], jnp.square(jax.nn.relu(dense(p["up"], x))))
+    raise ValueError(act)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross entropy. logits (B,S,V), labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,314 @@
+"""State-space / linear-attention mixers: Mamba (selective SSM, as used by
+Jamba) and RWKV-6 "Finch" (data-dependent decay).
+
+Both provide a full-sequence form (``*_forward``, lax.scan over time) for
+training/prefill and an O(1)-state single-token form (``*_decode``) — the
+reason these families run the ``long_500k`` shape natively while pure
+attention archs need a sliding window.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+__all__ = [
+    "init_mamba", "mamba_forward", "mamba_decode",
+    "init_rwkv_time", "rwkv_time_forward", "rwkv_time_decode",
+    "init_rwkv_channel", "rwkv_channel_forward", "rwkv_channel_decode",
+]
+
+
+# --------------------------------------------------------------- Mamba -----
+
+
+def init_mamba(key, d: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dtype=jnp.float32):
+    d_in = expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_in, d_conv)) / math.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                          (d_in, d_state)).astype(jnp.float32)),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, d, dtype=dtype),
+    }
+
+
+def _mamba_inner(p, xz, conv_fn, d_state: int):
+    """Shared post-conv selective-scan math. xz: (B, S, 2*d_in)."""
+    d_in = xz.shape[-1] // 2
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = conv_fn(x)  # causal depthwise conv + silu
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = dense(p["x_proj"], x)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt))  # (B,S,d_in)
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+    return x, z, dt, Bc, Cc, A
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, d_in), w: (d_in, K) -> causal depthwise conv along S."""
+    K = w.shape[1]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - i, i), (0, 0)))[:, : x.shape[1], :]
+            for i in range(K)]
+    # pads[i] holds x shifted so that tap i sees x_{t-(K-1-i)}
+    stacked = jnp.stack(pads, axis=-1)  # (B,S,d_in,K)
+    return jax.nn.silu(jnp.einsum("bsdk,dk->bsd", stacked, w) + b)
+
+
+def mamba_forward(p, x, *, d_state: int = 16, return_state: bool = False,
+                  chunk: int | None = None):
+    """x: (B, S, d) -> (B, S, d). lax.scan over time (sequential reference).
+
+    chunk=L: chunked parallel-in-time form — an associative scan inside each
+    length-L chunk, sequential carry between chunks.  Cuts the HLO while-loop
+    trip count from S to S/L (32768 -> 128 for prefill_32k), which is the
+    difference between a latency-serial and a throughput-parallel SSM prefill
+    on TPU, at the cost of materializing (B, L, d_in, N) chunk temporaries.
+    Numerics match the sequential scan to fp tolerance (associativity).
+
+    return_state=True additionally returns {"h", "conv"} for decode handoff.
+    """
+    if chunk is not None and x.shape[1] % chunk == 0 and x.shape[1] > chunk:
+        return _mamba_forward_chunked(p, x, d_state=d_state,
+                                      return_state=return_state, chunk=chunk)
+    B, S, d = x.shape
+    xz = dense(p["in_proj"], x)  # (B,S,2*d_in)
+    u_pre = jnp.split(xz, 2, axis=-1)[0]  # pre-conv mixer input (for conv state)
+    xc, z, dt, Bc, Cc, A = _mamba_inner(
+        p, xz, lambda u: _causal_depthwise_conv(u, p["conv_w"], p["conv_b"]), d_state)
+    d_in = xc.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,d_in), (B,d_in), (B,N), (B,N)
+        dA = jnp.exp(dtt[..., None] * A)  # (B,d_in,N)
+        h = dA * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((B, d_in, d_state), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,d_in)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        K = p["conv_w"].shape[1]
+        pad = jnp.pad(u_pre, ((0, 0), (K - 1, 0), (0, 0)))
+        conv_state = pad[:, -(K - 1):, :] if K > 1 else jnp.zeros(
+            (B, 0, d_in), x.dtype)
+        return out, {"h": h_final, "conv": conv_state.astype(x.dtype)}
+    return out
+
+
+def _mamba_forward_chunked(p, x, *, d_state: int, return_state: bool,
+                           chunk: int):
+    """Chunked associative-scan selective SSM (see mamba_forward docstring).
+
+    Recurrence h_t = a_t ⊙ h_{t-1} + b_t is associative under
+    (a, b) ∘ (a', b') = (a·a', a'·b + b'); within a chunk we run
+    jax.lax.associative_scan over time, and the inter-chunk carry applies
+    each chunk's cumulative (a, b) to the incoming state.
+    """
+    B, S, d = x.shape
+    xz = dense(p["in_proj"], x)
+    u_pre = jnp.split(xz, 2, axis=-1)[0]
+    xc, z, dt, Bc, Cc, A = _mamba_inner(
+        p, xz, lambda u: _causal_depthwise_conv(u, p["conv_w"], p["conv_b"]),
+        d_state)
+    d_in = xc.shape[-1]
+    nc = S // chunk
+
+    # per-step coefficients: a (B,S,d_in,N), b (B,S,d_in,N)
+    def chunk_step(h0, inp):
+        xcc, dtc, Bcc, Ccc = inp  # (B, L, ...)
+        a = jnp.exp(dtc[..., None] * A)  # (B,L,d_in,N)
+        b = (dtc * xcc)[..., None] * Bcc[:, :, None, :]
+
+        def comb(lhs, rhs):
+            (a1, b1), (a2, b2) = lhs, rhs
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h = a_cum * h0[:, None] + b_cum  # (B,L,d_in,N)
+        y = jnp.einsum("bldn,bln->bld", h, Ccc)
+        return h[:, -1], y
+
+    to_c = lambda t: jnp.moveaxis(
+        t.astype(jnp.float32).reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+    h0 = jnp.zeros((B, d_in, d_state), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0, (to_c(xc), to_c(dt), to_c(Bc), to_c(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        K = p["conv_w"].shape[1]
+        pad = jnp.pad(u_pre, ((0, 0), (K - 1, 0), (0, 0)))
+        conv_state = pad[:, -(K - 1):, :] if K > 1 else jnp.zeros(
+            (B, 0, d_in), x.dtype)
+        return out, {"h": h_final, "conv": conv_state.astype(x.dtype)}
+    return out
+
+
+def mamba_decode(p, x, state, *, d_state: int = 16):
+    """Single token. x: (B, 1, d); state: {"h": (B,d_in,N), "conv": (B,K-1,d_in)}.
+    Returns (y, new_state)."""
+    B = x.shape[0]
+    xz = dense(p["in_proj"], x)  # (B,1,2*d_in)
+    d_in = xz.shape[-1] // 2
+    xt, z = jnp.split(xz[:, 0], 2, axis=-1)  # (B,d_in)
+    K = p["conv_w"].shape[1]
+    conv_buf = jnp.concatenate([state["conv"], xt[:, None, :]], axis=1)  # (B,K,d_in)
+    xt = jax.nn.silu(jnp.einsum("bkd,dk->bd", conv_buf, p["conv_w"]) + p["conv_b"])
+    new_conv = conv_buf[:, 1:, :]
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = dense(p["x_proj"], xt)
+    dtc, Bt, Ct = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dtc = jax.nn.softplus(dense(p["dt_proj"], dtc))
+    A = -jnp.exp(p["A_log"])
+    h = state["h"]
+    dA = jnp.exp(dtc[..., None].astype(jnp.float32) * A)
+    h = dA * h + (dtc * xt)[..., None].astype(jnp.float32) * Bt[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Ct.astype(jnp.float32)).astype(x.dtype)
+    y = y + xt * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)[:, None, :]
+    return out, {"h": h, "conv": new_conv}
+
+
+# --------------------------------------------------------------- RWKV-6 ----
+
+
+def init_rwkv_time(key, d: int, *, head_dim: int = 64, decay_lora: int = 64,
+                   dtype=jnp.float32):
+    H = d // head_dim
+    ks = jax.random.split(key, 10)
+    mus = {n: jnp.full((d,), 0.5, dtype) for n in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w")}
+    return {
+        **mus,
+        "wr": dense_init(ks[0], d, d, dtype=dtype),
+        "wk": dense_init(ks[1], d, d, dtype=dtype),
+        "wv": dense_init(ks[2], d, d, dtype=dtype),
+        "wg": dense_init(ks[3], d, d, dtype=dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # exp(-exp(-6)) ~ slow decay
+        "w_A": (jax.random.normal(ks[4], (d, decay_lora)) * 0.01).astype(dtype),
+        "w_B": (jax.random.normal(ks[5], (decay_lora, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[6], (H, head_dim)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), dtype),
+        "ln_bias": jnp.zeros((d,), dtype),
+        "wo": dense_init(ks[7], d, d, dtype=dtype),
+    }
+
+
+def _rwkv_groupnorm(x, scale, bias, H, Dh, eps=1e-5):
+    """Per-head layernorm. x: (B, H, Dh)."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*x.shape[:-2], H * Dh)
+    return y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+def _rwkv_proj(p, x, xs, H, Dh):
+    """Token-shift lerps + projections. x, xs: (..., d)."""
+    def lerp(mu):
+        return x + (xs - x) * p[mu]
+
+    shp = x.shape[:-1]
+    r = dense(p["wr"], lerp("mu_r")).reshape(*shp, H, Dh)
+    k = dense(p["wk"], lerp("mu_k")).reshape(*shp, H, Dh)
+    v = dense(p["wv"], lerp("mu_v")).reshape(*shp, H, Dh)
+    g = jax.nn.silu(dense(p["wg"], lerp("mu_g")))
+    xw = lerp("mu_w")
+    w = jnp.exp(-jnp.exp(p["w0"] + (jnp.tanh(xw @ p["w_A"]) @ p["w_B"]).astype(jnp.float32)))
+    w = w.reshape(*shp, H, Dh)  # data-dependent decay in (0, 1)
+    return r, k, v, g, w
+
+
+def rwkv_time_forward(p, x, *, head_dim: int = 64, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d). State S_h: (B, H, Dh, Dh)."""
+    B, S, d = x.shape
+    H, Dh = d // head_dim, head_dim
+    xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # token shift
+    r, k, v, g, w = _rwkv_proj(p, x, xs, H, Dh)
+    u = p["u"]
+
+    def step(Sh, inp):
+        rt, kt, vt, wt = inp  # (B,H,Dh) each
+        a = kt[..., :, None] * vt[..., None, :]  # (B,H,Dh,Dh) outer k^T v
+        o = jnp.einsum("bhi,bhij->bhj", rt, Sh + u[None, :, :, None] * a)
+        Sh = wt[..., :, None] * Sh + a
+        return Sh, o
+
+    to_t = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    S0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    S_final, os = jax.lax.scan(step, S0, (to_t(r), to_t(k), to_t(v), to_t(w)))
+    o = jnp.moveaxis(os, 0, 1)  # (B,S,H,Dh)
+    o = _rwkv_groupnorm(o, p["ln_scale"], p["ln_bias"], H, Dh)
+    out = dense(p["wo"], (o * g.astype(jnp.float32)).astype(x.dtype))
+    if return_state:
+        return out, {"S": S_final, "last_x": x[:, -1]}
+    return out
+
+
+def rwkv_time_decode(p, x, state, *, head_dim: int = 64):
+    """x: (B,1,d); state: {"S": (B,H,Dh,Dh), "last_x": (B,d)}."""
+    B, _, d = x.shape
+    H, Dh = d // head_dim, head_dim
+    xt = x[:, 0]
+    r, k, v, g, w = _rwkv_proj(p, xt, state["last_x"], H, Dh)
+    u = p["u"]
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    a = kf[..., :, None] * vf[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", rf, state["S"] + u[None, :, :, None] * a)
+    Snew = wf[..., :, None] * state["S"] + a
+    o = _rwkv_groupnorm(o, p["ln_scale"], p["ln_bias"], H, Dh)
+    y = dense(p["wo"], (o * g.astype(jnp.float32)).astype(x.dtype))[:, None, :]
+    return y, {"S": Snew, "last_x": xt}
+
+
+def init_rwkv_channel(key, d: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "wv": dense_init(ks[1], d_ff, d, dtype=dtype),
+        "wr": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _rwkv_channel(p, x, xs):
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    v = dense(p["wv"], jnp.square(jax.nn.relu(dense(p["wk"], xk))))
+    return jax.nn.sigmoid(dense(p["wr"], xr)) * v
+
+
+def rwkv_channel_forward(p, x):
+    xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return _rwkv_channel(p, x, xs)
+
+
+def rwkv_channel_decode(p, x, state):
+    """state: {"last_x": (B, d)}."""
+    xt = x[:, 0]
+    y = _rwkv_channel(p, xt, state["last_x"])
+    return y[:, None, :], {"last_x": xt}

@@ -1,0 +1,4 @@
+from repro.optim import projections, schedules
+from repro.optim.adamw import adamw_init, adamw_update, AdamWState, AdamWConfig
+
+__all__ = ["projections", "schedules", "adamw_init", "adamw_update", "AdamWState", "AdamWConfig"]

@@ -1,0 +1,66 @@
+"""Projection operators P_Θ for constrained PGD (all non-expansive).
+
+The paper's experiments use: identity (plain least squares) and the
+hard-thresholding operator H_u (IHT for sparse recovery, Garg & Khandekar).
+L2-ball and L1-ball projections cover the R(θ) <= R formulation of (1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["identity", "l2_ball", "l1_ball", "hard_threshold", "box"]
+
+
+def identity(theta: jax.Array) -> jax.Array:
+    return theta
+
+
+def l2_ball(radius: float):
+    def proj(theta: jax.Array) -> jax.Array:
+        nrm = jnp.linalg.norm(theta)
+        scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+        return theta * scale
+
+    return proj
+
+
+def l1_ball(radius: float):
+    """Euclidean projection onto {||x||_1 <= r} (Duchi et al. 2008)."""
+
+    def proj(theta: jax.Array) -> jax.Array:
+        a = jnp.abs(theta)
+
+        def project():
+            u = jnp.sort(a)[::-1]
+            css = jnp.cumsum(u)
+            ks = jnp.arange(1, a.size + 1)
+            cond = u * ks > (css - radius)
+            rho = jnp.max(jnp.where(cond, ks, 0))
+            lam = (jnp.take(css, rho - 1) - radius) / rho
+            return jnp.sign(theta) * jnp.maximum(a - lam, 0.0)
+
+        return jax.lax.cond(jnp.sum(a) <= radius, lambda: theta, project)
+
+    return proj
+
+
+def hard_threshold(u: int):
+    """H_u: keep the u largest-magnitude coordinates, zero the rest (IHT)."""
+
+    def proj(theta: jax.Array) -> jax.Array:
+        if u >= theta.size:
+            return theta
+        # top_k indices break ties deterministically -> exactly <= u nonzeros
+        _, idx = jax.lax.top_k(jnp.abs(theta), u)
+        mask = jnp.zeros(theta.shape, bool).at[idx].set(True)
+        return jnp.where(mask, theta, 0.0)
+
+    return proj
+
+
+def box(lo: float, hi: float):
+    def proj(theta: jax.Array) -> jax.Array:
+        return jnp.clip(theta, lo, hi)
+
+    return proj

@@ -1,0 +1,30 @@
+"""Learning-rate schedules.
+
+The paper's Theorem 1 uses the classic fixed η = R/(B√T); transformer
+training uses warmup+cosine.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "theorem1_lr", "warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def theorem1_lr(R: float, B: float, T: int):
+    """η = R / (B √T) — the setting of Theorem 1."""
+    return constant(R / (B * (T ** 0.5)))
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

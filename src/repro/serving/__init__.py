@@ -1,0 +1,4 @@
+from repro.serving import kvcache
+from repro.serving.batcher import Request, WaveBatcher
+
+__all__ = ["kvcache", "Request", "WaveBatcher"]

@@ -1,0 +1,105 @@
+"""Batched-request serving scheduler (wave/static batching with early exit).
+
+A fixed pool of B decode slots advances in LOCKSTEP — one jit'd
+``decode_step`` per tick for the whole batch, all slots at the same
+position (so the shared KV cache layout stays exact).  Requests are
+admitted in waves: up to B requests start together at position 0; slots
+whose prompt is shorter switch to generation while others are still
+feeding their prompt; slots that finish early idle (their writes land in
+cache rows that their own queries never attend beyond, and their outputs
+are ignored) until the wave drains, then the next wave is admitted.
+
+This is the honest CPU-scale "serve a small model with batched requests"
+driver (examples/serve_batched.py).  Per-slot *asynchronous* positions
+(true continuous batching) would need a per-batch position vector through
+the cache layer — noted as future work in DESIGN.md; the production-scale
+single-wave decode path is exactly what decode_32k / long_500k lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # avoid circular import (models -> serving.kvcache -> here)
+    from repro.models import Model
+
+__all__ = ["Request", "WaveBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    eos: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class WaveBatcher:
+    def __init__(self, model: "Model", params, *, n_slots: int = 4,
+                 max_len: int = 128):
+        cfg = model.cfg
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError("batcher demo covers text decoders")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._step = jax.jit(model.decode_step)
+        self.ticks = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @property
+    def active(self) -> bool:
+        return bool(self.queue)
+
+    def _run_wave(self, wave: list[Request], max_ticks: int):
+        cache = self.model.init_cache(self.n_slots, self.max_len)
+        pending = [list(r.prompt) for r in wave]
+        live = [True] * len(wave)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for s, r in enumerate(wave):
+            tokens[s, 0] = pending[s].pop(0)
+        pos = 0
+        while any(live) and pos < self.max_len - 1 and self.ticks < max_ticks:
+            self.ticks += 1
+            logits, cache = self._step(self.params, jnp.asarray(tokens),
+                                       jnp.int32(pos), cache)
+            ln = np.asarray(logits[:, 0], np.float32)
+            pos += 1
+            for s, r in enumerate(wave):
+                if not live[s]:
+                    continue
+                if pending[s]:               # still feeding the prompt
+                    tokens[s, 0] = pending[s].pop(0)
+                    continue
+                nxt = int(np.argmax(ln[s]))  # greedy generation
+                r.out.append(nxt)
+                tokens[s, 0] = nxt
+                if (r.eos is not None and nxt == r.eos) or \
+                        len(r.out) >= r.max_new:
+                    r.done = True
+                    live[s] = False
+                    self.finished.append(r)
+        for s, r in enumerate(wave):  # drain anything cut off by max_len
+            if live[s]:
+                r.done = True
+                self.finished.append(r)
+
+    def run(self, max_ticks: int = 100_000) -> list[Request]:
+        while self.queue and self.ticks < max_ticks:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.n_slots, len(self.queue)))]
+            self._run_wave(wave, max_ticks)
+        return self.finished

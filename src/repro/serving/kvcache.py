@@ -1,0 +1,84 @@
+"""KV-cache / recurrent-state construction for every mixer family.
+
+Cache layouts:
+  attn : {"k","v": (B, W, KV, Dh), "pos": (W,) int32, "length": ()}
+         W = full max_len, or the sliding window for long-context decode
+         (ring buffer; "pos" tracks the absolute position held in each slot,
+          initialized to INT32_MAX = invalid).
+  mla  : {"c_kv": (B, W, kv_lora), "k_rope": (B, W, qk_rope), "pos", "length"}
+         — the absorbed-latent cache (576 dims/token for DeepSeek-V2).
+  mamba: {"h": (B, d_in, d_state) f32, "conv": (B, d_conv-1, d_in)}
+  rwkv : {"S": (B, H, Dh, Dh) f32, "last_x": (B, d)} (+ "cm_last_x" for the
+         channel mix) — O(1) in sequence length.
+  cross: {"k","v": (B, T_enc, KV, Dh), "pos": (T_enc,)} — read-only after
+         prefill (whisper encoder keys/values).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+
+__all__ = ["INVALID_POS", "make_attn_cache", "make_mla_cache", "make_mamba_state",
+           "make_rwkv_state", "make_cross_cache", "make_layer_cache"]
+
+
+def make_attn_cache(B: int, window: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((B, window, n_kv, head_dim), dtype),
+        "v": jnp.zeros((B, window, n_kv, head_dim), dtype),
+        "pos": jnp.full((window,), INVALID_POS, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_mla_cache(B: int, window: int, kv_lora: int, qk_rope: int, dtype):
+    return {
+        "c_kv": jnp.zeros((B, window, kv_lora), dtype),
+        "k_rope": jnp.zeros((B, window, qk_rope), dtype),
+        "pos": jnp.full((window,), INVALID_POS, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_mamba_state(B: int, d_model: int, spec, dtype):
+    d_in = spec.expand * d_model
+    return {
+        "h": jnp.zeros((B, d_in, spec.d_state), jnp.float32),
+        "conv": jnp.zeros((B, spec.d_conv - 1, d_in), dtype),
+    }
+
+
+def make_rwkv_state(B: int, d_model: int, spec, dtype):
+    H = d_model // spec.head_dim
+    return {
+        "S": jnp.zeros((B, H, spec.head_dim, spec.head_dim), jnp.float32),
+        "last_x": jnp.zeros((B, d_model), dtype),
+        "cm_last_x": jnp.zeros((B, d_model), dtype),
+    }
+
+
+def make_cross_cache(B: int, enc_seq: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((B, enc_seq, n_kv, head_dim), dtype),
+        "v": jnp.zeros((B, enc_seq, n_kv, head_dim), dtype),
+        "pos": jnp.arange(enc_seq, dtype=jnp.int32),
+        "length": jnp.asarray(enc_seq, jnp.int32),
+    }
+
+
+def make_layer_cache(cfg, mixer: str, B: int, window: int, dtype):
+    """Cache for one layer of the given mixer type (see ArchConfig)."""
+    if mixer == "attn":
+        c = make_attn_cache(B, window, cfg.n_kv_heads, cfg.hd, dtype)
+        if cfg.enc_layers:  # enc-dec: self cache + (placeholder) cross cache
+            c = {"self": c,
+                 "cross": make_cross_cache(B, cfg.enc_seq, cfg.n_kv_heads, cfg.hd, dtype)}
+        return c
+    if mixer == "mla":
+        return make_mla_cache(B, window, cfg.mla.kv_lora, cfg.mla.qk_rope, dtype)
+    if mixer == "mamba":
+        return make_mamba_state(B, cfg.d_model, cfg.mamba, dtype)
+    if mixer == "rwkv":
+        return make_rwkv_state(B, cfg.d_model, cfg.rwkv, dtype)
+    raise ValueError(mixer)

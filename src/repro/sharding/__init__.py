@@ -1,0 +1,10 @@
+from repro.sharding.specs import (
+    batch_sharding,
+    cache_sharding,
+    dp_axes,
+    make_param_shardings,
+    opt_state_shardings,
+)
+
+__all__ = ["make_param_shardings", "opt_state_shardings", "batch_sharding",
+           "cache_sharding", "dp_axes"]

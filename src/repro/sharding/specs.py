@@ -1,0 +1,242 @@
+"""Sharding rules for the architecture zoo on the production meshes.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod — "pod" joins the data-parallel group.
+
+Policy (Megatron-style tensor parallel, divisibility-aware):
+  * embeddings / unembedding: vocab over "model" (when divisible);
+  * attention: q-heads over "model" when n_heads divides, K/V heads likewise
+    (GQA configs with few KV heads replicate K/V weights — cheap);
+  * FFN: column-parallel in, row-parallel out (all assigned d_ff divide 16);
+  * MoE: experts over "model" (all assigned expert counts divide 16),
+    capacity dim of the dispatched activations over the data axes;
+  * Mamba: channel-parallel (d_inner over "model");
+  * RWKV: time-mix replicated (40 heads don't divide 16 — noted in
+    DESIGN.md), channel-mix FFN sharded;
+  * norms / biases / small LoRA-ish factors: replicated;
+  * batch dims of activations/caches over ("pod","data").
+
+Optimizer state additionally shards the largest replicated dimension over
+the data axes (ZeRO-2-ish) — see ``opt_state_shardings``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["dp_axes", "make_param_shardings", "opt_state_shardings",
+           "batch_sharding", "cache_sharding"]
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+
+
+def _spec_for(cfg: ArchConfig, names: list[str], shape: tuple[int, ...],
+              msize: int, dax=("data",), dsize: int = 1) -> P:
+    """PartitionSpec for one parameter, from its tree path + shape."""
+    name = names[-1] if names else ""
+    nd = len(shape)
+
+    def model_if(dim_size):
+        return "model" if _div(dim_size, msize) else None
+
+    # --- embeddings ---------------------------------------------------
+    if "embed" in names and name == "table" or ("unembed" in names and name == "w"):
+        return P(model_if(shape[0]), *([None] * (nd - 1)))
+    # --- MoE ----------------------------------------------------------
+    if "experts" in names:
+        # (E, d, f) stacked expert weights: experts over "model"; the expert
+        # weight tensors dominate the 236B/398B/1T configs, so they are
+        # additionally FSDP-sharded over the data axes on dim 1 (XLA inserts
+        # the all-gather — ZeRO-3 semantics for exactly these tensors).
+        dspec = (dax if len(dax) > 1 else dax[0]) if (nd >= 2 and _div(shape[1], dsize)) else None
+        return P(model_if(shape[0]), dspec, *([None] * (nd - 2)))
+    if "router" in names:
+        return P(*([None] * nd))
+    # --- attention ----------------------------------------------------
+    if "mixer" in names or "cross" in names:
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        if name == "w" and names[-2] == "wq":
+            return P(None, "model") if _div(H, msize) else P(None, None)
+        if name == "w" and names[-2] in ("wk", "wv"):
+            return P(None, "model") if _div(KV, msize) else P(None, None)
+        if name == "w" and names[-2] == "wo":
+            return P("model", None) if _div(H, msize) else P(None, None)
+        if name == "b" and names[-2] == "wq":
+            return P("model") if _div(H, msize) else P(None)
+        if name == "b" and names[-2] in ("wk", "wv"):
+            return P("model") if _div(KV, msize) else P(None)
+        # MLA pieces
+        if names[-2] == "w_uq" and name == "w":
+            return P(None, "model") if _div(H, msize) else P(None, None)
+        if name in ("w_uk", "w_uv"):  # (kv_lora, H, dh)
+            return P(None, "model", None) if _div(H, msize) else P(None, None, None)
+        # mamba pieces (channel parallel over d_inner)
+        if names[-2] == "in_proj" and name == "w":
+            d_in = shape[1] // 2
+            return P(None, "model") if _div(d_in, msize) else P(None, None)
+        if name in ("conv_w", "conv_b", "A_log", "D"):
+            return P("model", *([None] * (nd - 1))) if _div(shape[0], msize) \
+                else P(*([None] * nd))
+        if names[-2] == "x_proj" and name == "w":
+            return P("model", None) if _div(shape[0], msize) else P(None, None)
+        if names[-2] == "out_proj" and name == "w":
+            return P("model", None) if _div(shape[0], msize) else P(None, None)
+        # rwkv time-mix: replicated (head count does not divide the mesh)
+        return P(*([None] * nd))
+    # --- dense FFN / rwkv channel mix / shared experts ------------------
+    if "ffn" in names or "shared" in names:
+        if name == "w" and names[-2] in ("gate", "up", "wk"):
+            return P(None, "model") if _div(shape[1], msize) else P(None, None)
+        if name == "w" and names[-2] in ("down", "wv"):
+            return P("model", None) if _div(shape[0], msize) else P(None, None)
+        if name == "b" and names[-2] in ("gate", "up", "wk"):
+            return P("model") if _div(shape[0], msize) else P(None)
+        return P(*([None] * nd))
+    # --- everything else (norms, scalars) -------------------------------
+    return P(*([None] * nd))
+
+
+def _stacked(names: list[str]) -> bool:
+    """Leaves under 'blocks'/'encoder' carry a leading n_blocks scan dim."""
+    return "blocks" in names or ("encoder" in names and "layers" in names)
+
+
+def make_param_shardings(cfg: ArchConfig, params_shapes: Any, mesh: Mesh):
+    msize = _msize(mesh)
+    dax = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        if _stacked(names):
+            spec = _spec_for(cfg, names, shape[1:], msize, dax, dsize)
+            spec = P(None, *spec)
+        else:
+            spec = _spec_for(cfg, names, shape, msize, dax, dsize)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def opt_state_shardings(cfg: ArchConfig, params_shapes: Any, mesh: Mesh):
+    """AdamW (m, v) shardings: param spec + shard the largest still-
+    replicated dim over the data axes (ZeRO-2-ish), when divisible."""
+    msize = _msize(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    dax = dp_axes(mesh)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = _stacked(names)
+        core = shape[1:] if stacked else shape
+        spec = _spec_for(cfg, names, core, msize, dax, dsize)
+        parts = list(spec)
+        parts += [None] * (len(core) - len(parts))
+        # skip if the data axes are already used (e.g. FSDP expert weights)
+        used = set()
+        for pt in parts:
+            for a in (pt if isinstance(pt, tuple) else (pt,)):
+                used.add(a)
+        if not any(a in used for a in dax):
+            best, best_dim = -1, -1
+            for i, (pt, sz) in enumerate(zip(parts, core)):
+                if pt is None and sz % dsize == 0 and sz > best:
+                    best, best_dim = sz, i
+            if best_dim >= 0:
+                parts[best_dim] = dax if len(dax) > 1 else dax[0]
+        if stacked:
+            parts = [None] + parts
+        return NamedSharding(mesh, P(*parts))
+
+    m = jax.tree_util.tree_map_with_path(assign, params_shapes)
+    import jax.numpy as jnp
+    from repro.optim.adamw import AdamWState
+    step_sh = NamedSharding(mesh, P())
+    return AdamWState(step=step_sh, m=m, v=jax.tree.map(lambda s: s, m))
+
+
+def batch_sharding(cfg: ArchConfig, mesh: Mesh, batch_tree: Any):
+    """Shard every batch leaf's leading (batch) dim over the data axes."""
+    dax = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+    spec_b = dax if len(dax) > 1 else dax[0]
+
+    def assign(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsize != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(spec_b, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(assign, batch_tree)
+
+
+def cache_sharding(cfg: ArchConfig, mesh: Mesh, cache_tree: Any,
+                   *, seq_shard_kv: bool = False):
+    """Caches: batch dim over data axes (when divisible), KV-head / head dims
+    over "model" when divisible.  Leading n_blocks stacking dim is skipped.
+
+    seq_shard_kv=True (§Perf H1): when the KV-head dim does NOT divide the
+    model axis (GQA kv=8 on a 16-wide axis), shard the cache SEQUENCE dim
+    over "model" instead of replicating — decode attention then runs on
+    per-chip KV shards with small softmax-stat collectives instead of
+    all-gathering the whole cache every step.
+
+    Layouts handled (possibly with a leading blocks dim):
+      k/v        (B, W, KV, Dh)
+      c_kv       (B, W, kv_lora) / k_rope (B, W, rope)
+      h          (B, d_in, N)   conv (B, K-1, d_in)
+      S          (B, H, Dh, Dh) last_x (B, d)
+      pos        (W,)           length ()
+    """
+    dax = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+    msize = _msize(mesh)
+    spec_b = dax if len(dax) > 1 else dax[0]
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        stacked = "blocks" in names  # leading n_blocks dim from the scan stack
+        lead = (None,) if stacked else ()
+        core = shape[1:] if stacked else shape
+        nd = len(core)
+        if name in ("pos", "length") or nd == 0:
+            return NamedSharding(mesh, P())
+        bspec = spec_b if core[0] % dsize == 0 else None
+        rest = [None] * (nd - 1)
+        if name in ("k", "v") and nd == 4:
+            if core[2] % msize == 0:
+                rest[1] = "model"
+            elif seq_shard_kv and core[1] % msize == 0:
+                rest[0] = "model"  # shard the sequence/window dim instead
+        if name in ("c_kv", "k_rope") and nd == 3 and seq_shard_kv \
+                and core[1] % msize == 0:
+            rest[0] = "model"  # MLA latent cache: shard sequence dim
+        if name == "h" and nd == 3 and core[1] % msize == 0:
+            rest[0] = "model"
+        if name == "conv" and nd == 3 and core[2] % msize == 0:
+            rest[1] = "model"
+        return NamedSharding(mesh, P(*lead, bspec, *rest))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)

@@ -1,0 +1,70 @@
+"""Checkpointing: flat-key npz for tensors + msgpack sidecar for metadata.
+
+No external checkpoint deps; works for any pytree of arrays (params,
+optimizer state).  Keys are '/'-joined tree paths, so checkpoints are
+stable across process restarts and inspectable with numpy alone.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, params: Any,
+                    opt_state: Any = None, metadata: dict | None = None) -> Path:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    path = d / f"ckpt_{step:08d}"
+    np.savez(str(path) + ".params.npz", **_flatten(params))
+    if opt_state is not None:
+        np.savez(str(path) + ".opt.npz", **_flatten(opt_state))
+    meta = {"step": step, **(metadata or {})}
+    (d / f"ckpt_{step:08d}.meta.json").write_text(json.dumps(meta, indent=2))
+    (d / "latest").write_text(str(step))
+    return path
+
+
+def _restore_into(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                       for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(directory: str | Path, template_params: Any,
+                    template_opt: Any = None, step: int | None = None):
+    """Returns (step, params[, opt_state]) restored into the given templates."""
+    d = Path(directory)
+    if step is None:
+        step = int((d / "latest").read_text())
+    base = d / f"ckpt_{step:08d}"
+    params = _restore_into(template_params,
+                           dict(np.load(str(base) + ".params.npz")))
+    if template_opt is not None:
+        opt = _restore_into(template_opt, dict(np.load(str(base) + ".opt.npz")))
+        return step, params, opt
+    return step, params

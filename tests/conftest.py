@@ -1,0 +1,14 @@
+# NOTE: deliberately does NOT set XLA_FLAGS / host device count — smoke tests
+# and benchmarks must see the single real CPU device.  Only launch/dryrun.py
+# (run as its own process) forces 512 placeholder devices.
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,147 @@
+"""Scheme 1 / Scheme 2 behaviour: exactness, unbiasedness (Lemma 1),
+convergence (Theorem 1-style), and the sparse-recovery (IHT) path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdversarialStragglers,
+    BernoulliStragglers,
+    FixedCountStragglers,
+    Scheme1,
+    Scheme2,
+    make_regular_ldpc,
+    run_pgd,
+    second_moment,
+)
+from repro.core.density_evolution import q_final
+from repro.data import make_linear_problem, make_sparse_problem
+from repro.optim import projections
+
+CODE = make_regular_ldpc(200, l=3, r=6, seed=0)  # (400, 200): w=400 workers
+PROB = make_linear_problem(m=512, k=200, seed=1)
+MOM = second_moment(PROB.X, PROB.y)
+
+
+def exact_grad(theta):
+    return MOM.M @ theta - MOM.b
+
+
+def test_scheme2_no_stragglers_equals_gd():
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=5)
+    theta = jnp.zeros(200)
+    mask = jnp.zeros(CODE.N, bool)
+    g, unresolved = s2.gradient(theta, mask)
+    np.testing.assert_allclose(g, exact_grad(theta), rtol=1e-3, atol=1e-4)
+    assert int(unresolved) == 0
+
+
+def test_scheme2_few_stragglers_exact_after_decode():
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=CODE.N)
+    theta = jax.random.normal(jax.random.PRNGKey(0), (200,))
+    mask = jnp.zeros(CODE.N, bool).at[jnp.array([1, 50, 399])].set(True)
+    g, unresolved = s2.gradient(theta, mask)
+    if int(unresolved) == 0:  # peeling recovered everything
+        np.testing.assert_allclose(g, exact_grad(theta), rtol=1e-3, atol=1e-3)
+    else:  # decoded-or-zero coordinates only
+        gt = np.asarray(exact_grad(theta))
+        got = np.asarray(g)
+        nz = got != 0.0
+        np.testing.assert_allclose(got[nz], gt[nz], rtol=1e-3, atol=1e-3)
+
+
+def test_lemma1_unbiasedness():
+    """E[ĝ] = (1 - q_D) ∇L(θ) under Bernoulli stragglers (Monte Carlo)."""
+    q0, D = 0.1, 4
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=D)
+    theta = jax.random.normal(jax.random.PRNGKey(1), (200,)) * 0.3
+    model = BernoulliStragglers(q0)
+
+    @jax.jit
+    def one(key):
+        g, u = s2.gradient(theta, model.sample(key, CODE.N))
+        return g
+
+    keys = jax.random.split(jax.random.PRNGKey(2), 600)
+    gs = jax.vmap(one)(keys)
+    mean_g = np.asarray(gs.mean(axis=0))
+    gt = np.asarray(exact_grad(theta))
+    # Per-coordinate scale: should match (1 - q_emp) for the FINITE code,
+    # which density evolution approximates. Fit the scale and check both.
+    scale = float(mean_g @ gt / (gt @ gt))
+    qD = q_final(q0, CODE.l, CODE.r, D)
+    assert 0 < scale <= 1.001
+    assert abs(scale - (1 - qD)) < 0.08, (scale, 1 - qD)
+    # direction match
+    cos = mean_g @ gt / (np.linalg.norm(mean_g) * np.linalg.norm(gt))
+    assert cos > 0.99
+
+
+@pytest.mark.parametrize("q0", [0.0, 0.1, 0.2])
+def test_scheme2_converges_bernoulli(q0):
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=8)
+    res = run_pgd(s2, jnp.zeros(200), BernoulliStragglers(q0), steps=400,
+                  theta_star=PROB.theta_star, key=jax.random.PRNGKey(3))
+    assert float(res.errors[-1]) < 0.05 * float(jnp.linalg.norm(PROB.theta_star))
+    # averaged iterate also converges (Theorem 1 is stated for it)
+    assert float(jnp.linalg.norm(res.theta_bar - PROB.theta_star)) < \
+        0.2 * float(jnp.linalg.norm(PROB.theta_star))
+
+
+def test_scheme2_fixed_count_converges():
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=8)
+    res = run_pgd(s2, jnp.zeros(200), FixedCountStragglers(40), steps=400,
+                  theta_star=PROB.theta_star, key=jax.random.PRNGKey(4))
+    assert float(res.errors[-1]) < 0.05 * float(jnp.linalg.norm(PROB.theta_star))
+
+
+def test_scheme2_more_decode_iters_not_worse():
+    """More decoding iterations -> fewer unresolved coords on average."""
+    model = BernoulliStragglers(0.2)
+    means = []
+    for D in [1, 3, 8]:
+        s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=D)
+        res = run_pgd(s2, jnp.zeros(200), model, steps=60,
+                      theta_star=PROB.theta_star, key=jax.random.PRNGKey(5))
+        means.append(float(res.unresolved.mean()))
+    assert means[0] >= means[1] >= means[2]
+
+
+def test_scheme1_exact_small_straggler_count():
+    code = make_regular_ldpc(50, l=3, r=6, seed=1)  # (100, 50), k=200 -> 4 blocks
+    s1 = Scheme1.build(code, MOM, lr=PROB.lr)
+    theta = jax.random.normal(jax.random.PRNGKey(6), (200,))
+    mask = jnp.zeros(code.N, bool).at[jnp.array([0, 7])].set(True)
+    g, _ = s1.gradient(theta, mask)
+    np.testing.assert_allclose(g, exact_grad(theta), rtol=1e-2, atol=5e-3)
+
+
+def test_scheme1_converges_under_stragglers():
+    code = make_regular_ldpc(50, l=3, r=6, seed=1)
+    s1 = Scheme1.build(code, MOM, lr=PROB.lr)
+    res = run_pgd(s1, jnp.zeros(200), FixedCountStragglers(5), steps=200,
+                  theta_star=PROB.theta_star, key=jax.random.PRNGKey(7))
+    assert float(res.errors[-1]) < 0.05 * float(jnp.linalg.norm(PROB.theta_star))
+
+
+def test_sparse_recovery_iht_with_scheme2():
+    """Paper Fig. 2-style: IHT with LDPC moment-encoded gradients."""
+    u = 20
+    prob = make_sparse_problem(m=512, k=200, u=u, seed=2)
+    mom = second_moment(prob.X, prob.y)
+    s2 = Scheme2.build(CODE, mom, lr=prob.lr, decode_iters=8,
+                       projection=projections.hard_threshold(u))
+    res = run_pgd(s2, jnp.zeros(200), FixedCountStragglers(40), steps=500,
+                  theta_star=prob.theta_star, key=jax.random.PRNGKey(8))
+    assert float(res.errors[-1]) < 0.05 * float(jnp.linalg.norm(prob.theta_star))
+
+
+def test_adversarial_stragglers_still_converge():
+    """Fixed stragglers each step: unrecovered coords are always the same, so
+    plain Scheme 2 stalls on those coordinates — unless decode recovers them.
+    With only 3 adversarial stragglers the peeler recovers everything."""
+    s2 = Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=CODE.N)
+    res = run_pgd(s2, jnp.zeros(200), AdversarialStragglers((3, 77, 250)), steps=300,
+                  theta_star=PROB.theta_star, key=jax.random.PRNGKey(9))
+    assert float(res.errors[-1]) < 0.05 * float(jnp.linalg.norm(PROB.theta_star))

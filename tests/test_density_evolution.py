@@ -1,0 +1,54 @@
+"""Density evolution (Proposition 2) and its empirical agreement."""
+import numpy as np
+import pytest
+
+from repro.core.decoder import erased_after
+from repro.core.density_evolution import q_final, qd_sequence, threshold
+from repro.core.ldpc import make_regular_ldpc
+
+
+def test_recursion_values():
+    qs = qd_sequence(0.1, 3, 6, 3)
+    # hand-check one step: q1 = q0 * (1 - (1-q0)^5)^2
+    q1 = 0.1 * (1.0 - 0.9 ** 5) ** 2
+    assert np.isclose(qs[1], q1)
+    assert qs.shape == (4,)
+
+
+def test_monotone_below_threshold():
+    qs = qd_sequence(0.35, 3, 6, 50)
+    assert np.all(np.diff(qs) <= 1e-12)
+    assert qs[-1] < 1e-6
+
+
+def test_not_vanishing_above_threshold():
+    qs = qd_sequence(0.48, 3, 6, 500)
+    assert qs[-1] > 0.1
+
+
+def test_threshold_3_6():
+    # Richardson-Urbanke: q*(3,6) ≈ 0.4294
+    q = threshold(3, 6)
+    assert abs(q - 0.4294) < 2e-3
+
+
+def test_threshold_4_8_smaller_than_3_6():
+    assert threshold(4, 8) < threshold(3, 6)
+
+
+@pytest.mark.parametrize("q0", [0.05, 0.15, 0.25])
+def test_density_evolution_matches_empirical(q0):
+    """On a long code, the fraction of unresolved coordinates after D rounds
+    should track q_D (Proposition 2 is an asymptotic statement)."""
+    code = make_regular_ldpc(600, l=3, r=6, seed=4)
+    rng = np.random.default_rng(0)
+    D = 6
+    fracs = []
+    for t in range(20):
+        erased = rng.random(code.N) < q0
+        rem = erased_after(code, erased, D)
+        fracs.append(rem.sum() / code.N)
+    emp = float(np.mean(fracs))
+    qd = q_final(q0, 3, 6, D)
+    # empirical should be in the ballpark of density evolution (finite-n gap)
+    assert abs(emp - qd) < max(0.05, 3.0 * qd)

@@ -1,0 +1,105 @@
+"""Moment encoding + roofline analysis plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    encode_moment,
+    encode_moment_blocks,
+    make_regular_ldpc,
+    second_moment,
+)
+from repro.launch.analysis import HW, collective_bytes, model_flops
+
+
+def test_second_moment():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((50, 10)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(50), jnp.float32)
+    M, b = second_moment(X, y)
+    np.testing.assert_allclose(M, np.asarray(X).T @ np.asarray(X),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b, np.asarray(X).T @ np.asarray(y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_encode_moment_systematic_and_codeword():
+    code = make_regular_ldpc(24, l=3, r=6, seed=0)
+    rng = np.random.default_rng(1)
+    M = jnp.asarray(rng.standard_normal((24, 24)), jnp.float32)
+    C = encode_moment(code, M)
+    assert C.shape == (code.N, 24)
+    np.testing.assert_allclose(C[:24], M, rtol=1e-5)       # systematic
+    theta = jnp.asarray(rng.standard_normal(24), jnp.float32)
+    z = C @ theta
+    # C @ theta is a codeword whose first K coords are M @ theta
+    np.testing.assert_allclose(code.H @ np.asarray(z), 0.0, atol=1e-3)
+    np.testing.assert_allclose(z[:24], M @ theta, rtol=1e-4, atol=1e-4)
+
+
+def test_encode_moment_blocks():
+    code = make_regular_ldpc(8, l=3, r=6, seed=0)
+    rng = np.random.default_rng(2)
+    k = 24  # 3 blocks of K=8
+    M = jnp.asarray(rng.standard_normal((k, k)), jnp.float32)
+    C = encode_moment_blocks(code, M)
+    assert C.shape == (3, code.N, k)
+    for i in range(3):
+        np.testing.assert_allclose(C[i], code.G @ np.asarray(M)[8 * i: 8 * (i + 1)],
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        encode_moment(code, M)  # K != k requires the blocked form
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ag = bf16[16,128]{1,0} all-gather(bf16[1,128]{1,0} %x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %z), dimensions={0}
+  %aa = bf16[8,64]{1,0} all-to-all(bf16[8,64]{1,0} %w), dimensions={0}
+  %cp = f32[4]{0} collective-permute(f32[4]{0} %v), source_target_pairs={{0,1}}
+  %notacoll = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 2
+    assert out["all-reduce"] == 256 * 4 * 2     # x2 ring factor
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["all-to-all"] == 8 * 64 * 2
+    assert out["collective-permute"] == 4 * 4
+    assert out["count"] == 5
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.configs import get_config
+    from repro.models import Model
+
+    dense_cfg = get_config("qwen3-1.7b")
+    model = Model(dense_cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    f_train = model_flops(dense_cfg, model, shapes, "train", 256, 4096)
+    # 6*N*D within 2x (embed excluded, attention flops not counted)
+    n_nonembed = sum(
+        int(np.prod(l.shape)) for p, l in
+        jax.tree_util.tree_flatten_with_path(shapes)[0]
+        if not any("embed" in str(getattr(k, "key", "")) for k in p))
+    approx = 6 * n_nonembed * 256 * 4096
+    assert 0.5 < f_train / approx < 2.0
+
+    moe_cfg = get_config("kimi-k2-1t-a32b")
+    m2 = Model(moe_cfg)
+    shapes2 = jax.eval_shape(m2.init, jax.random.PRNGKey(0))
+    f_moe = model_flops(moe_cfg, m2, shapes2, "train", 8, 128)
+    f_moe_dense_equiv = 6 * m2.param_count(shapes2) * 8 * 128
+    # active << total for a 1T-param top-8-of-384 MoE
+    assert f_moe < 0.15 * f_moe_dense_equiv
+
+    # decode counts one token
+    f_dec = model_flops(dense_cfg, model, shapes, "decode", 128, 32768)
+    assert f_dec < f_train / 1000
+
+
+def test_hw_constants():
+    assert HW["peak_flops"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert HW["ici_bw"] == 50e9

@@ -1,0 +1,174 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU).
+
+Per the assignment contract: for each kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decoder import peel_decode
+from repro.core.ldpc import make_regular_ldpc
+from repro.kernels.block_matmul import block_matmul, coded_matvec, encode_gm
+from repro.kernels.block_matmul.ref import block_matmul_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ldpc_peel import peel_decode_pallas, peel_round_pallas
+from repro.kernels.ldpc_peel.kernel import check_pass
+from repro.kernels.ldpc_peel.ref import check_pass_ref
+
+
+# ------------------------------------------------------------- ldpc_peel --
+
+
+@pytest.mark.parametrize("p,N,V", [(8, 16, 1), (32, 64, 4), (128, 256, 128),
+                                   (130, 260, 7), (64, 128, 200)])
+def test_check_pass_matches_ref(p, N, V):
+    rng = np.random.default_rng(p + N + V)
+    H = rng.standard_normal((p, N)).astype(np.float32)
+    H[rng.random((p, N)) < 0.8] = 0.0  # sparse
+    vals = rng.standard_normal((N, V)).astype(np.float32)
+    erased = (rng.random(N) < 0.3).astype(np.float32)[:, None]
+
+    # pad to kernel-legal sizes the same way ops.py does
+    def pad(x, m0, m1):
+        return np.pad(x, ((0, (-x.shape[0]) % m0), (0, (-x.shape[1]) % m1)))
+
+    bp = min(128, max(8, p))
+    Hp = pad(H, bp, 128)
+    vp = pad(vals, 128, min(128, max(8, V)))
+    ep = pad(erased, 128, 1)
+    sums, cnt, pos, coeff = check_pass(jnp.asarray(Hp), jnp.asarray(vp),
+                                       jnp.asarray(ep), bp=bp,
+                                       bv=min(128, vp.shape[1]))
+    rs, rc, rp, rf = check_pass_ref(jnp.asarray(Hp), jnp.asarray(vp),
+                                    jnp.asarray(ep))
+    np.testing.assert_allclose(sums, rs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(cnt, rc, rtol=1e-6)
+    np.testing.assert_array_equal(pos, rp)
+    np.testing.assert_allclose(coeff, rf, rtol=1e-6)
+
+
+@pytest.mark.parametrize("K,V", [(20, 1), (40, 8), (100, 64)])
+def test_peel_round_pallas_matches_decoder(K, V):
+    code = make_regular_ldpc(K, l=3, r=6, seed=K)
+    rng = np.random.default_rng(0)
+    msg = rng.standard_normal((K, V)).astype(np.float32)
+    cw = jnp.asarray(code.encode(msg), jnp.float32)
+    if V == 1:
+        cw = cw[:, 0]
+    erased = jnp.asarray(rng.random(code.N) < 0.25)
+    rx = jnp.where(erased if cw.ndim == 1 else erased[:, None], 0.0, cw)
+
+    from repro.core.decoder import peel_round
+    H = jnp.asarray(code.H, jnp.float32)
+    ref_v, ref_e = peel_round(H, jnp.asarray(code.H_mask),
+                              rx[:, None] if cw.ndim == 1 else rx, erased)
+    got_v, got_e = peel_round_pallas(H, rx, erased)
+    np.testing.assert_array_equal(got_e, ref_e)
+    gv = got_v[:, None] if cw.ndim == 1 else got_v
+    np.testing.assert_allclose(gv, ref_v, rtol=1e-4, atol=1e-4)
+
+
+def test_peel_decode_pallas_full_agreement():
+    code = make_regular_ldpc(60, l=3, r=6, seed=3)
+    rng = np.random.default_rng(1)
+    cw = jnp.asarray(code.encode(rng.standard_normal(60)), jnp.float32)
+    erased = jnp.asarray(rng.random(code.N) < 0.3)
+    rx = jnp.where(erased, 0.0, cw)
+    ref = peel_decode(code, rx, erased, iters=10)
+    got_v, got_e = peel_decode_pallas(jnp.asarray(code.H, jnp.float32),
+                                      rx, erased, iters=10)
+    np.testing.assert_array_equal(got_e, ref.erased)
+    ok = ~np.asarray(got_e)
+    np.testing.assert_allclose(np.asarray(got_v)[ok], np.asarray(ref.values)[ok],
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- block_matmul --
+
+
+@pytest.mark.parametrize("M,K,N", [(8, 8, 8), (128, 128, 128), (100, 37, 65),
+                                   (256, 512, 128), (40, 200, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_matmul_sweep(M, K, N, dtype):
+    rng = np.random.default_rng(M * K + N)
+    A = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    B = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    got = block_matmul(A, B)
+    ref = block_matmul_ref(A, B)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * K)
+
+
+def test_coded_matvec_and_encode():
+    code = make_regular_ldpc(64, l=3, r=6, seed=0)
+    rng = np.random.default_rng(2)
+    M = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    theta = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    C = encode_gm(jnp.asarray(code.G, jnp.float32), M)
+    np.testing.assert_allclose(C, code.G @ np.asarray(M), rtol=1e-4, atol=1e-4)
+    z = coded_matvec(C, theta)
+    np.testing.assert_allclose(z, np.asarray(C) @ np.asarray(theta),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- flash_attention --
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 8, 1, 1, 16), (2, 64, 4, 2, 32), (1, 128, 8, 8, 64),
+    (2, 100, 4, 1, 32),  # non-tile-multiple seq + MQA
+    (1, 256, 2, 2, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, KV, D, causal):
+    rng = np.random.default_rng(B * S + H + D)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * 0.5
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32) * 0.5
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    # oracle with expanded GQA heads
+    G = H // KV
+    ke = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ve = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    qe = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = attention_ref(qe, ke, ve, causal=causal)
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(9)
+    B, S, H, D = 1, 64, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype) * 0.5
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype) * 0.5
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    got = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    qe = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ke = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ve = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = attention_ref(qe, ke, ve, causal=True).reshape(B, H, S, D
+                                                         ).transpose(0, 2, 1, 3)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_sdpa():
+    """Flash kernel == models.attention.sdpa_chunked (the production path)."""
+    from repro.models.attention import sdpa_chunked
+    rng = np.random.default_rng(3)
+    B, S, KV, G, D = 2, 64, 2, 2, 32
+    H = KV * G
+    q = jnp.asarray(rng.standard_normal((B, S, KV, G, D)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    pos = jnp.arange(S)
+    ref = sdpa_chunked(q, k, v, pos, pos, causal=True, chunk=16)
+    # flash expects (B, S, H, D) with per-KV grouping order preserved
+    qf = q.reshape(B, S, H, D)
+    got = flash_attention(qf, k, v, causal=True, bq=32, bk=32)
+    np.testing.assert_allclose(got, ref.reshape(B, S, H, D), rtol=2e-4, atol=2e-4)

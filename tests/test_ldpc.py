@@ -1,0 +1,81 @@
+"""LDPC/LDGM construction invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ldpc import make_ldgm, make_regular_ldpc
+
+
+@pytest.mark.parametrize("K,l,r", [(20, 3, 6), (100, 3, 6), (64, 4, 8), (90, 3, 9), (200, 3, 6)])
+def test_regular_ldpc_structure(K, l, r):
+    code = make_regular_ldpc(K, l=l, r=r, seed=1)
+    p = K * l // (r - l)
+    assert code.N == K + p and code.K == K and code.p == p
+    # exact (l, r)-regularity
+    mask = code.H_mask
+    assert (mask.sum(axis=0) == l).all()
+    assert (mask.sum(axis=1) == r).all()
+    # simple graph: no duplicate edges by construction (boolean adjacency)
+    # systematic generator
+    assert np.allclose(code.G[:K], np.eye(K))
+    # H G = 0 (valid code)
+    assert np.allclose(code.H @ code.G, 0.0, atol=1e-8 * K)
+
+
+def test_regular_ldpc_rate_half_matches_paper():
+    # the paper's (40, 20) rate-1/2 code
+    code = make_regular_ldpc(20, l=3, r=6, seed=0)
+    assert (code.N, code.K) == (40, 20)
+    assert code.rate == 0.5
+
+
+def test_encode_systematic():
+    code = make_regular_ldpc(32, l=3, r=6, seed=2)
+    rng = np.random.default_rng(0)
+    msg = rng.standard_normal((32, 5))
+    cw = code.encode(msg)
+    assert cw.shape == (code.N, 5)
+    assert np.allclose(cw[:32], msg)
+    assert np.allclose(code.H @ cw, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("values", ["gaussian", "pm1"])
+def test_edge_values(values):
+    code = make_regular_ldpc(20, l=3, r=6, seed=3, values=values)
+    nz = code.H[code.H_mask]
+    if values == "pm1":
+        assert np.all(np.isin(nz, [-1.0, 1.0]))
+    else:
+        assert np.std(nz) > 0.1
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.sampled_from([12, 24, 36, 48, 60]), seed=st.integers(0, 1000))
+def test_regular_ldpc_property(K, seed):
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    assert np.allclose(code.H @ code.G, 0.0, atol=1e-7 * K)
+    assert (code.H_mask.sum(axis=0) == 3).all()
+    assert (code.H_mask.sum(axis=1) == 6).all()
+
+
+@pytest.mark.parametrize("K,p,rw", [(16, 8, 4), (64, 32, 4), (100, 50, 5), (8, 4, 3)])
+def test_ldgm_structure(K, p, rw):
+    code = make_ldgm(K, p, row_weight=rw, seed=0)
+    assert code.N == K + p
+    P = code.G[K:]
+    assert ((P != 0).sum(axis=1) == rw).all()  # sparse parity rows
+    # balanced column degrees (differ by at most 1)
+    cd = (P != 0).sum(axis=0)
+    assert cd.max() - cd.min() <= 1
+    assert np.allclose(code.H @ code.G, 0.0, atol=1e-8)
+    # parity-check structure [P, -I]
+    assert np.allclose(code.H[:, K:], -np.eye(p))
+
+
+def test_bad_params_raise():
+    with pytest.raises(ValueError):
+        make_regular_ldpc(20, l=6, r=6)
+    with pytest.raises(ValueError):
+        make_regular_ldpc(21, l=3, r=7)  # 21*3 % 4 != 0
+    with pytest.raises(ValueError):
+        make_ldgm(4, 2, row_weight=9)

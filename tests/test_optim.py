@@ -1,0 +1,125 @@
+"""Projections (hypothesis property tests), AdamW, schedules, stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.straggler import (
+    AdversarialStragglers,
+    BernoulliStragglers,
+    DelayModel,
+    FixedCountStragglers,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, projections, schedules
+
+VEC = hnp.arrays(np.float32, st.integers(2, 40),
+                 elements=st.floats(-100, 100, width=32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=VEC, r=st.floats(0.1, 50))
+def test_l2_ball_projection_properties(v, r):
+    p = projections.l2_ball(r)(jnp.asarray(v))
+    assert float(jnp.linalg.norm(p)) <= r * (1 + 1e-5)
+    # idempotent
+    np.testing.assert_allclose(projections.l2_ball(r)(p), p, rtol=1e-5, atol=1e-6)
+    # non-expansive towards any point already in the ball
+    q = jnp.zeros_like(p)
+    assert float(jnp.linalg.norm(p - q)) <= float(jnp.linalg.norm(jnp.asarray(v) - q)) + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=VEC, r=st.floats(0.1, 50))
+def test_l1_ball_projection_properties(v, r):
+    p = np.asarray(projections.l1_ball(r)(jnp.asarray(v)))
+    # fp32: the simplex threshold is computed in f32, so the constraint can
+    # overshoot by a few ulps relative to the INPUT scale, not just r
+    assert np.abs(p).sum() <= r + 1e-3 * max(1.0, np.abs(v).sum() * 1e-3)
+    p2 = np.asarray(projections.l1_ball(r)(jnp.asarray(p)))
+    np.testing.assert_allclose(p2, p, rtol=1e-4, atol=1e-5)
+    # optimality sanity: projection is no farther than the naive scaling
+    naive = v * min(1.0, r / max(np.abs(v).sum(), 1e-30))
+    assert np.linalg.norm(v - p) <= np.linalg.norm(v - naive) + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=VEC, u=st.integers(1, 10))
+def test_hard_threshold_properties(v, u):
+    p = np.asarray(projections.hard_threshold(u)(jnp.asarray(v)))
+    assert (p != 0).sum() <= u
+    # kept coordinates are unchanged
+    kept = p != 0
+    np.testing.assert_allclose(p[kept], v[kept])
+    # keeps the largest-|.| coordinates: any dropped |v| <= any kept |v|
+    if u < len(v) and kept.any():
+        dropped_mask = np.ones(len(v), bool)
+        # indices that were kept (including kept zeros are impossible since p==0 there)
+        assert np.abs(v)[~kept].max(initial=0.0) <= np.abs(p)[kept].min() + 1e-6
+
+
+def test_adamw_matches_manual_reference():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st_ = adamw_init(params)
+    p1, st1 = adamw_update(params, g, st_, cfg)
+    # manual first step: m=0.1g... update = g/(|g|+eps) (bias corrected)
+    gn = np.asarray(g["w"])
+    expect = np.asarray(params["w"]) - 1e-2 * gn / (np.abs(gn) + 1e-8)
+    np.testing.assert_allclose(p1["w"], expect, rtol=1e-5)
+    assert int(st1.step) == 1
+
+
+def test_adamw_decay_and_convergence():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0])}
+    state = adamw_init(params)
+
+    for _ in range(200):
+        g = {"w": 2.0 * params["w"]}  # d/dw w^2
+        params, state = adamw_update(params, g, state, cfg)
+    assert abs(float(params["w"][0])) < 0.05
+
+
+def test_schedules():
+    s = schedules.warmup_cosine(1.0, 10, 110)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(110)) == pytest.approx(0.0, abs=1e-6)
+    assert float(s(5)) == pytest.approx(0.5)
+    assert float(schedules.theorem1_lr(2.0, 4.0, 25)(3)) == pytest.approx(0.1)
+
+
+def test_bernoulli_straggler_rate():
+    model = BernoulliStragglers(0.3)
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    masks = jnp.stack([model.sample(k, 64) for k in keys])
+    assert abs(float(masks.mean()) - 0.3) < 0.03
+
+
+def test_fixed_count_exact_s():
+    model = FixedCountStragglers(7)
+    for i in range(5):
+        mask = model.sample(jax.random.PRNGKey(i), 40)
+        assert int(mask.sum()) == 7
+    assert int(FixedCountStragglers(0).sample(jax.random.PRNGKey(0), 40).sum()) == 0
+
+
+def test_adversarial_fixed_set():
+    model = AdversarialStragglers((1, 5))
+    m1 = model.sample(jax.random.PRNGKey(0), 10)
+    m2 = model.sample(jax.random.PRNGKey(9), 10)
+    np.testing.assert_array_equal(m1, m2)
+    assert int(m1.sum()) == 2 and bool(m1[1]) and bool(m1[5])
+
+
+def test_delay_model():
+    dm = DelayModel(tau=1.0, mu=2.0)
+    d = dm.sample_delays(jax.random.PRNGKey(0), 1000)
+    assert float(d.min()) >= 1.0
+    assert abs(float(d.mean()) - 1.5) < 0.1  # tau + 1/mu
+    mask, t = DelayModel.mask_and_time(d, wait_for=900)
+    assert int((~mask).sum()) >= 900
+    assert float(t) >= 1.0
