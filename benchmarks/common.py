@@ -35,7 +35,8 @@ def build_code(seed=0):
     return make_regular_ldpc(20, l=3, r=6, seed=seed)
 
 
-def build_schemes(prob, *, projection=None, seed=0) -> dict:
+def build_schemes(prob, *, projection=None, seed=0,
+                  decode_backend="auto") -> dict:
     """All compared schemes on one problem (paper Fig. 1-3 lineup)."""
     from repro.optim import projections as Pj
     proj = projection or Pj.identity
@@ -43,7 +44,8 @@ def build_schemes(prob, *, projection=None, seed=0) -> dict:
     code = build_code(seed)
     return {
         "ldpc-moment (this paper)": Scheme2Blocked.build(
-            code, mom, lr=prob.lr, decode_iters=12, projection=proj),
+            code, mom, lr=prob.lr, decode_iters=12, projection=proj,
+            decode_backend=decode_backend),
         "uncoded": Uncoded(prob.X, prob.y, w=W, lr=prob.lr, projection=proj),
         "2-replication": Replication(prob.X, prob.y, w=W, lr=prob.lr, r=2,
                                      projection=proj),

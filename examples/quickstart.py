@@ -1,8 +1,13 @@
 """Quickstart: LDPC moment-encoded gradient descent (paper Scheme 2) vs the
 uncoded baseline, on a 40-worker simulated cluster with stragglers.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [backend]
+
+``backend`` (optional: auto | dense | sparse | pallas) selects the LDPC
+decode implementation — see repro/core/decoder.py for the matrix.
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -17,16 +22,19 @@ from repro.core.schemes import Uncoded
 from repro.data import make_linear_problem
 
 
-def main():
+def main(backend: str = "auto"):
     # least squares: m = 2048 samples, k = 400 features, w = 40 workers,
     # 10 stragglers per step — the paper's Fig. 1 setting.
     prob = make_linear_problem(m=2048, k=400, seed=0)
     mom = second_moment(prob.X, prob.y)
     code = make_regular_ldpc(20, l=3, r=6, seed=0)  # the paper's (40, 20) code
+    from repro.core.decoder import resolve_backend
     print(f"LDPC code: N={code.N} K={code.K} rate={code.rate} "
-          f"(l={code.l}, r={code.r})")
+          f"(l={code.l}, r={code.r}); decode backend "
+          f"{backend} -> {resolve_backend(backend, code)}")
 
-    ldpc = Scheme2Blocked.build(code, mom, lr=prob.lr, decode_iters=12)
+    ldpc = Scheme2Blocked.build(code, mom, lr=prob.lr, decode_iters=12,
+                                decode_backend=backend)
     uncoded = Uncoded(prob.X, prob.y, w=40, lr=prob.lr)
 
     model = FixedCountStragglers(10)  # wait for the fastest 30 of 40
@@ -42,4 +50,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(*sys.argv[1:2])

@@ -49,6 +49,7 @@ class Scheme2:
     lr: float
     decode_iters: int = 10
     adaptive: bool = False
+    decode_backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
     projection: Callable[[jax.Array], jax.Array] = projections.identity
     debias: bool = False
     q0_for_debias: float = 0.1
@@ -71,7 +72,7 @@ class Scheme2:
         erased = self.worker_mask_to_erasure(straggler_mask)
         z = jnp.where(erased, 0.0, z)
         dec = (peel_decode_adaptive if self.adaptive else peel_decode)(
-            self.code, z, erased, self.decode_iters
+            self.code, z, erased, self.decode_iters, backend=self.decode_backend
         )
         unresolved = dec.erased[:k]
         c_hat = jnp.where(unresolved, 0.0, dec.values[:k])
@@ -153,6 +154,7 @@ class Scheme2Blocked:
     b: jax.Array         # (k,)
     lr: float
     decode_iters: int = 10
+    decode_backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
     projection: Callable[[jax.Array], jax.Array] = projections.identity
 
     @classmethod
@@ -169,7 +171,8 @@ class Scheme2Blocked:
         nb = self.C_blocks.shape[0]
         Z = jnp.einsum("bnk,k->nb", self.C_blocks, theta)  # (N, k/K)
         Z = jnp.where(straggler_mask[:, None], 0.0, Z)
-        dec = peel_decode(self.code, Z, straggler_mask, self.decode_iters)
+        dec = peel_decode(self.code, Z, straggler_mask, self.decode_iters,
+                          backend=self.decode_backend)
         unresolved_rows = dec.erased[:K]             # same for every block
         c_hat = jnp.where(unresolved_rows[:, None], 0.0, dec.values[:K])  # (K, nb)
         # block b's rows are M[b*K:(b+1)*K] -> flat coordinate j = b*K + r

@@ -2,10 +2,39 @@
 
 The classic peeling decoder resolves degree-1 checks one at a time.  On TPU
 we use the equivalent *flooding* schedule: in each round, every parity check
-with exactly one erased neighbour resolves that neighbour.  A flooding round
-is a dense ``H``-structured matvec (MXU-friendly) and the fixed number of
-rounds ``D`` is exactly the paper's decoding-iteration knob — the quality of
-the recovered gradient is monotone in ``D`` (Remark 3).
+with exactly one erased neighbour resolves that neighbour.  The fixed number
+of rounds ``D`` is exactly the paper's decoding-iteration knob — the quality
+of the recovered gradient is monotone in ``D`` (Remark 3).
+
+Backend matrix (``backend=`` on :func:`peel_decode` /
+:func:`peel_decode_adaptive`):
+
+=========  ==================================================================
+backend    what runs
+=========  ==================================================================
+"dense"    the original reference: three dense ``H``-structured ops per
+           round (mask matvec, matmul, argmax) — O(p·N·V) work.  Always
+           available, including for raw ``(H, Hb)`` tuples.
+"sparse"   gathers over the code's padded neighbor table
+           (``LDPCCode.check_idx`` / ``check_coeff``) — O(p·r_max·V) work,
+           i.e. proportional to the Tanner-graph edge count, the complexity
+           the paper's low-cost-decoding argument assumes.  Requires an
+           :class:`LDPCCode` (the table is built at construction).
+"pallas"   the fused one-kernel decode
+           (:func:`repro.kernels.ldpc_peel.peel_decode_pallas`): the whole
+           fixed-``D`` loop runs inside a single ``pallas_call`` with ``H``
+           resident in VMEM — no per-round kernel relaunch or re-padding.
+           Fixed-``D`` only; ``peel_decode_adaptive`` maps it to "sparse".
+           Runs in interpret mode off-TPU (correct but not fast on CPU).
+"auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
+           large codes off-TPU; "pallas" on TPU when the kernel's whole
+           working set fits comfortably in VMEM (N ≤ 512), else "sparse".
+=========  ==================================================================
+
+All backends follow bit-identical erasure trajectories (solvability is an
+exact count of erased neighbours, and every backend resolves the same
+first-erased-column neighbour per check); decoded values agree up to f32
+summation order.
 
 The decoder is fully ``jit``-able (fixed ``D`` → ``lax.fori_loop``;
 adaptive → ``lax.while_loop`` with early exit) and batched over symbol
@@ -29,7 +58,28 @@ import numpy as np
 
 from repro.core.ldpc import LDPCCode
 
-__all__ = ["DecodeResult", "peel_round", "peel_decode", "peel_decode_adaptive", "erased_after"]
+__all__ = [
+    "DecodeResult",
+    "peel_round",
+    "peel_round_sparse",
+    "peel_decode",
+    "peel_decode_adaptive",
+    "erased_after",
+    "resolve_backend",
+]
+
+BACKENDS = ("auto", "dense", "sparse", "pallas")
+
+# "auto" picks the sparse neighbor-table round once the dense round's O(p·N)
+# work clearly loses to O(p·r_max) gathers; below this the dense matmul's
+# better vectorization wins on CPU.
+_AUTO_SPARSE_MIN_N = 256
+# Largest N "auto" routes to the fused kernel on TPU.  The kernel's live
+# VMEM working set is several (p, N) buffers (H plus mask/iota/one-hot
+# temporaries), not just the H tile, so stay well inside the ~16 MiB/core
+# budget: N = 512 → p·N f32 ≈ 0.5 MiB per buffer.  Larger codes use the
+# sparse round until the kernel tiles H over the check axis (ROADMAP).
+_AUTO_PALLAS_MAX_N = 512
 
 
 class DecodeResult(NamedTuple):
@@ -44,10 +94,42 @@ def _expand(values: jax.Array) -> tuple[jax.Array, bool]:
     return values, False
 
 
+def resolve_backend(backend: str, code, *, adaptive: bool = False) -> str:
+    """Resolve the ``backend=`` knob to a concrete decode implementation.
+
+    See the module docstring for the matrix.  Raises on unknown names and on
+    sparse/pallas requests for raw ``(H, Hb)`` tuples (no neighbor table).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown decode backend {backend!r}; want one of {BACKENDS}")
+    is_code = isinstance(code, LDPCCode)
+    if backend == "auto":
+        if not is_code:
+            return "dense"
+        N = code.N
+        if jax.default_backend() == "tpu":
+            backend = "pallas" if N <= _AUTO_PALLAS_MAX_N else "sparse"
+        else:
+            backend = "sparse" if N >= _AUTO_SPARSE_MIN_N else "dense"
+    if backend in ("sparse", "pallas") and not is_code:
+        raise ValueError(
+            f"backend={backend!r} needs an LDPCCode (neighbor table); "
+            "raw (H, Hb) tuples only support backend='dense'"
+        )
+    if adaptive and backend == "pallas":
+        # The fused kernel is fixed-D by construction; the adaptive
+        # early-exit decode uses the sparse round instead.
+        backend = "sparse"
+    return backend
+
+
+# --------------------------------------------------------------- dense round
+
+
 def peel_round(
     H: jax.Array, Hb: jax.Array, values: jax.Array, erased: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
-    """One flooding round. values: (N, V), erased: (N,) bool.
+    """One flooding round (dense). values: (N, V), erased: (N,) bool.
 
     For every check row with exactly one erased neighbour ``j``:
       ``c_j = -(sum_{j' known} H[i, j'] c_{j'}) / H[i, j]``.
@@ -81,16 +163,89 @@ def _peel_fixed(H, Hb, values, erased, iters: int):
     return values, erased
 
 
+# -------------------------------------------------------------- sparse round
+
+
+def peel_round_sparse(
+    check_idx: jax.Array,
+    check_coeff: jax.Array,
+    values: jax.Array,
+    erased: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """One flooding round via neighbor-table gathers — O(p·r_max·V) work.
+
+    ``check_idx (p, r_max) int32`` holds each check's neighbour columns in
+    ascending order, padded with the sentinel ``N``; ``check_coeff`` the
+    matching edge weights, padded with 0.  Gathers read from ``values`` /
+    ``erased`` padded by one sentinel row, so padding slots contribute
+    nothing and no branching is needed.  Semantics match :func:`peel_round`
+    exactly: same solvability decisions, same resolved neighbour per check.
+    """
+    N = values.shape[0]
+    dt = values.dtype
+    e_pad = jnp.concatenate([erased, jnp.zeros((1,), erased.dtype)])  # (N+1,)
+    v_pad = jnp.concatenate([values, jnp.zeros((1, values.shape[1]), dt)])
+    ne = e_pad[check_idx]  # (p, r_max) bool — erased neighbours
+    nef = ne.astype(dt)
+    cnt = nef.sum(axis=1)  # (p,)
+    nv = v_pad[check_idx]  # (p, r_max, V)
+    # Known-neighbour contribution: coeff * value, erased slots zeroed.
+    sums = jnp.einsum("prv,pr->pv", nv, check_coeff.astype(dt) * (1.0 - nef))
+    # First erased neighbour slot (ascending column order == dense argmax).
+    slot = jnp.argmax(ne, axis=1)  # (p,)
+    pos = jnp.take_along_axis(check_idx, slot[:, None], axis=1)[:, 0]
+    coeff = jnp.take_along_axis(check_coeff, slot[:, None], axis=1)[:, 0].astype(dt)
+    solvable = cnt == 1.0
+    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+    safe_pos = jnp.where(solvable, pos, N)
+    values = values.at[safe_pos].set(new_val, mode="drop")
+    erased = erased.at[safe_pos].set(False, mode="drop")
+    return values, erased
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _peel_fixed_sparse(check_idx, check_coeff, values, erased, iters: int):
+    def body(_, carry):
+        v, e = carry
+        return peel_round_sparse(check_idx, check_coeff, v, e)
+
+    values, erased = jax.lax.fori_loop(0, iters, body, (values, erased))
+    return values, erased
+
+
+# ----------------------------------------------------------------- dispatch
+
+
 def peel_decode(
     code: LDPCCode | tuple[jax.Array, jax.Array],
     values: jax.Array,
     erased: jax.Array,
     iters: int,
+    *,
+    backend: str = "auto",
 ) -> DecodeResult:
-    """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode)."""
-    H, Hb = _mats(code, values.dtype)
+    """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode).
+
+    ``backend`` selects the implementation — see the module docstring for
+    the full matrix.  The default ``"auto"`` keeps small/tuple inputs on the
+    dense reference and routes large codes to the sparse neighbor-table
+    round (or, on TPU, the fused one-kernel Pallas decode).
+    """
+    backend = resolve_backend(backend, code)
     v, squeeze = _expand(jnp.asarray(values))
-    v, e = _peel_fixed(H, Hb, v, jnp.asarray(erased, bool), int(iters))
+    e = jnp.asarray(erased, bool)
+    iters = int(iters)
+    if backend == "sparse":
+        idx, coeff = _tables(code)
+        v, e = _peel_fixed_sparse(idx, coeff, v, e, iters)
+    elif backend == "pallas":
+        from repro.kernels.ldpc_peel import peel_decode_pallas
+
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e = peel_decode_pallas(H, v, e, iters)
+    else:
+        H, Hb = _mats(code, v.dtype)
+        v, e = _peel_fixed(H, Hb, v, e, iters)
     if squeeze:
         v = v[:, 0]
     return DecodeResult(v, e, jnp.int32(iters))
@@ -113,22 +268,48 @@ def _peel_adaptive(H, Hb, values, erased, max_iters: int):
     return v, e, d
 
 
+@partial(jax.jit, static_argnames=("max_iters",))
+def _peel_adaptive_sparse(check_idx, check_coeff, values, erased, max_iters: int):
+    def cond(carry):
+        _, e, d, progressed = carry
+        return (d < max_iters) & progressed & e.any()
+
+    def body(carry):
+        v, e, d, _ = carry
+        v2, e2 = peel_round_sparse(check_idx, check_coeff, v, e)
+        return v2, e2, d + 1, (e2 != e).any()
+
+    v, e, d, _ = jax.lax.while_loop(
+        cond, body, (values, erased, jnp.int32(0), jnp.bool_(True))
+    )
+    return v, e, d
+
+
 def peel_decode_adaptive(
     code: LDPCCode | tuple[jax.Array, jax.Array],
     values: jax.Array,
     erased: jax.Array,
     max_iters: int | None = None,
+    *,
+    backend: str = "auto",
 ) -> DecodeResult:
     """Decode until fixpoint (no check resolves) or ``max_iters`` rounds.
 
     This is the "decoding effort adapts to the number of stragglers" mode:
-    with few erasures the loop exits after 1-2 rounds.
+    with few erasures the loop exits after 1-2 rounds.  ``backend="pallas"``
+    falls back to "sparse" (the fused kernel is fixed-D only).
     """
-    H, Hb = _mats(code, values.dtype)
+    backend = resolve_backend(backend, code, adaptive=True)
     if max_iters is None:
-        max_iters = int(H.shape[1])
+        max_iters = int(code.N if isinstance(code, LDPCCode) else code[0].shape[1])
     v, squeeze = _expand(jnp.asarray(values))
-    v, e, d = _peel_adaptive(H, Hb, v, jnp.asarray(erased, bool), int(max_iters))
+    e = jnp.asarray(erased, bool)
+    if backend == "sparse":
+        idx, coeff = _tables(code)
+        v, e, d = _peel_adaptive_sparse(idx, coeff, v, e, int(max_iters))
+    else:
+        H, Hb = _mats(code, v.dtype)
+        v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))
     if squeeze:
         v = v[:, 0]
     return DecodeResult(v, e, d)
@@ -145,12 +326,20 @@ def erased_after(code: LDPCCode, erased: np.ndarray, iters: int) -> np.ndarray:
     return np.asarray(res.erased)
 
 
+def _float_dtype(dtype):
+    return dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32
+
+
 def _mats(code, dtype) -> tuple[jax.Array, jax.Array]:
     if isinstance(code, LDPCCode):
-        H = jnp.asarray(code.H, dtype=dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
+        H = jnp.asarray(code.H, dtype=_float_dtype(dtype))
         Hb = jnp.asarray(code.H_mask)
     else:
         H, Hb = code
         H = jnp.asarray(H)
         Hb = jnp.asarray(Hb, bool)
     return H, Hb
+
+
+def _tables(code: LDPCCode) -> tuple[jax.Array, jax.Array]:
+    return jnp.asarray(code.check_idx), jnp.asarray(code.check_coeff)

@@ -68,6 +68,7 @@ class CodedAggregator:
 
     code: LDPCCode
     decode_iters: int = 8
+    decode_backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
     debias_scale: float = 1.0  # optional 1/(1-q_D) correction
 
     @classmethod
@@ -93,7 +94,8 @@ class CodedAggregator:
                   ) -> tuple[jax.Array, jax.Array]:
         symbols = self.encode(partials)  # (N, dim)
         symbols = jnp.where(straggler_mask[:, None], 0.0, symbols)
-        dec = peel_decode(self.code, symbols, straggler_mask, self.decode_iters)
+        dec = peel_decode(self.code, symbols, straggler_mask, self.decode_iters,
+                          backend=self.decode_backend)
         unresolved = dec.erased[: self.code.K]
         recovered = jnp.where(unresolved[:, None], 0.0, dec.values[: self.code.K])
         total = recovered.sum(axis=0) * self.debias_scale

@@ -29,6 +29,7 @@ per-step compute paths are JAX (see decoder.py / coded_step.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Literal
 
 import numpy as np
@@ -61,6 +62,12 @@ class LDPCCode:
     kind: str = "ldpc"
     seed: int = 0
 
+    def __post_init__(self) -> None:
+        # Build the neighbor table eagerly: every construction site is
+        # offline/host-side, and the sparse decode backends assume the table
+        # exists without a first-use hitch inside a timed hot path.
+        self._neighbor_table  # noqa: B018 — cached_property warm-up
+
     @property
     def p(self) -> int:
         return self.N - self.K
@@ -73,6 +80,48 @@ class LDPCCode:
     def H_mask(self) -> np.ndarray:
         """Boolean adjacency of the Tanner graph, shape (p, N)."""
         return self.H != 0.0
+
+    @functools.cached_property
+    def _neighbor_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Padded CSR-like neighbor table of the Tanner graph.
+
+        Returns ``(check_idx, check_coeff)``:
+
+        * ``check_idx (p, r_max) int32`` — for check row ``i``, the column
+          indices of its nonzero entries in ascending order, padded with the
+          sentinel ``N`` (one past the last variable);
+        * ``check_coeff (p, r_max) float32`` — the matching ``H[i, j]`` edge
+          weights, padded with ``0.0``.
+
+        ``r_max`` is the maximum row weight (== ``r`` for regular codes, so
+        the table is dense: no padding waste).  Ascending column order makes
+        the sparse flooding round pick the SAME erased neighbour as the dense
+        round's ``argmax`` (first erased column), so the two backends follow
+        identical decoding trajectories.  Built once per code (cached); the
+        sentinel ``N`` lets JAX consumers gather from arrays padded by one
+        row instead of branching.
+        """
+        mask = self.H != 0.0
+        row_weights = mask.sum(axis=1)
+        r_max = int(max(row_weights.max() if row_weights.size else 0, 1))
+        p = self.H.shape[0]
+        check_idx = np.full((p, r_max), self.N, dtype=np.int32)
+        check_coeff = np.zeros((p, r_max), dtype=np.float32)
+        for i in range(p):
+            cols = np.flatnonzero(mask[i])  # ascending
+            check_idx[i, : cols.size] = cols
+            check_coeff[i, : cols.size] = self.H[i, cols]
+        return check_idx, check_coeff
+
+    @property
+    def check_idx(self) -> np.ndarray:
+        """(p, r_max) int32 neighbor columns per check, sentinel-padded with N."""
+        return self._neighbor_table[0]
+
+    @property
+    def check_coeff(self) -> np.ndarray:
+        """(p, r_max) float32 edge weights matching :attr:`check_idx`."""
+        return self._neighbor_table[1]
 
     def encode(self, message: np.ndarray) -> np.ndarray:
         """Encode a (K, ...) message block into an (N, ...) codeword block."""

@@ -1,3 +1,12 @@
+"""Pallas LDPC peeling-decoder kernels.
+
+``peel_decode_pallas`` is the fused hot path: the whole fixed-D decode in
+one kernel launch (see ops.py / kernel.py for the backend matrix and
+interpret-mode behaviour off-TPU).  ``peel_round_pallas`` keeps the
+single-round check-pass path for experimentation and tests.
+"""
+from repro.kernels.ldpc_peel.kernel import check_pass, decode_fused
 from repro.kernels.ldpc_peel.ops import peel_round_pallas, peel_decode_pallas
 
-__all__ = ["peel_round_pallas", "peel_decode_pallas"]
+__all__ = ["peel_round_pallas", "peel_decode_pallas", "check_pass",
+           "decode_fused"]

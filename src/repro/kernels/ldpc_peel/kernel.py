@@ -1,23 +1,36 @@
-"""Fused check-node pass of the LDPC peeling decoder, as a Pallas TPU kernel.
+"""LDPC peeling-decoder Pallas TPU kernels.
 
-Per flooding round, for every parity check row i we need four quantities:
+Two kernels live here:
 
-  cnt_i   = #erased neighbours              (solvable iff == 1)
-  sums_i  = H[i,:] @ (values ⊙ known)       (the resolved value numerator)
-  pos_i   = index of the (unique) erased neighbour
-  coeff_i = H[i, pos_i]
+* :func:`check_pass` — the fused check-node pass of ONE flooding round
+  (kept as the building block for the per-round path and its tests);
+* :func:`decode_fused` — the whole fixed-``D`` decode in ONE ``pallas_call``:
+  the ``(p, N)`` H tile is loaded into VMEM once and stays resident across a
+  ``fori_loop`` over rounds, with the variable-node scatter epilogue fused
+  in-kernel.  This removes the per-round kernel relaunch, re-padding, and
+  HBM round-trips of the old ``ops.peel_decode_pallas`` (D launches → 1).
 
-The reference decoder computes these with three separate dense ops over H
-(mask matvec, matmul, argmax) — three passes over the H block from HBM.  The
-kernel fuses them into ONE pass: each grid step loads a (BP x N) tile of H
-into VMEM once and produces all four outputs.
+The in-kernel "scatter" is expressed MXU-style: the per-check resolution
+one-hot ``(p, N)`` is transposed into a matmul that accumulates each
+resolved coordinate's new value — TPUs have no efficient in-kernel scatter,
+but a ``(N, p) @ (p, V)`` dot is native.  Checks that resolve the same
+coordinate in the same round write consistent values (they are parity checks
+of one codeword); the kernel deterministically keeps the lowest-index
+check's value.
 
 TPU notes:
   * matmul dims padded to multiples of 128 (MXU), f32 accumulation;
   * pos is computed with broadcasted_iota + max (no 1-D iota on TPU);
   * 1-D per-check outputs are materialized as (BP, 1) tiles (TPU wants >=2D);
-  * grid = (p/BP, V/BV): the H tile is re-used across the V (payload) axis,
-    value tiles stream through VMEM.
+  * check_pass grid = (p/BP, V/BV): the H tile is re-used across the V
+    (payload) axis, value tiles stream through VMEM;
+  * decode_fused grid = (V/BV,): H stays whole in VMEM — with several
+    (p, N)-shaped temporaries live per round, the "auto" backend only
+    routes N ≤ 512 codes here (see core/decoder.py) — and each
+    grid step runs all D rounds for its payload slice.  The erasure
+    trajectory depends only on H and the initial mask, so every slice
+    recomputes the identical trajectory and the shared erasure output is
+    written consistently by each step.
 """
 from __future__ import annotations
 
@@ -27,7 +40,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["check_pass"]
+__all__ = ["check_pass", "decode_fused", "detect_interpret"]
+
+
+def detect_interpret(interpret: bool | None) -> bool:
+    """Pallas runs compiled only on TPU; anywhere else use interpret mode."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _check_kernel(H_ref, vals_ref, erased_ref, sums_ref, cnt_ref, pos_ref,
@@ -55,11 +75,14 @@ def _check_kernel(H_ref, vals_ref, erased_ref, sums_ref, cnt_ref, pos_ref,
 
 @functools.partial(jax.jit, static_argnames=("bp", "bv", "interpret"))
 def check_pass(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
-               bp: int = 128, bv: int = 128, interpret: bool = True):
+               bp: int = 128, bv: int = 128, interpret: bool | None = None):
     """Inputs (already padded by ops.py): H (p, N) f32, values (N, V) f32,
     erased_f (N, 1) f32.  p % bp == 0, V % bv == 0, N % 128 == 0.
 
+    ``interpret=None`` = backend-detected (compiled on TPU, else interpret).
+
     Returns (sums (p, V), cnt (p, 1), pos (p, 1) i32, coeff (p, 1))."""
+    interpret = detect_interpret(interpret)
     p, N = H.shape
     V = values.shape[1]
     grid = (p // bp, V // bv)
@@ -82,6 +105,83 @@ def check_pass(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
             jax.ShapeDtypeStruct((p, 1), jnp.float32),
             jax.ShapeDtypeStruct((p, 1), jnp.int32),
             jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+# ------------------------------------------------------------ fused decode --
+
+
+def _decode_kernel(H_ref, vals_ref, erased_ref, out_vals_ref, out_erased_ref,
+                   *, iters: int):
+    H = H_ref[...]  # (p, N) f32 — resident across all rounds
+    Hb = (H != 0.0).astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)  # (p, N)
+    row = jax.lax.broadcasted_iota(jnp.int32, H.shape, 0)  # (p, N)
+    HIGH = jax.lax.Precision.HIGHEST
+
+    def round_body(_, carry):
+        vals, e = carry  # (N, BV) f32, (N, 1) f32 (1.0 = erased)
+        cnt = jax.lax.dot(Hb, e, precision=HIGH)  # (p, 1)
+        solvable = cnt[:, 0] == 1.0  # (p,)
+        known = vals * (1.0 - e)
+        sums = jax.lax.dot(H, known, precision=HIGH)  # (p, BV)
+        emask = (Hb * e[:, 0][None, :]) > 0.0
+        pos = jnp.max(jnp.where(emask, col, -1), axis=1)  # (p,)
+        onehot = ((col == pos[:, None]) & solvable[:, None])  # (p, N) bool
+        coeff = jnp.sum(H * onehot.astype(jnp.float32), axis=1)  # (p,)
+        new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+        # Several checks may resolve the same coordinate; keep the
+        # lowest-index check's (consistent) value deterministically.
+        winner_row = jnp.min(jnp.where(onehot, row, H.shape[0]), axis=0)  # (N,)
+        winner = (onehot & (row == winner_row[None, :])).astype(jnp.float32)
+        resolved = jnp.max(winner, axis=0)[:, None]  # (N, 1) ∈ {0, 1}
+        scattered = jax.lax.dot(winner.T, new_val, precision=HIGH)  # (N, BV)
+        vals = jnp.where(resolved > 0.0, scattered, vals)
+        e = jnp.where(resolved > 0.0, 0.0, e)
+        return vals, e
+
+    vals, e = jax.lax.fori_loop(
+        0, iters, round_body, (vals_ref[...], erased_ref[...])
+    )
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "bv", "interpret"))
+def decode_fused(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
+                 iters: int, bv: int = 128, interpret: bool | None = None):
+    """Whole fixed-``iters`` decode in one ``pallas_call``.
+
+    Inputs (already padded by ops.py): H (p, N) f32 with p % 8 == 0 and
+    N % 128 == 0; values (N, V) f32 with V % bv == 0; erased_f (N, 1) f32.
+
+    ``interpret=None`` = backend-detected (compiled on TPU, else interpret).
+
+    Returns (values (N, V) f32, erased (N, 1) f32) after ``iters`` rounds.
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    V = values.shape[1]
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, iters=iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, N), lambda j: (0, 0)),  # H: resident, reused over j
+            pl.BlockSpec((N, bv), lambda j: (0, j)),  # payload slice
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),   # initial erasure mask
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            # every grid step recomputes the identical erasure trajectory and
+            # rewrites the same block — benign (sequential grid on TPU).
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
         ],
         interpret=interpret,
     )(H, values, erased_f)

@@ -1,5 +1,16 @@
-"""jit'd wrapper: padding, kernel invocation, and the scatter epilogue that
-turns the fused check-node pass into a full peeling round / D-round decode."""
+"""jit'd wrappers around the ldpc_peel kernels.
+
+* :func:`peel_round_pallas` — one flooding round (``check_pass`` kernel +
+  host-side scatter epilogue), kept for per-round experimentation/tests;
+* :func:`peel_decode_pallas` — the fused path: pad ONCE, run the whole
+  fixed-``D`` decode inside a single ``pallas_call`` (H resident in VMEM
+  across rounds, scatter epilogue fused in-kernel), unpad once.  This is
+  what ``repro.core.decoder.peel_decode(..., backend="pallas")`` calls.
+
+``interpret`` defaults to ``None`` = backend-detected: compiled on TPU,
+interpret mode elsewhere (CPU CI runs the same kernel code path, slowly but
+bit-faithfully).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,7 +18,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ldpc_peel.kernel import check_pass
+from repro.kernels.ldpc_peel.kernel import (
+    check_pass,
+    decode_fused,
+    detect_interpret,
+)
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas"]
 
@@ -22,10 +37,8 @@ def _pad_to(x, m, axis):
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
-def peel_round_pallas(H, values, erased, *, interpret: bool = True,
-                      bp: int = 128, bv: int = 128):
-    """One flooding round. H (p,N) f32; values (N,) or (N,V); erased (N,) bool.
-    Returns (values, erased) updated — same contract as decoder.peel_round."""
+def _peel_round_impl(H, values, erased, *, interpret: bool,
+                     bp: int = 128, bv: int = 128):
     squeeze = values.ndim == 1
     vals = values[:, None] if squeeze else values
     N = vals.shape[0]
@@ -52,9 +65,48 @@ def peel_round_pallas(H, values, erased, *, interpret: bool = True,
     return out_vals, out_erased
 
 
-def peel_decode_pallas(H, values, erased, iters: int, *, interpret: bool = True):
-    """Fixed-D decode via the Pallas round (python loop: D is small)."""
-    for _ in range(iters):
-        values, erased = peel_round_pallas(H, values, erased,
-                                           interpret=interpret)
-    return values, erased
+def peel_round_pallas(H, values, erased, *, interpret: bool | None = None,
+                      bp: int = 128, bv: int = 128):
+    """One flooding round. H (p,N) f32; values (N,) or (N,V); erased (N,) bool.
+    Returns (values, erased) updated — same contract as decoder.peel_round."""
+    return _peel_round_impl(H, values, erased,
+                            interpret=detect_interpret(interpret),
+                            bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret", "bv"))
+def _peel_decode_impl(H, values, erased, *, iters: int, interpret: bool,
+                      bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+    p = H.shape[0]
+
+    # Pad ONCE for the whole decode (the old path re-padded every round):
+    # N → multiple of 128 (lanes), p → multiple of 8 (sublanes),
+    # V → multiple of bv (payload tile).
+    Hp = _pad_to(_pad_to(H.astype(jnp.float32), 8, 0), 128, 1)
+    vp = _pad_to(_pad_to(vals.astype(jnp.float32), 128, 0), bv, 1)
+    ep = _pad_to(erased.astype(jnp.float32)[:, None], 128, 0)
+    # Padded coordinates are "known" zeros on zero H columns / rows: they are
+    # never counted, never solvable, never written.
+
+    out_v, out_e = decode_fused(Hp, vp, ep, iters=iters,
+                                bv=min(bv, vp.shape[1]), interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_pallas(H, values, erased, iters: int, *,
+                       interpret: bool | None = None, bv: int = 128):
+    """Fixed-D decode in ONE kernel launch (no per-round relaunch/re-pad).
+
+    H (p, N) f32; values (N,) or (N, V); erased (N,) bool.  Returns
+    (values, erased) after exactly ``iters`` flooding rounds — same contract
+    as ``decoder.peel_decode`` restricted to fixed D.
+    """
+    return _peel_decode_impl(H, values, erased, iters=int(iters),
+                             interpret=detect_interpret(interpret), bv=bv)

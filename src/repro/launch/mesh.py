@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "make_abstract_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +22,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (reduced integration tests use e.g. (2, 2))."""
     return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free AbstractMesh, across JAX signature changes.
+
+    Older JAX (≤ 0.4.x) takes ``AbstractMesh(((name, size), ...))``; newer
+    JAX takes ``AbstractMesh(axis_sizes, axis_names)``.  Passing the new
+    calling convention to the old constructor dies with
+    ``TypeError: 'int' object is not iterable`` — this helper accepts the
+    new-style ``(shape, axes)`` pair and dispatches to whichever the
+    installed JAX understands.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(shape, axes)  # JAX >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

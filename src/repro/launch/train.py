@@ -44,6 +44,9 @@ def main(argv=None):
     ap.add_argument("--n-shards", type=int, default=8)
     ap.add_argument("--straggler-q0", type=float, default=0.0)
     ap.add_argument("--decode-iters", type=int, default=8)
+    ap.add_argument("--decode-backend", default="auto",
+                    choices=["auto", "dense", "sparse", "pallas"],
+                    help="LDPC decode implementation (see core/decoder.py)")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--log-every", type=int, default=10)
@@ -63,6 +66,7 @@ def main(argv=None):
         opt=AdamWConfig(lr=args.lr),
         coded_agg=args.coded_agg, n_shards=args.n_shards,
         straggler_q0=args.straggler_q0, decode_iters=args.decode_iters,
+        decode_backend=args.decode_backend,
     )
     trainer = Trainer(model, tcfg)
     batches = batch_iterator(cfg, args.batch, args.seq)

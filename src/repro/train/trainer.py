@@ -45,6 +45,7 @@ class TrainerConfig:
     redundancy: float = 0.5
     row_weight: int = 4
     decode_iters: int = 8
+    decode_backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
     straggler_q0: float = 0.0
 
 
@@ -54,7 +55,8 @@ class Trainer:
         self.tcfg = tcfg
         self.agg = (CodedAggregator.build(
             tcfg.n_shards, redundancy=tcfg.redundancy,
-            row_weight=tcfg.row_weight, decode_iters=tcfg.decode_iters)
+            row_weight=tcfg.row_weight, decode_iters=tcfg.decode_iters,
+            decode_backend=tcfg.decode_backend)
             if tcfg.coded_agg else None)
         self.straggler = BernoulliStragglers(tcfg.straggler_q0)
         self._step_fn = self._build_step()

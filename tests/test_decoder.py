@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # dev-only dep: degrade to per-test skips when missing
+    from tests._hypothesis_compat import given, settings, st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.decoder import erased_after, peel_decode, peel_decode_adaptive
 from repro.core.ldpc import make_ldgm, make_regular_ldpc

@@ -1,0 +1,221 @@
+"""Decoder-backend parity: dense vs sparse vs fused-Pallas.
+
+The contract (see core/decoder.py's backend matrix): every backend makes
+bit-identical *decoding-trajectory* decisions — which checks are solvable,
+which coordinate each solvable check resolves, and therefore the exact
+erasure mask after every round — because solvability is an exact count of
+erased neighbours and all backends resolve the first-erased-column
+neighbour.  Decoded *values* agree up to f32 summation order (each backend
+accumulates a check's row sum in a different association), so values are
+compared with tight tolerances and, independently, against the true
+codeword on recovered coordinates.
+
+Shapes deliberately include non-multiples of 128 (the Pallas wrapper must
+pad once and unpad exactly), scalar ``(N,)`` payloads, wide ``(N, V)``
+payloads, and the all-erased / none-erased edge cases.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decoder import (
+    peel_decode,
+    peel_decode_adaptive,
+    peel_round,
+    peel_round_sparse,
+    resolve_backend,
+)
+from repro.core.ldpc import make_ldgm, make_regular_ldpc
+
+BACKENDS = ("dense", "sparse", "pallas")
+
+
+def _random_instance(code, *, V, q, seed):
+    rng = np.random.default_rng(seed)
+    msg = rng.standard_normal((code.K,) if V is None else (code.K, V))
+    cw = jnp.asarray(code.encode(msg), jnp.float32)
+    erased = jnp.asarray(rng.random(code.N) < q)
+    rx = jnp.where(erased if cw.ndim == 1 else erased[:, None], 0.0, cw)
+    return cw, rx, erased
+
+
+def _assert_backend_parity(code, cw, rx, erased, iters):
+    results = {
+        b: peel_decode(code, rx, erased, iters, backend=b) for b in BACKENDS
+    }
+    ref = results["dense"]
+    truth = np.asarray(cw)
+    # The decode itself has f32 cancellation error vs the true codeword
+    # (resolving values through chains of near-cancelling row sums); anchor
+    # the truth tolerance to the dense reference's own deviation so this
+    # stays a parity test, not a conditioning test.
+    ok_ref = ~np.asarray(ref.erased)
+    ref_dev = float(np.max(np.abs(np.asarray(ref.values)[ok_ref]
+                                  - truth[ok_ref]), initial=0.0))
+    truth_atol = max(5e-2, 3.0 * ref_dev)
+    for name, res in results.items():
+        # bit-for-bit: identical erasure trajectory endpoint & round count
+        np.testing.assert_array_equal(
+            np.asarray(res.erased), np.asarray(ref.erased),
+            err_msg=f"backend={name}: erasure mask diverged")
+        assert int(res.rounds_used) == iters
+        assert res.values.shape == cw.shape
+        # values: f32-summation-order agreement with the dense reference
+        np.testing.assert_allclose(
+            np.asarray(res.values), np.asarray(ref.values),
+            rtol=5e-2, atol=5e-2,
+            err_msg=f"backend={name}: values diverged from dense")
+        # and every recovered coordinate matches the true codeword
+        ok = ~np.asarray(res.erased)
+        got = np.asarray(res.values)
+        np.testing.assert_allclose(
+            got[ok], truth[ok], rtol=truth_atol, atol=truth_atol,
+            err_msg=f"backend={name}: recovered values != codeword")
+    return ref
+
+
+@pytest.mark.parametrize("K,V,q,seed", [
+    (20, None, 0.25, 0),     # the paper's (40, 20) code, scalar payload
+    (20, 3, 0.25, 1),        # tiny non-128 payload
+    (40, None, 0.35, 2),
+    (60, 8, 0.30, 3),        # N = 120: not a multiple of 128
+    (100, 7, 0.40, 4),       # odd everything
+    (128, 130, 0.30, 5),     # payload wider than one 128 tile
+    (256, 1, 0.20, 6),       # explicit V=1 (not squeezed)
+])
+def test_backends_agree_on_regular_codes(K, V, q, seed):
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    cw, rx, erased = _random_instance(code, V=V, q=q, seed=seed)
+    _assert_backend_parity(code, cw, rx, erased, iters=10)
+
+
+@pytest.mark.parametrize("l,r,K", [(3, 6, 48), (4, 8, 64), (3, 9, 90)])
+def test_backends_agree_across_degree_profiles(l, r, K):
+    code = make_regular_ldpc(K, l=l, r=r, seed=11)
+    cw, rx, erased = _random_instance(code, V=5, q=0.3, seed=13)
+    _assert_backend_parity(code, cw, rx, erased, iters=8)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_backends_agree_on_ldgm(seed):
+    code = make_ldgm(32, 16, row_weight=4, seed=seed)
+    cw, rx, erased = _random_instance(code, V=4, q=0.3, seed=seed + 50)
+    _assert_backend_parity(code, cw, rx, erased, iters=6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_none_erased_is_identity(backend):
+    code = make_regular_ldpc(40, l=3, r=6, seed=0)
+    cw, rx, _ = _random_instance(code, V=None, q=0.0, seed=0)
+    res = peel_decode(code, rx, jnp.zeros(code.N, bool), 5, backend=backend)
+    assert not bool(res.erased.any())
+    np.testing.assert_array_equal(np.asarray(res.values), np.asarray(cw))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_erased_stays_erased(backend):
+    code = make_regular_ldpc(40, l=3, r=6, seed=0)
+    erased = jnp.ones(code.N, bool)
+    rx = jnp.zeros((code.N,), jnp.float32)
+    res = peel_decode(code, rx, erased, 5, backend=backend)
+    # no check ever has exactly one erased neighbour (r >= 2): nothing moves
+    assert bool(res.erased.all())
+    np.testing.assert_array_equal(np.asarray(res.values), np.asarray(rx))
+
+
+def test_single_round_sparse_matches_dense_exactly_on_mask():
+    """Round-level check, not just the D-round endpoint."""
+    code = make_regular_ldpc(64, l=3, r=6, seed=7)
+    rng = np.random.default_rng(7)
+    cw = jnp.asarray(code.encode(rng.standard_normal((64, 4))), jnp.float32)
+    erased = jnp.asarray(rng.random(code.N) < 0.3)
+    rx = jnp.where(erased[:, None], 0.0, cw)
+    H = jnp.asarray(code.H, jnp.float32)
+    v_d, e_d = rx, erased
+    v_s, e_s = rx, erased
+    idx = jnp.asarray(code.check_idx)
+    coeff = jnp.asarray(code.check_coeff)
+    for _ in range(6):
+        v_d, e_d = peel_round(H, jnp.asarray(code.H_mask), v_d, e_d)
+        v_s, e_s = peel_round_sparse(idx, coeff, v_s, e_s)
+        np.testing.assert_array_equal(np.asarray(e_d), np.asarray(e_s))
+        np.testing.assert_allclose(np.asarray(v_d), np.asarray(v_s),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_adaptive_sparse_matches_dense_rounds():
+    code = make_regular_ldpc(100, l=3, r=6, seed=9)
+    cw, rx, erased = _random_instance(code, V=None, q=0.25, seed=9)
+    d = peel_decode_adaptive(code, rx, erased, backend="dense")
+    s = peel_decode_adaptive(code, rx, erased, backend="sparse")
+    assert int(d.rounds_used) == int(s.rounds_used)
+    np.testing.assert_array_equal(np.asarray(d.erased), np.asarray(s.erased))
+    np.testing.assert_allclose(np.asarray(d.values), np.asarray(s.values),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_decode_is_one_kernel_launch():
+    """The whole fixed-D pallas decode must be a SINGLE pallas_call — the
+    per-round relaunch (D launches, D re-pads) is exactly what this PR
+    removed."""
+    from repro.kernels.ldpc_peel.ops import _peel_decode_impl
+
+    code = make_regular_ldpc(40, l=3, r=6, seed=0)
+    H = jnp.asarray(code.H, jnp.float32)
+    v = jnp.zeros((code.N, 4), jnp.float32)
+    e = jnp.zeros((code.N,), bool)
+    fn = _peel_decode_impl.__wrapped__  # un-jitted impl
+    jaxpr = jax.make_jaxpr(
+        lambda H, v, e: fn(H, v, e, iters=10, interpret=True))(H, v, e)
+    assert str(jaxpr).count("pallas_call") == 1
+
+
+def test_neighbor_table_invariants():
+    for code in (make_regular_ldpc(64, l=3, r=6, seed=1),
+                 make_ldgm(32, 16, row_weight=4, seed=1)):
+        idx, coeff = code.check_idx, code.check_coeff
+        p = code.p
+        assert idx.shape == coeff.shape and idx.shape[0] == p
+        assert idx.dtype == np.int32 and coeff.dtype == np.float32
+        mask = code.H != 0.0
+        r_max = idx.shape[1]
+        assert r_max == int(mask.sum(axis=1).max())
+        for i in range(p):
+            cols = np.flatnonzero(mask[i])
+            assert (idx[i, : cols.size] == cols).all()          # ascending
+            assert (idx[i, cols.size:] == code.N).all()         # sentinel pad
+            np.testing.assert_array_equal(coeff[i, : cols.size],
+                                          code.H[i, cols].astype(np.float32))
+            assert (coeff[i, cols.size:] == 0.0).all()
+
+
+def test_resolve_backend_matrix():
+    code = make_regular_ldpc(20, l=3, r=6, seed=0)       # N = 40 (small)
+    big = make_regular_ldpc(256, l=3, r=6, seed=0)       # N = 512
+    on_cpu = jax.default_backend() != "tpu"
+    if on_cpu:
+        assert resolve_backend("auto", code) == "dense"
+        assert resolve_backend("auto", big) == "sparse"
+    for b in ("dense", "sparse", "pallas"):
+        assert resolve_backend(b, code) == b
+    # adaptive never yields the fixed-D-only pallas kernel
+    assert resolve_backend("pallas", code, adaptive=True) == "sparse"
+    # raw (H, Hb) tuples: dense only
+    tup = (jnp.asarray(code.H, jnp.float32), jnp.asarray(code.H_mask))
+    assert resolve_backend("auto", tup) == "dense"
+    with pytest.raises(ValueError):
+        resolve_backend("sparse", tup)
+    with pytest.raises(ValueError):
+        resolve_backend("nope", code)
+
+
+def test_tuple_code_still_decodes_dense():
+    """Back-compat: callers passing raw (H, Hb) keep working via dense."""
+    code = make_regular_ldpc(40, l=3, r=6, seed=2)
+    cw, rx, erased = _random_instance(code, V=None, q=0.25, seed=2)
+    ref = peel_decode(code, rx, erased, 8, backend="dense")
+    tup = (jnp.asarray(code.H, jnp.float32), jnp.asarray(code.H_mask))
+    got = peel_decode(tup, rx, erased, 8)
+    np.testing.assert_array_equal(np.asarray(got.erased), np.asarray(ref.erased))
+    np.testing.assert_array_equal(np.asarray(got.values), np.asarray(ref.values))

@@ -42,16 +42,12 @@ def test_param_shardings_divisibility():
     """Every generated spec must divide its dimension (the rule that makes
     all 40 x 2 combinations lower)."""
     from repro.configs import get_config
+    from repro.launch.mesh import make_abstract_mesh
     from repro.models import Model
     from repro.sharding import make_param_shardings
-    from jax.sharding import Mesh
-    import numpy as np
 
-    mesh_devices = np.array(jax.devices()[:1] * 256).reshape(16, 16) \
-        if len(jax.devices()) >= 256 else None
-    # build an abstract mesh instead: use jax.sharding.AbstractMesh
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # device-free abstract mesh (signature-compat across JAX versions)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
 
     for name in ("qwen3-1.7b", "qwen2-1.5b", "kimi-k2-1t-a32b", "rwkv6-3b",
                  "whisper-medium"):

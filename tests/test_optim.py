@@ -3,8 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+try:  # dev-only dep: degrade to per-test skips when missing
+    from tests._hypothesis_compat import given, settings, st, hnp
+except ImportError:
+    from _hypothesis_compat import given, settings, st, hnp
 
 from repro.core.straggler import (
     AdversarialStragglers,
