@@ -1,0 +1,77 @@
+"""CI gate: fail on batched-decode regression vs the committed
+``BENCH_decoder_scaling.json`` baseline.
+
+The gated quantity is ``speedup_vs_sequential`` — the batched launch's
+per-query advantage over B sequential single-pattern decodes, where BOTH
+sides are measured in the SAME benchmark run on the SAME machine.  Gating
+that ratio (rather than absolute per-query microseconds) makes the check
+hardware-independent: a CI runner that is uniformly slower than the machine
+that produced the committed baseline shifts both numerator and denominator
+and leaves the ratio alone, while a code change that erodes the batching
+win moves the ratio directly.
+
+Every (mode, N, B, D) batched_scaling record present in both files is
+compared; the run fails if any fresh speedup drops more than ``--tol``
+(relative) below the baseline's.  Interpret-mode Pallas records are skipped
+(interpret-mode latency is not a tracked quantity).  Absolute per-query
+times are printed for context but never gate.
+
+  python benchmarks/check_regression.py \
+      --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _batched_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("batched_scaling", []):
+        if rec["mode"].startswith("batched") and not rec.get("interpret_mode"):
+            out[(rec["mode"], rec["N"], rec["B"], rec["D"])] = rec
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, type=Path)
+    ap.add_argument("--new", required=True, type=Path)
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed relative drop in speedup_vs_sequential "
+                         "(default 25%%)")
+    args = ap.parse_args(argv)
+
+    base = _batched_records(args.baseline)
+    new = _batched_records(args.new)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        print("check_regression: no overlapping batched records — nothing "
+              "to compare (did the sweep configs diverge?)")
+        return 1
+
+    failed = False
+    for key in shared:
+        sb = base[key]["speedup_vs_sequential"]
+        sn = new[key]["speedup_vs_sequential"]
+        ratio = sn / sb if sb > 0 else float("inf")
+        status = "OK"
+        if ratio < 1.0 - args.tol:
+            status, failed = "REGRESSION", True
+        print(f"  {key}: speedup {sb:6.2f}x -> {sn:6.2f}x ({ratio:5.2f} of "
+              f"baseline)  [{base[key]['per_query_us']:8.1f} -> "
+              f"{new[key]['per_query_us']:8.1f} us/q]  {status}")
+    if failed:
+        print(f"check_regression: FAILED (batching speedup dropped >"
+              f"{args.tol:.0%} vs committed baseline)")
+        return 2
+    print(f"check_regression: all {len(shared)} batched records within "
+          f"{args.tol:.0%} of baseline speedup")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,11 +8,15 @@ Sections:
      fixed-D decode latency at growing N, with achieved FLOP/s.  Emits the
      machine-readable ``BENCH_decoder_scaling.json`` (repo root by default)
      so the perf trajectory is comparable across PRs.
-  2. the adaptive peeling decoder's round count AND cost track the number of
+  2. batched decode over B INDEPENDENT erasure patterns (the engine's
+     serving axis): per-query cost of one batched launch (vmapped-sparse /
+     batched-Pallas) vs B sequential single-pattern decodes, B ∈
+     {1, 8, 64, 256}.
+  3. the adaptive peeling decoder's round count AND cost track the number of
      realized stragglers (few stragglers -> 1-2 rounds -> "decoding effort
      auto-adjusts");
-  3. decode quality (|unresolved|) is monotone in the fixed round budget D;
-  4. LDPC peeling cost vs MDS/Vandermonde least-squares recovery cost — the
+  4. decode quality (|unresolved|) is monotone in the fixed round budget D;
+  5. LDPC peeling cost vs MDS/Vandermonde least-squares recovery cost — the
      paper's low-complexity-decode argument (O(edges) vs O(w·K²) flops).
 """
 from __future__ import annotations
@@ -27,7 +31,7 @@ import numpy as np
 
 from benchmarks.common import print_table
 from repro.core import FixedCountStragglers, make_regular_ldpc, peel_decode, \
-    peel_decode_adaptive
+    peel_decode_adaptive, peel_decode_batch
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
 
@@ -102,6 +106,71 @@ def run_backend_scaling(*, Ks=(64, 256, 512, 1024, 2048), V=8, D=8, q=0.25,
     return rows, records
 
 
+def run_batched_scaling(*, Ks=(64, 256, 1024), Bs=(1, 8, 64, 256), D=8,
+                        q=0.25, reps=5):
+    """Per-query cost: ONE batched decode of B patterns vs B sequential
+    single-pattern decodes (same backend — the honest baseline is the
+    FASTEST single-pattern decode, i.e. sparse).  The batched-sparse mode is
+    the scatter-free batch-major round (``peel_round_sparse_batch``); the
+    batched-Pallas mode is the one-launch grid-over-batch kernel (interpret
+    mode off-TPU, so it is only timed at small N there).  Returns
+    (table_rows, json_records); ``speedup_vs_sequential`` is vs
+    sequential-sparse.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    rows, records = [], []
+    for K in Ks:
+        code = make_regular_ldpc(K, l=3, r=6, seed=0)
+        N = code.N
+        rng = np.random.default_rng(K)
+        for B in Bs:
+            msgs = rng.standard_normal((B, K))
+            cw = jnp.asarray((code.G @ msgs.T).T, jnp.float32)  # (B, N)
+            erased = jnp.asarray(rng.random((B, N)) < q)
+            rx = jnp.where(erased, 0.0, cw)
+
+            # sequential baseline: B separate single-pattern launches
+            single = jax.jit(
+                lambda v, e: peel_decode(code, v, e, D, backend="sparse").values)
+            single(rx[0], erased[0]).block_until_ready()  # compile
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for i in range(B):
+                    single(rx[i], erased[i]).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            t_seq = float(np.median(ts))
+
+            modes = {"batched-sparse": "sparse"}
+            if on_tpu or N <= _PALLAS_CPU_MAX_N:
+                modes["batched-pallas"] = "pallas"
+            t_per_mode = {}
+            for mode, backend in modes.items():
+                fn = jax.jit(lambda v, e, b=backend: peel_decode_batch(
+                    code, v, e, D, backend=b).values)
+                t_per_mode[mode] = _median_seconds(
+                    lambda v, e: (fn(v, e),), rx, erased, reps=reps)
+
+            base = {"N": N, "K": K, "B": B, "D": D, "erasure_q": q,
+                    "jax_backend": jax.default_backend()}
+            records.append({**base, "mode": "sequential-sparse",
+                            "median_s": t_seq,
+                            "per_query_us": t_seq / B * 1e6,
+                            "speedup_vs_sequential": 1.0,
+                            "interpret_mode": False})
+            rows.append([N, K, B, "sequential-sparse",
+                         f"{t_seq / B * 1e6:.0f}", "1.00x"])
+            for mode, t in t_per_mode.items():
+                records.append({**base, "mode": mode, "median_s": t,
+                                "per_query_us": t / B * 1e6,
+                                "speedup_vs_sequential": t_seq / t,
+                                "interpret_mode": mode == "batched-pallas"
+                                and not on_tpu})
+                rows.append([N, K, B, mode, f"{t / B * 1e6:.0f}",
+                             f"{t_seq / t:.2f}x"])
+    return rows, records
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -153,13 +222,24 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
                 ["N", "K", "backend", "decode_us", "round_us",
                  "achieved_GFLOP/s", "speedup"], brows)
 
-    # 2+4. adaptivity & vs-lstsq
+    # 2. batched decode over independent erasure patterns (serving axis)
+    # K=64 (N=128) exists so the batched-Pallas kernel is exercised off-TPU
+    # too (interpret mode, small N only — see _PALLAS_CPU_MAX_N).
+    batch_rows, batch_records = run_batched_scaling(
+        Ks=(1024,) if quick else (64, 256, 1024),
+        Bs=(1, 64) if quick else (1, 8, 64, 256),
+        reps=3 if quick else 5)
+    print_table("Batched decode — B independent erasure patterns, one launch",
+                ["N", "K", "B", "mode", "per_query_us", "speedup_vs_seq"],
+                batch_rows)
+
+    # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
                 ["N", "K", "s", "rounds", "unresolved",
                  "ldpc_us", "lstsq_us", "speedup"], rows)
 
-    # 3. D-monotonicity (Remark 3)
+    # 4. D-monotonicity (Remark 3)
     code = make_regular_ldpc(256, l=3, r=6, seed=1)
     rng = np.random.default_rng(1)
     erased = jnp.asarray(rng.random(code.N) < 0.25)
@@ -171,10 +251,11 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
     out = {
         "benchmark": "decoder_scaling",
-        "schema_version": 1,
+        "schema_version": 2,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
+        "batched_scaling": batch_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows

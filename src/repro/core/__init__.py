@@ -1,9 +1,16 @@
 """The paper's primary contribution: LDPC moment-encoded robust gradient descent."""
 from repro.core.ldpc import LDPCCode, make_regular_ldpc, make_ldgm
-from repro.core.decoder import peel_decode, peel_decode_adaptive, DecodeResult
+from repro.core.decoder import (
+    peel_decode,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    DecodeResult,
+)
+from repro.core.engine import CodedComputeEngine, blocked_epilogue
 from repro.core.density_evolution import qd_sequence, q_final, threshold
 from repro.core.encoding import Moments, second_moment, encode_moment, encode_moment_blocks
 from repro.core.coded_step import Scheme1, Scheme2, Scheme2Blocked, run_pgd, RunResult
+from repro.core.schemes import Scheme, scheme_registry
 from repro.core.straggler import (
     BernoulliStragglers,
     FixedCountStragglers,
@@ -11,13 +18,17 @@ from repro.core.straggler import (
     DelayModel,
 )
 from repro.core.grad_agg import CodedAggregator, flatten_grads
+from repro.core.padding import pad_axis_to, pad_blocks
 
 __all__ = [
     "LDPCCode", "make_regular_ldpc", "make_ldgm",
-    "peel_decode", "peel_decode_adaptive", "DecodeResult",
+    "peel_decode", "peel_decode_adaptive", "peel_decode_batch", "DecodeResult",
+    "CodedComputeEngine", "blocked_epilogue",
     "qd_sequence", "q_final", "threshold",
     "Moments", "second_moment", "encode_moment", "encode_moment_blocks",
     "Scheme1", "Scheme2", "Scheme2Blocked", "run_pgd", "RunResult",
+    "Scheme", "scheme_registry",
     "BernoulliStragglers", "FixedCountStragglers", "AdversarialStragglers", "DelayModel",
     "CodedAggregator", "flatten_grads",
+    "pad_axis_to", "pad_blocks",
 ]

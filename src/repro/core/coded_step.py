@@ -8,6 +8,15 @@ Scheme 2 (the main contribution) per step ``t``:
   4. zero-fill:         ĉ (and b̂) zeroed on U_t
   5. update:            θ_t = P_Θ(θ_{t-1} - η (ĉ_{1:k} - b̂))
 
+Steps 2–4 are exactly the :class:`repro.core.engine.CodedComputeEngine`
+pipeline (erase → decode → epilogue); the schemes here are thin clients
+that own the encoded operator ``C`` / moment vector ``b`` and the update
+rule, and delegate everything code-related to the engine.  The engine's
+batch axis also gives Scheme 2 a batched query path
+(:meth:`Scheme2.gradient_batch`): B concurrent (θ, straggler-mask) queries,
+one decode launch — the serving primitive behind
+:mod:`repro.serving.coded_queries`.
+
 Under Assumption 1 this is PSGD with an unbiased (1-q_D)-scaled gradient
 (Lemma 1) and converges at RB/((1-q_D)√T) (Theorem 1).  An optional
 ``debias`` flag divides the estimate by (1-q_D) — a beyond-paper knob that
@@ -17,15 +26,14 @@ effective learning rate instead).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import density_evolution
-from repro.core.decoder import peel_decode, peel_decode_adaptive
 from repro.core.encoding import Moments, encode_moment, encode_moment_blocks
+from repro.core.engine import CodedComputeEngine, blocked_epilogue
 from repro.core.ldpc import LDPCCode
 from repro.optim import projections
 
@@ -62,28 +70,45 @@ class Scheme2:
     def w(self) -> int:
         return self.code.N
 
+    @property
+    def engine(self) -> CodedComputeEngine:
+        return CodedComputeEngine(self.code, decode_iters=self.decode_iters,
+                                  backend=self.decode_backend,
+                                  adaptive=self.adaptive)
+
     def worker_mask_to_erasure(self, mask: jax.Array) -> jax.Array:
         return mask  # N == w: row j <-> worker j
 
+    def _debias(self, g: jax.Array) -> jax.Array:
+        if not self.debias:
+            return g
+        qD = density_evolution.q_final(
+            self.q0_for_debias, self.code.l, self.code.r, self.decode_iters
+        )
+        return g / max(1.0 - qD, 1e-6)
+
     def gradient(self, theta: jax.Array, straggler_mask: jax.Array):
         """Return (approx gradient, |U_t|)."""
-        k = self.code.K
         z = self.C @ theta  # (N,) worker inner products (codeword of C)
         erased = self.worker_mask_to_erasure(straggler_mask)
-        z = jnp.where(erased, 0.0, z)
-        dec = (peel_decode_adaptive if self.adaptive else peel_decode)(
-            self.code, z, erased, self.decode_iters, backend=self.decode_backend
-        )
-        unresolved = dec.erased[:k]
-        c_hat = jnp.where(unresolved, 0.0, dec.values[:k])
+        c_hat, unresolved = self.engine.recover(z, erased)
         b_hat = jnp.where(unresolved, 0.0, self.b)
-        g = c_hat - b_hat
-        if self.debias:
-            qD = density_evolution.q_final(
-                self.q0_for_debias, self.code.l, self.code.r, self.decode_iters
-            )
-            g = g / max(1.0 - qD, 1e-6)
-        return g, unresolved.sum()
+        return self._debias(c_hat - b_hat), unresolved.sum()
+
+    def gradient_batch(self, theta_B: jax.Array, straggler_mask_B: jax.Array):
+        """B concurrent queries (θ_b, mask_b) → (B, k) gradients, ONE decode.
+
+        Each query carries its own straggler realization; the worker-product
+        matvecs fuse into one (B, k) @ (k, N) matmul and the B peeling
+        decodes run as a single batched launch
+        (:meth:`CodedComputeEngine.decode_batch`).  Per-query results match
+        :meth:`gradient` run separately.
+        """
+        Z = theta_B @ self.C.T  # (B, N)
+        erased_B = jax.vmap(self.worker_mask_to_erasure)(straggler_mask_B)
+        c_hat, unresolved = self.engine.recover_batch(Z, erased_B)
+        b_hat = jnp.where(unresolved, 0.0, self.b[None, :])
+        return self._debias(c_hat - b_hat), unresolved.sum(axis=1)
 
     def step(self, theta: jax.Array, straggler_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
         g, n_unresolved = self.gradient(theta, straggler_mask)
@@ -143,10 +168,11 @@ class Scheme2Blocked:
     worker j holds row j of every block (α = k/K rows) and returns α scalars.
 
     Because a straggler erases the same coordinate of EVERY block's codeword,
-    all k/K codewords share one erasure pattern — the decode is one batched
-    peeling pass with payload width k/K (the decoder is payload-batched).
-    This is the configuration of the paper's experiments: a (40, 20) code
-    with k ∈ {200, ..., 2000}.
+    all k/K codewords share one erasure pattern — the decode is one
+    payload-batched peeling pass with payload width k/K (the engine's V
+    axis, orthogonal to its B axis of independent patterns).  This is the
+    configuration of the paper's experiments: a (40, 20) code with
+    k ∈ {200, ..., 2000}.
     """
 
     code: LDPCCode
@@ -166,20 +192,19 @@ class Scheme2Blocked:
     def w(self) -> int:
         return self.code.N
 
+    @property
+    def engine(self) -> CodedComputeEngine:
+        return CodedComputeEngine(self.code, decode_iters=self.decode_iters,
+                                  backend=self.decode_backend)
+
     def gradient(self, theta: jax.Array, straggler_mask: jax.Array):
-        K = self.code.K
+        eng = self.engine
         nb = self.C_blocks.shape[0]
         Z = jnp.einsum("bnk,k->nb", self.C_blocks, theta)  # (N, k/K)
-        Z = jnp.where(straggler_mask[:, None], 0.0, Z)
-        dec = peel_decode(self.code, Z, straggler_mask, self.decode_iters,
-                          backend=self.decode_backend)
-        unresolved_rows = dec.erased[:K]             # same for every block
-        c_hat = jnp.where(unresolved_rows[:, None], 0.0, dec.values[:K])  # (K, nb)
-        # block b's rows are M[b*K:(b+1)*K] -> flat coordinate j = b*K + r
-        c_flat = c_hat.T.reshape(-1)                 # (k,)
-        unresolved_flat = jnp.tile(unresolved_rows, nb)
-        b_hat = jnp.where(unresolved_flat, 0.0, self.b)
-        return c_flat - b_hat, unresolved_flat.sum()
+        dec = eng.decode(eng.erase(Z, straggler_mask), straggler_mask)
+        g, unresolved_flat = blocked_epilogue(dec.values, dec.erased, self.b,
+                                              K=self.code.K, nb=nb)
+        return g, unresolved_flat.sum()
 
     def step(self, theta, straggler_mask):
         g, aux = self.gradient(theta, straggler_mask)
@@ -196,7 +221,8 @@ def run_pgd(
     theta_star: jax.Array | None = None,
     loss_fn: Callable[[jax.Array], jax.Array] | None = None,
 ) -> RunResult:
-    """Generic driver: sample straggler mask, take a coded step, track error.
+    """Generic driver over any :class:`repro.core.schemes.Scheme`: sample a
+    straggler mask, take a coded step, track error.
 
     Jit-compiled as a single ``lax.scan`` over steps — the whole optimization
     trajectory runs on-device.

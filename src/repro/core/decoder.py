@@ -7,45 +7,59 @@ of rounds ``D`` is exactly the paper's decoding-iteration knob — the quality
 of the recovered gradient is monotone in ``D`` (Remark 3).
 
 Backend matrix (``backend=`` on :func:`peel_decode` /
-:func:`peel_decode_adaptive`):
+:func:`peel_decode_adaptive` / :func:`peel_decode_batch`):
 
 =========  ==================================================================
 backend    what runs
 =========  ==================================================================
 "dense"    the original reference: three dense ``H``-structured ops per
            round (mask matvec, matmul, argmax) — O(p·N·V) work.  Always
-           available, including for raw ``(H, Hb)`` tuples.
+           available, including for raw ``(H, Hb)`` tuples.  Batched decode
+           vmaps the whole fixed-D loop over the pattern axis.
 "sparse"   gathers over the code's padded neighbor table
            (``LDPCCode.check_idx`` / ``check_coeff``) — O(p·r_max·V) work,
            i.e. proportional to the Tanner-graph edge count, the complexity
            the paper's low-cost-decoding argument assumes.  Requires an
-           :class:`LDPCCode` (the table is built at construction).
-"pallas"   the fused one-kernel decode
-           (:func:`repro.kernels.ldpc_peel.peel_decode_pallas`): the whole
-           fixed-``D`` loop runs inside a single ``pallas_call`` with ``H``
+           :class:`LDPCCode` (the table is built at construction).  Batched
+           decode vmaps the loop with the neighbor table broadcast (loaded
+           once, shared across all B patterns).
+"pallas"   the fused one-kernel decodes (:mod:`repro.kernels.ldpc_peel`):
+           the whole decode runs inside a single ``pallas_call`` with ``H``
            resident in VMEM — no per-round kernel relaunch or re-padding.
-           Fixed-``D`` only; ``peel_decode_adaptive`` maps it to "sparse".
-           Runs in interpret mode off-TPU (correct but not fast on CPU).
+           Fixed-D (``peel_decode``), early-exit adaptive
+           (``peel_decode_adaptive``: in-kernel while_loop on the
+           unresolved count), and batched (``peel_decode_batch``: grid over
+           the B independent erasure patterns with the H tile shared across
+           the batch) are each ONE launch.  Runs in interpret mode off-TPU
+           (correct but not fast on CPU).
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
            large codes off-TPU; "pallas" on TPU when the kernel's whole
            working set fits comfortably in VMEM (N ≤ 512), else "sparse".
+           The same rule applies on the batch axis (the batched kernel's
+           per-step working set matches the single-pattern kernel's).
 =========  ==================================================================
 
 All backends follow bit-identical erasure trajectories (solvability is an
 exact count of erased neighbours, and every backend resolves the same
 first-erased-column neighbour per check); decoded values agree up to f32
-summation order.
+summation order.  The batched entry point decodes each pattern exactly as
+the single-pattern entry point would — ``decode_batch`` of B patterns and a
+Python loop of B ``decode`` calls land on the same trajectories.
 
 The decoder is fully ``jit``-able (fixed ``D`` → ``lax.fori_loop``;
 adaptive → ``lax.while_loop`` with early exit) and batched over symbol
 payloads: ``values`` may be ``(N,)`` scalars (the paper's inner products) or
 ``(N, V)`` vectors (coded gradient aggregation, where each symbol is a chunk
-of a partial gradient).
+of a partial gradient).  :func:`peel_decode_batch` adds the second,
+orthogonal batch axis — B *independent erasure patterns* decoded in one
+launch, the serving-side concurrency axis (many coded queries, each with its
+own straggler realization).
 
 Erased coordinates that remain unresolved are left as-is in ``values`` but
 flagged in the returned mask; callers zero-fill per the paper's Scheme 2
 (both ``ĉ`` and ``b̂`` are zeroed on the unresolved set so the estimate stays
-an unbiased scaled gradient — Lemma 1).
+an unbiased scaled gradient — Lemma 1).  The encode→erase→decode→epilogue
+composition lives one layer up in :mod:`repro.core.engine`.
 """
 from __future__ import annotations
 
@@ -62,8 +76,12 @@ __all__ = [
     "DecodeResult",
     "peel_round",
     "peel_round_sparse",
+    "peel_round_sparse_batch",
+    "peel_fixed_dense",
+    "peel_fixed_sparse",
     "peel_decode",
     "peel_decode_adaptive",
+    "peel_decode_batch",
     "erased_after",
     "resolve_backend",
 ]
@@ -83,8 +101,8 @@ _AUTO_PALLAS_MAX_N = 512
 
 
 class DecodeResult(NamedTuple):
-    values: jax.Array  # (N,) or (N, V); decoded where possible
-    erased: jax.Array  # (N,) bool; True where still unresolved
+    values: jax.Array  # (N,) / (N, V); batched: (B, N) / (B, N, V)
+    erased: jax.Array  # (N,) bool (batched: (B, N)); True where unresolved
     rounds_used: jax.Array  # () int32 (== D for fixed-D decode)
 
 
@@ -99,7 +117,10 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False) -> str:
 
     See the module docstring for the matrix.  Raises on unknown names and on
     sparse/pallas requests for raw ``(H, Hb)`` tuples (no neighbor table).
+    Since the adaptive decode gained its own fused kernel (in-kernel
+    while_loop), ``adaptive`` no longer downgrades "pallas".
     """
+    del adaptive  # kept for call-site compatibility; all modes have kernels
     if backend not in BACKENDS:
         raise ValueError(f"unknown decode backend {backend!r}; want one of {BACKENDS}")
     is_code = isinstance(code, LDPCCode)
@@ -116,10 +137,6 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False) -> str:
             f"backend={backend!r} needs an LDPCCode (neighbor table); "
             "raw (H, Hb) tuples only support backend='dense'"
         )
-    if adaptive and backend == "pallas":
-        # The fused kernel is fixed-D by construction; the adaptive
-        # early-exit decode uses the sparse round instead.
-        backend = "sparse"
     return backend
 
 
@@ -154,7 +171,13 @@ def peel_round(
 
 
 @partial(jax.jit, static_argnames=("iters",))
-def _peel_fixed(H, Hb, values, erased, iters: int):
+def peel_fixed_dense(H, Hb, values, erased, iters: int):
+    """``iters`` dense flooding rounds as one jitted loop.
+
+    Operands are plain arrays (shardable / usable inside foreign jit
+    contexts — this is what the sharded launch steps call); ``values``
+    (N, V), ``erased`` (N,) bool.
+    """
     def body(_, carry):
         v, e = carry
         return peel_round(H, Hb, v, e)
@@ -204,7 +227,13 @@ def peel_round_sparse(
 
 
 @partial(jax.jit, static_argnames=("iters",))
-def _peel_fixed_sparse(check_idx, check_coeff, values, erased, iters: int):
+def peel_fixed_sparse(check_idx, check_coeff, values, erased, iters: int):
+    """``iters`` sparse (neighbor-table) flooding rounds as one jitted loop.
+
+    Operands are plain arrays (the table may be sharded over checks), so
+    launch-layer steps can call this inside their own jit with explicit
+    shardings; ``values`` (N, V), ``erased`` (N,) bool.
+    """
     def body(_, carry):
         v, e = carry
         return peel_round_sparse(check_idx, check_coeff, v, e)
@@ -237,7 +266,7 @@ def peel_decode(
     iters = int(iters)
     if backend == "sparse":
         idx, coeff = _tables(code)
-        v, e = _peel_fixed_sparse(idx, coeff, v, e, iters)
+        v, e = peel_fixed_sparse(idx, coeff, v, e, iters)
     elif backend == "pallas":
         from repro.kernels.ldpc_peel import peel_decode_pallas
 
@@ -245,10 +274,157 @@ def peel_decode(
         v, e = peel_decode_pallas(H, v, e, iters)
     else:
         H, Hb = _mats(code, v.dtype)
-        v, e = _peel_fixed(H, Hb, v, e, iters)
+        v, e = peel_fixed_dense(H, Hb, v, e, iters)
     if squeeze:
         v = v[:, 0]
     return DecodeResult(v, e, jnp.int32(iters))
+
+
+# ------------------------------------------------------------- batched axis
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _peel_fixed_dense_batch(H, Hb, values, erased, iters: int):
+    # vmap the whole fixed-D loop; H/Hb broadcast (loaded once, shared) and
+    # the per-round matvecs batch into (p, N) @ (N, B) GEMMs.
+    return jax.vmap(lambda v, e: peel_fixed_dense(H, Hb, v, e, iters))(
+        values, erased)
+
+
+def peel_round_sparse_batch(check_idx, check_coeff, var_idx, vb, eb):
+    """One flooding round for B independent erasure patterns, scatter-free.
+
+    Batch-minor layout: ``vb (N+1, B)`` values (one zero sentinel row),
+    ``eb (N+1, B)`` f32 0/1 erasure flags — neighbor gathers then move
+    contiguous B-length rows instead of B strided scalars.
+
+    Check side: a solvable check has EXACTLY one erased neighbour, so the
+    masked sums ``Σ idx·e`` / ``Σ coeff·e`` *are* its resolved index and
+    coefficient — exact in f32 (small integers / single surviving term), no
+    argmax, and bit-identical solvability decisions to
+    :func:`peel_round_sparse`.
+
+    Variable side: XLA's scatter is the slow op on CPU (~70 ns/element,
+    serialized); instead each variable GATHERS its ≤ l_max candidate
+    resolutions through the column table ``var_idx (N, l_max)``
+    (:attr:`LDPCCode.var_idx`) and keeps the lowest-row match.  Checks that
+    resolve the same coordinate write consistent values (parity checks of
+    one codeword), so the choice only pins f32 rounding.
+    """
+    N = vb.shape[0] - 1
+    dt = vb.dtype
+    ne = eb[check_idx]                              # (p, r_max, B)
+    nv = vb[check_idx]                              # (p, r_max, B)
+    cnt = ne.sum(axis=1)                            # (p, B) — exact counts
+    c3 = check_coeff.astype(dt)[:, :, None]
+    sums = (nv * (1.0 - ne) * c3).sum(axis=1)       # (p, B) known-neighbour
+    posf = (check_idx.astype(dt)[:, :, None] * ne).sum(axis=1)
+    coeff = (c3 * ne).sum(axis=1)
+    solvable = cnt == 1.0
+    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)
+    res_pos = jnp.where(solvable, posf.astype(jnp.int32), N)    # (p, B)
+
+    B = vb.shape[1]
+    rp_pad = jnp.concatenate([res_pos, jnp.full((1, B), N, jnp.int32)])
+    nv_pad = jnp.concatenate([new_val, jnp.zeros((1, B), dt)])
+    cand_pos = rp_pad[var_idx]                      # (N, l_max, B)
+    cand_val = nv_pad[var_idx]
+    me = jax.lax.broadcasted_iota(jnp.int32, cand_pos.shape, 0)
+    match = cand_pos == me                          # (N, l_max, B)
+    resolved = jnp.zeros((N, B), bool)
+    val = jnp.zeros((N, B), dt)
+    for t in range(match.shape[1]):                 # l_max is small & static
+        m = match[:, t]
+        val = jnp.where(m & ~resolved, cand_val[:, t], val)
+        resolved = resolved | m
+    vb = vb.at[:N].set(jnp.where(resolved, val, vb[:N]))
+    eb = eb.at[:N].set(jnp.where(resolved, 0.0, eb[:N]))
+    return vb, eb
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _peel_fixed_sparse_batch(check_idx, check_coeff, var_idx, values, erased,
+                             iters: int):
+    """values (B, N, V), erased (B, N) → fixed-D batch-major sparse decode.
+
+    The V payload axis rides along as extra batch lanes (each of the B
+    patterns is repeated V times), so one launch covers both axes.  Known
+    inefficiency: the check-side structure work (cnt/pos/coeff) is
+    recomputed per lane even though the V lanes of one pattern share a
+    trajectory — computing it once per pattern and broadcasting over V is a
+    follow-on for V-heavy batched workloads (serving queries are V=1).
+    """
+    B, N, V = values.shape
+    vb = jnp.transpose(values, (1, 0, 2)).reshape(N, B * V)
+    eb = jnp.repeat(erased.T.astype(values.dtype), V, axis=1)   # (N, B*V)
+    zrow = jnp.zeros((1, B * V), values.dtype)
+    vb = jnp.concatenate([vb, zrow])
+    eb = jnp.concatenate([eb, zrow])
+
+    def body(_, carry):
+        return peel_round_sparse_batch(check_idx, check_coeff, var_idx,
+                                       *carry)
+
+    vb, eb = jax.lax.fori_loop(0, iters, body, (vb, eb))
+    out_v = jnp.transpose(vb[:N].reshape(N, B, V), (1, 0, 2))
+    out_e = eb[:N].reshape(N, B, V)[:, :, 0].T > 0.0
+    return out_v, out_e
+
+
+def peel_decode_batch(
+    code: LDPCCode | tuple[jax.Array, jax.Array],
+    values: jax.Array,
+    erased: jax.Array,
+    iters: int,
+    *,
+    backend: str = "auto",
+) -> DecodeResult:
+    """Decode ``B`` INDEPENDENT erasure patterns in one launch.
+
+    ``values`` is ``(B, N)`` or ``(B, N, V)``; ``erased`` is ``(B, N)``
+    bool — one straggler realization per batch element.  Each element is
+    decoded exactly as :func:`peel_decode` would decode it alone (identical
+    trajectories); the batch axis only amortizes dispatch and keeps the
+    code's structure (H / neighbor table) loaded once:
+
+    * "dense" / "sparse": the fixed-D loop is ``vmap``-ed over the pattern
+      axis with the code operands broadcast;
+    * "pallas": ``peel_decode_batch_pallas`` — ONE ``pallas_call`` whose
+      grid runs over the batch with the H tile resident in VMEM and shared.
+
+    This is the serving primitive: many concurrent coded matvec/gradient
+    queries, each with its own straggler mask, one decode launch
+    (see :mod:`repro.serving.coded_queries`).
+    """
+    backend = resolve_backend(backend, code)
+    v = jnp.asarray(values)
+    if v.ndim not in (2, 3):
+        raise ValueError(f"batched values must be (B, N) or (B, N, V); "
+                         f"got shape {v.shape}")
+    squeeze = v.ndim == 2
+    if squeeze:
+        v = v[:, :, None]
+    e = jnp.asarray(erased, bool)
+    iters = int(iters)
+    if backend == "sparse":
+        idx, coeff = _tables(code)
+        v, e = _peel_fixed_sparse_batch(idx, coeff,
+                                        jnp.asarray(code.var_idx), v, e,
+                                        iters)
+    elif backend == "pallas":
+        from repro.kernels.ldpc_peel import peel_decode_batch_pallas
+
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e = peel_decode_batch_pallas(H, v, e, iters)
+    else:
+        H, Hb = _mats(code, v.dtype)
+        v, e = _peel_fixed_dense_batch(H, Hb, v, e, iters)
+    if squeeze:
+        v = v[:, :, 0]
+    return DecodeResult(v, e, jnp.int32(iters))
+
+
+# ----------------------------------------------------------------- adaptive
 
 
 @partial(jax.jit, static_argnames=("max_iters",))
@@ -297,7 +473,9 @@ def peel_decode_adaptive(
 
     This is the "decoding effort adapts to the number of stragglers" mode:
     with few erasures the loop exits after 1-2 rounds.  ``backend="pallas"``
-    falls back to "sparse" (the fused kernel is fixed-D only).
+    runs the early-exit loop INSIDE the fused kernel (one launch, in-kernel
+    while_loop on the unresolved count) — same trajectory and round count as
+    the dense/sparse while_loops.
     """
     backend = resolve_backend(backend, code, adaptive=True)
     if max_iters is None:
@@ -307,6 +485,11 @@ def peel_decode_adaptive(
     if backend == "sparse":
         idx, coeff = _tables(code)
         v, e, d = _peel_adaptive_sparse(idx, coeff, v, e, int(max_iters))
+    elif backend == "pallas":
+        from repro.kernels.ldpc_peel import peel_decode_adaptive_pallas
+
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e, d = peel_decode_adaptive_pallas(H, v, e, int(max_iters))
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))

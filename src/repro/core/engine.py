@@ -1,0 +1,182 @@
+"""Unified batched coded-compute engine: encode → erase → decode → epilogue.
+
+The paper's pipeline — encode moments with an LDPC code, lose coordinates to
+stragglers, peel-decode, zero-fill, update — used to be reimplemented in
+every consumer (``Scheme2``/``Scheme2Blocked``, ``CodedAggregator``, the
+launch-layer dry-run steps).  :class:`CodedComputeEngine` owns that pipeline
+ONCE, as composable jit-able stages, and every consumer is a thin client:
+
+======== ====================================================================
+stage    what it does
+======== ====================================================================
+encode   ``symbols = G @ payload`` — systematic codeword(s) of the payload
+         (the paper's offline moment encode, or per-step partial-gradient
+         encode for coded aggregation).
+erase    zero the straggled coordinates (workers that did not report).
+decode   the peeling decode via :mod:`repro.core.decoder`'s backend matrix
+         (dense / sparse neighbor-table / fused Pallas kernel), fixed-D or
+         adaptive early-exit.
+epilogue zero-fill the unresolved systematic coordinates (paper Scheme 2:
+         both ``ĉ`` and ``b̂`` zeroed on the unresolved set keeps the
+         gradient estimate an unbiased (1-q_D)-scaled gradient — Lemma 1).
+======== ====================================================================
+
+**The batch axis over independent erasure patterns is first-class**:
+:meth:`CodedComputeEngine.decode_batch` (and :meth:`recover_batch`) run B
+concurrent coded queries — each with its OWN straggler realization — in one
+launch, via a vmapped sparse/dense flooding loop or the batched fused Pallas
+kernel (grid over the batch, H resident in VMEM and shared).  This is the
+primitive that serves heavy concurrent coded traffic
+(:mod:`repro.serving.coded_queries`) and that every later scaling layer
+(sharded decode, async serving, multi-code support) builds on.
+
+The payload axis ``V`` (many codewords sharing ONE erasure pattern — the
+paper's blocked Scheme 2, where one straggler erases the same coordinate of
+every block) and the pattern axis ``B`` (many independent erasure patterns)
+are orthogonal; the engine exposes both.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decoder import (
+    DecodeResult,
+    peel_decode,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    resolve_backend,
+)
+from repro.core.ldpc import LDPCCode
+
+__all__ = ["CodedComputeEngine", "blocked_epilogue"]
+
+
+def blocked_epilogue(values: jax.Array, erased: jax.Array, b: jax.Array,
+                     *, K: int, nb: int) -> tuple[jax.Array, jax.Array]:
+    """Blocked-Scheme-2 epilogue: zero-fill + re-interleave + moment shift.
+
+    ``values (N, nb)`` / ``erased (N,)`` come out of a payload-batched
+    decode of ``nb`` blocks sharing one erasure pattern; block ``i`` holds
+    rows ``M[i*K:(i+1)*K]``, so flat coordinate ``j = i*K + r``.  Returns
+    ``(g, unresolved_flat)`` with ``g = ĉ - b̂`` the (k,) approximate
+    gradient (both ``ĉ`` and ``b̂`` zeroed on the unresolved set) and
+    ``unresolved_flat`` its (k,) bool unresolved mask.
+
+    Shared by :class:`repro.core.coded_step.Scheme2Blocked` and the sharded
+    launch-layer step builder (:func:`repro.launch.steps.build_coded_gd_step`)
+    so the epilogue exists exactly once.
+    """
+    unresolved = erased[:K]                              # same for all blocks
+    c_hat = jnp.where(unresolved[:, None], 0.0, values[:K])   # (K, nb)
+    c_flat = c_hat.T.reshape(-1)                         # (k,)
+    unresolved_flat = jnp.tile(unresolved, nb)
+    b_hat = jnp.where(unresolved_flat, 0.0, b)
+    return c_flat - b_hat, unresolved_flat
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedComputeEngine:
+    """One code + one decode policy, applied as composable pipeline stages.
+
+    Construction is cheap (stores references); schemes build one per call
+    site without jit-cache churn — the jitted stage functions are keyed on
+    array shapes and the (static) backend/iteration knobs, not on engine
+    identity.
+    """
+
+    code: LDPCCode
+    decode_iters: int = 10
+    backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
+    adaptive: bool = False
+
+    def __post_init__(self) -> None:
+        # Fail fast on unknown/unsupported backend names (same matrix as
+        # decoder.resolve_backend) instead of at first decode.
+        resolve_backend(self.backend, self.code, adaptive=self.adaptive)
+
+    # -------------------------------------------------------------- stages
+
+    @property
+    def N(self) -> int:
+        return self.code.N
+
+    @property
+    def K(self) -> int:
+        return self.code.K
+
+    def encode(self, payload: jax.Array) -> jax.Array:
+        """(K, ...) systematic payload → (N, ...) worker symbols (G @ m)."""
+        G = jnp.asarray(self.code.G, payload.dtype)
+        return G @ payload
+
+    @staticmethod
+    def erase(symbols: jax.Array, mask: jax.Array) -> jax.Array:
+        """Zero the straggled coordinates.  ``mask`` broadcasts from the
+        right-aligned coordinate axis: (N,) against (N,), (N, V), or the
+        batched (B, N) against (B, N), (B, N, V)."""
+        m = mask
+        while m.ndim < symbols.ndim:
+            m = m[..., None]
+        return jnp.where(m, 0.0, symbols)
+
+    def decode(self, values: jax.Array, erased: jax.Array) -> DecodeResult:
+        """One erasure pattern; values (N,) or (N, V) (payload axis)."""
+        if self.adaptive:
+            # decode_iters doubles as the adaptive round budget (max_iters),
+            # matching the pre-engine Scheme2 semantics.
+            return peel_decode_adaptive(self.code, values, erased,
+                                        self.decode_iters,
+                                        backend=self.backend)
+        return peel_decode(self.code, values, erased, self.decode_iters,
+                           backend=self.backend)
+
+    def decode_batch(self, values: jax.Array, erased: jax.Array) -> DecodeResult:
+        """B independent erasure patterns in ONE launch; values (B, N) or
+        (B, N, V), erased (B, N).  Each element decodes exactly as
+        :meth:`decode` would decode it alone.
+
+        ``adaptive`` engines run the batch at the FIXED ``decode_iters``
+        budget: past its fixpoint a pattern has no solvable checks, so the
+        surplus rounds are no-ops — erasure trajectories match the adaptive
+        decode exactly (values up to the usual f32 summation order); only
+        ``rounds_used`` reports the full budget and the early-exit cost
+        saving is forgone (per-element early exit in the batch axis is a
+        ROADMAP item)."""
+        return peel_decode_batch(self.code, values, erased, self.decode_iters,
+                                 backend=self.backend)
+
+    def systematic(self, dec: DecodeResult) -> tuple[jax.Array, jax.Array]:
+        """Epilogue: zero-filled systematic part + its unresolved mask.
+
+        Handles both single (values (N,)/(N,V)) and batched
+        (values (B,N)/(B,N,V)) decode results; the systematic slice is the
+        first K coordinates of the coordinate axis.
+        """
+        K = self.code.K
+        batched = dec.erased.ndim == 2
+        ax = 1 if batched else 0
+        vals = jax.lax.slice_in_dim(dec.values, 0, K, axis=ax)
+        unresolved = jax.lax.slice_in_dim(dec.erased, 0, K, axis=ax)
+        m = unresolved
+        while m.ndim < vals.ndim:
+            m = m[..., None]
+        return jnp.where(m, 0.0, vals), unresolved
+
+    # ------------------------------------------------------- composed steps
+
+    def recover(self, symbols: jax.Array, mask: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+        """erase → decode → epilogue for one pattern: returns the
+        zero-filled systematic (K, ...) values and the (K,) unresolved mask."""
+        dec = self.decode(self.erase(symbols, mask), mask)
+        return self.systematic(dec)
+
+    def recover_batch(self, symbols: jax.Array, mask: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+        """erase → decode → epilogue for B patterns in one launch: returns
+        (B, K, ...) zero-filled systematic values and (B, K) unresolved."""
+        dec = self.decode_batch(self.erase(symbols, mask), mask)
+        return self.systematic(dec)

@@ -27,7 +27,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.decoder import peel_decode
+from repro.core.engine import CodedComputeEngine
 from repro.core.ldpc import LDPCCode, make_ldgm
 
 __all__ = ["CodedAggregator", "flatten_grads", "unflatten_grads"]
@@ -85,18 +85,19 @@ class CodedAggregator:
     def n_shards(self) -> int:
         return self.code.K
 
+    @property
+    def engine(self) -> CodedComputeEngine:
+        return CodedComputeEngine(self.code, decode_iters=self.decode_iters,
+                                  backend=self.decode_backend)
+
     def encode(self, partials: jax.Array) -> jax.Array:
         """(K, dim) systematic partial gradients -> (N, dim) worker symbols."""
-        G = jnp.asarray(self.code.G, partials.dtype)
-        return G @ partials
+        return self.engine.encode(partials)
 
     def aggregate(self, partials: jax.Array, straggler_mask: jax.Array
                   ) -> tuple[jax.Array, jax.Array]:
-        symbols = self.encode(partials)  # (N, dim)
-        symbols = jnp.where(straggler_mask[:, None], 0.0, symbols)
-        dec = peel_decode(self.code, symbols, straggler_mask, self.decode_iters,
-                          backend=self.decode_backend)
-        unresolved = dec.erased[: self.code.K]
-        recovered = jnp.where(unresolved[:, None], 0.0, dec.values[: self.code.K])
+        # The full engine pipeline: encode → erase → decode → zero-fill.
+        recovered, unresolved = self.engine.recover(
+            self.encode(partials), straggler_mask)
         total = recovered.sum(axis=0) * self.debias_scale
         return total, unresolved.sum()

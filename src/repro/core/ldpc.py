@@ -123,6 +123,33 @@ class LDPCCode:
         """(p, r_max) float32 edge weights matching :attr:`check_idx`."""
         return self._neighbor_table[1]
 
+    @functools.cached_property
+    def _var_table(self) -> np.ndarray:
+        """Column-side (variable → incident checks) table of the Tanner graph.
+
+        ``(N, l_max) int32`` — for variable ``j``, the rows of its nonzero
+        entries in ascending order, padded with the sentinel ``p`` (one past
+        the last check).  ``l_max`` is the maximum column weight (== ``l``
+        for regular codes).  This is the gather table the scatter-free
+        batched decode round uses for its variable-side update (XLA scatters
+        are the slow op on CPU; gathering each variable's ≤ l_max candidate
+        resolutions is not).
+        """
+        mask = self.H != 0.0
+        col_weights = mask.sum(axis=0)
+        l_max = int(max(col_weights.max() if col_weights.size else 0, 1))
+        p = self.H.shape[0]
+        var_idx = np.full((self.N, l_max), p, dtype=np.int32)
+        for j in range(self.N):
+            rows = np.flatnonzero(mask[:, j])  # ascending
+            var_idx[j, : rows.size] = rows
+        return var_idx
+
+    @property
+    def var_idx(self) -> np.ndarray:
+        """(N, l_max) int32 incident check rows per variable, sentinel ``p``."""
+        return self._var_table
+
     def encode(self, message: np.ndarray) -> np.ndarray:
         """Encode a (K, ...) message block into an (N, ...) codeword block."""
         return self.G @ message

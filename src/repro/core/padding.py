@@ -1,0 +1,44 @@
+"""Shared zero-padding helpers for coded-compute data layout.
+
+Every layer that tiles or partitions arrays used to re-derive the same two
+idioms — "pad this axis up to a multiple of m" (kernel tile alignment) and
+"split samples into equal blocks, zero-padding the tail" (worker data
+partitioning).  They live here once; the engine, the schemes, and the Pallas
+wrappers all import them.
+
+Zero padding is exact for every consumer in this repo: padded sample rows
+contribute nothing to ``X^T (X θ - y)``, and padded code coordinates sit on
+all-zero ``H`` columns/rows so the peeling decoder never counts, resolves,
+or writes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pad_axis_to", "pad_blocks"]
+
+
+def pad_axis_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_blocks(X: jax.Array, y: jax.Array, parts: int) -> tuple[jax.Array, jax.Array]:
+    """Split samples into ``parts`` equal blocks, zero-padding the tail.
+
+    Zero rows contribute nothing to X^T(Xθ - y), so padding is exact (the
+    paper's 40-worker / m=2048 setup has uneven partitions too).
+    """
+    m = X.shape[0]
+    pad = (-m) % parts
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+    mp = m + pad
+    return X.reshape(parts, mp // parts, -1), y.reshape(parts, mp // parts)

@@ -1,8 +1,11 @@
 """Baseline straggler-mitigation schemes the paper compares against.
 
-All schemes share the interface of :class:`repro.core.coded_step.Scheme2`
-(``.w``, ``.gradient(theta, mask)``, ``.step(theta, mask)``) so the same
-``run_pgd`` driver and benchmark harness drive every scheme:
+All schemes — the engine-backed paper schemes in
+:mod:`repro.core.coded_step` and the baselines here — satisfy the
+:class:`Scheme` Protocol (``.w``, ``.gradient(theta, mask)``,
+``.step(theta, mask)``), so the same ``run_pgd`` driver and benchmark
+harness drive every scheme (no ad-hoc duck typing; conformance is tested).
+:func:`scheme_registry` enumerates them all:
 
 * :class:`Uncoded` — w workers each hold m/w samples; the master sums the
   partial gradients that arrive (stragglers' contributions are simply lost).
@@ -22,31 +25,62 @@ All schemes share the interface of :class:`repro.core.coded_step.Scheme2`
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import pad_blocks as _pad_blocks
 from repro.optim import projections
 
-__all__ = ["Uncoded", "Replication", "Karakus", "MDSLee", "GradientCodingFR",
-           "hadamard_matrix"]
+__all__ = ["Scheme", "scheme_registry", "Uncoded", "Replication", "Karakus",
+           "MDSLee", "GradientCodingFR", "hadamard_matrix"]
 
 
-def _pad_blocks(X: jax.Array, y: jax.Array, parts: int) -> tuple[jax.Array, jax.Array]:
-    """Split samples into ``parts`` equal blocks, zero-padding the tail.
+@runtime_checkable
+class Scheme(Protocol):
+    """What ``run_pgd`` (and the benchmark harness) requires of a scheme.
 
-    Zero rows contribute nothing to X^T(Xθ - y), so padding is exact (the
-    paper's 40-worker / m=2048 setup has uneven partitions too).
+    ``w`` is the worker count (the straggler-mask length);
+    ``gradient(theta, straggler_mask)`` returns ``(g, aux)`` with ``g`` the
+    (possibly approximate) gradient and ``aux`` a scalar decode-quality
+    metric (|U_t| for coded schemes, lost-partition counts for baselines);
+    ``step`` applies the projected update and passes ``aux`` through.
+
+    Both the engine-backed paper schemes (``Scheme1``/``Scheme2``/
+    ``Scheme2Blocked`` in :mod:`repro.core.coded_step`) and the baselines
+    below satisfy it — ``isinstance(s, Scheme)`` works at runtime.
     """
-    m = X.shape[0]
-    pad = (-m) % parts
-    if pad:
-        X = jnp.pad(X, ((0, pad), (0, 0)))
-        y = jnp.pad(y, (0, pad))
-    mp = m + pad
-    return X.reshape(parts, mp // parts, -1), y.reshape(parts, mp // parts)
+
+    @property
+    def w(self) -> int: ...
+
+    def gradient(self, theta: jax.Array, straggler_mask: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]: ...
+
+    def step(self, theta: jax.Array, straggler_mask: jax.Array
+             ) -> tuple[jax.Array, jax.Array]: ...
+
+
+def scheme_registry() -> dict[str, type]:
+    """All scheme classes, paper + baselines, keyed by short name.
+
+    Built lazily (the paper schemes live in :mod:`repro.core.coded_step`,
+    which must stay import-independent of this module).
+    """
+    from repro.core.coded_step import Scheme1, Scheme2, Scheme2Blocked
+
+    return {
+        "scheme1": Scheme1,
+        "scheme2": Scheme2,
+        "scheme2-blocked": Scheme2Blocked,
+        "uncoded": Uncoded,
+        "replication": Replication,
+        "karakus": Karakus,
+        "mds-lee": MDSLee,
+        "gradient-coding-fr": GradientCodingFR,
+    }
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,17 +6,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.padding import pad_axis_to
 from repro.kernels.block_matmul.kernel import matmul_kernel_call
 
 __all__ = ["block_matmul", "coded_matvec", "encode_gm"]
 
 
 def _pad(x, m0, m1):
-    p0 = (-x.shape[0]) % m0
-    p1 = (-x.shape[1]) % m1
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
-    return x
+    return pad_axis_to(pad_axis_to(x, m0, 0), m1, 1)
 
 
 @partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))

@@ -2,11 +2,27 @@
 
 ``peel_decode_pallas`` is the fused hot path: the whole fixed-D decode in
 one kernel launch (see ops.py / kernel.py for the backend matrix and
-interpret-mode behaviour off-TPU).  ``peel_round_pallas`` keeps the
-single-round check-pass path for experimentation and tests.
+interpret-mode behaviour off-TPU).  ``peel_decode_batch_pallas`` extends it
+with a first-class batch axis over independent erasure patterns (grid over
+the batch, H resident in VMEM and shared), and
+``peel_decode_adaptive_pallas`` runs the early-exit decode as one launch via
+an in-kernel while_loop.  ``peel_round_pallas`` keeps the single-round
+check-pass path for experimentation and tests.
 """
-from repro.kernels.ldpc_peel.kernel import check_pass, decode_fused
-from repro.kernels.ldpc_peel.ops import peel_round_pallas, peel_decode_pallas
+from repro.kernels.ldpc_peel.kernel import (
+    check_pass,
+    decode_fused,
+    decode_fused_adaptive,
+    decode_fused_batch,
+)
+from repro.kernels.ldpc_peel.ops import (
+    peel_decode_adaptive_pallas,
+    peel_decode_batch_pallas,
+    peel_decode_pallas,
+    peel_round_pallas,
+)
 
-__all__ = ["peel_round_pallas", "peel_decode_pallas", "check_pass",
-           "decode_fused"]
+__all__ = ["peel_round_pallas", "peel_decode_pallas",
+           "peel_decode_batch_pallas", "peel_decode_adaptive_pallas",
+           "check_pass", "decode_fused", "decode_fused_batch",
+           "decode_fused_adaptive"]

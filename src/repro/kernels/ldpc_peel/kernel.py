@@ -1,6 +1,6 @@
 """LDPC peeling-decoder Pallas TPU kernels.
 
-Two kernels live here:
+Four kernels live here:
 
 * :func:`check_pass` — the fused check-node pass of ONE flooding round
   (kept as the building block for the per-round path and its tests);
@@ -8,7 +8,17 @@ Two kernels live here:
   the ``(p, N)`` H tile is loaded into VMEM once and stays resident across a
   ``fori_loop`` over rounds, with the variable-node scatter epilogue fused
   in-kernel.  This removes the per-round kernel relaunch, re-padding, and
-  HBM round-trips of the old ``ops.peel_decode_pallas`` (D launches → 1).
+  HBM round-trips of the old ``ops.peel_decode_pallas`` (D launches → 1);
+* :func:`decode_fused_batch` — ``B`` INDEPENDENT erasure patterns decoded in
+  one launch: grid ``(B, V/bv)`` with the same H block mapped at every grid
+  step, so H is loaded into VMEM once and stays resident across the whole
+  batch while per-query payload/mask tiles stream through.  This is the
+  kernel behind ``CodedComputeEngine.decode_batch`` (serving many concurrent
+  coded queries);
+* :func:`decode_fused_adaptive` — the early-exit decode as one launch: an
+  in-kernel ``lax.while_loop`` on the unresolved count replicates
+  ``peel_decode_adaptive``'s exact stopping rule (progress made AND
+  erasures remain AND round budget left), emitting the rounds-used count.
 
 The in-kernel "scatter" is expressed MXU-style: the per-check resolution
 one-hot ``(p, N)`` is transposed into a matmul that accumulates each
@@ -40,7 +50,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["check_pass", "decode_fused", "detect_interpret"]
+__all__ = ["check_pass", "decode_fused", "decode_fused_batch",
+           "decode_fused_adaptive", "detect_interpret"]
 
 
 def detect_interpret(interpret: bool | None) -> bool:
@@ -113,16 +124,20 @@ def check_pass(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
 # ------------------------------------------------------------ fused decode --
 
 
-def _decode_kernel(H_ref, vals_ref, erased_ref, out_vals_ref, out_erased_ref,
-                   *, iters: int):
-    H = H_ref[...]  # (p, N) f32 — resident across all rounds
+def _flood_round(H):
+    """Build the in-kernel flooding-round function for a resident H tile.
+
+    Shared by the fixed-D, batched, and adaptive fused kernels so all three
+    follow the identical erasure trajectory (same solvability decisions,
+    same resolved neighbour, same lowest-index-check tie-break).
+    """
     Hb = (H != 0.0).astype(jnp.float32)
     col = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)  # (p, N)
     row = jax.lax.broadcasted_iota(jnp.int32, H.shape, 0)  # (p, N)
     HIGH = jax.lax.Precision.HIGHEST
 
-    def round_body(_, carry):
-        vals, e = carry  # (N, BV) f32, (N, 1) f32 (1.0 = erased)
+    def round_body(vals, e):
+        # vals (N, BV) f32, e (N, 1) f32 (1.0 = erased)
         cnt = jax.lax.dot(Hb, e, precision=HIGH)  # (p, 1)
         solvable = cnt[:, 0] == 1.0  # (p,)
         known = vals * (1.0 - e)
@@ -142,8 +157,14 @@ def _decode_kernel(H_ref, vals_ref, erased_ref, out_vals_ref, out_erased_ref,
         e = jnp.where(resolved > 0.0, 0.0, e)
         return vals, e
 
+    return round_body
+
+
+def _decode_kernel(H_ref, vals_ref, erased_ref, out_vals_ref, out_erased_ref,
+                   *, iters: int):
+    round_body = _flood_round(H_ref[...])  # H resident across all rounds
     vals, e = jax.lax.fori_loop(
-        0, iters, round_body, (vals_ref[...], erased_ref[...])
+        0, iters, lambda _, c: round_body(*c), (vals_ref[...], erased_ref[...])
     )
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
@@ -182,6 +203,130 @@ def decode_fused(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
         out_shape=[
             jax.ShapeDtypeStruct((N, V), jnp.float32),
             jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+# --------------------------------------------------- batched fused decode --
+
+
+def _decode_batch_kernel(H_ref, vals_ref, erased_ref, out_vals_ref,
+                         out_erased_ref, *, iters: int):
+    round_body = _flood_round(H_ref[...])  # H shared across the whole batch
+    vals, e = jax.lax.fori_loop(
+        0, iters, lambda _, c: round_body(*c),
+        (vals_ref[0], erased_ref[0])  # drop the leading (1,) batch-block dim
+    )
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "bv", "interpret"))
+def decode_fused_batch(H: jax.Array, values: jax.Array, erased_f: jax.Array,
+                       *, iters: int, bv: int = 128,
+                       interpret: bool | None = None):
+    """``B`` independent erasure patterns, one ``pallas_call``.
+
+    Inputs (already padded by ops.py): H (p, N) f32 with p % 8 == 0 and
+    N % 128 == 0; values (B, N, V) f32 with V % bv == 0; erased_f (B, N, 1)
+    f32.  The grid is ``(B, V // bv)``; the H block's index map is constant,
+    so H is fetched into VMEM once and stays resident while each query's
+    payload/mask tiles stream through — the per-query marginal cost is the
+    decode arithmetic alone, not a kernel launch + H reload.
+
+    ``interpret=None`` = backend-detected (compiled on TPU, else interpret).
+
+    Returns (values (B, N, V) f32, erased (B, N, 1) f32).
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    B, _, V = values.shape
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        functools.partial(_decode_batch_kernel, iters=iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, N), lambda b, j: (0, 0)),      # H: resident
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            # grid steps sharing a batch index recompute the identical
+            # trajectory and rewrite the same block — benign (sequential
+            # grid on TPU).
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+# -------------------------------------------------- adaptive fused decode --
+
+
+def _decode_adaptive_kernel(H_ref, vals_ref, erased_ref, out_vals_ref,
+                            out_erased_ref, out_rounds_ref, *, max_iters: int):
+    round_body = _flood_round(H_ref[...])
+
+    def cond(carry):
+        _, e, d, progressed = carry
+        return (d < max_iters) & progressed & (jnp.max(e) > 0.0)
+
+    def body(carry):
+        vals, e, d, _ = carry
+        vals2, e2 = round_body(vals, e)
+        return vals2, e2, d + 1, jnp.any(e2 != e)
+
+    vals, e, d, _ = jax.lax.while_loop(
+        cond, body,
+        (vals_ref[...], erased_ref[...], jnp.int32(0), jnp.bool_(True)),
+    )
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "bv", "interpret"))
+def decode_fused_adaptive(H: jax.Array, values: jax.Array,
+                          erased_f: jax.Array, *, max_iters: int,
+                          bv: int = 128, interpret: bool | None = None):
+    """Early-exit decode in one launch: in-kernel ``while_loop`` that stops
+    as soon as a round makes no progress (or nothing is erased), exactly the
+    ``peel_decode_adaptive`` stopping rule — "decoding effort tracks the
+    number of stragglers" without leaving the kernel.
+
+    Inputs (already padded by ops.py) as for :func:`decode_fused`.  Returns
+    (values (N, V) f32, erased (N, 1) f32, rounds (1, 1) i32).  The erasure
+    trajectory depends only on H and the initial mask, so every payload
+    slice exits after the identical round count and the shared rounds output
+    is written consistently by each grid step.
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    V = values.shape[1]
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_adaptive_kernel, max_iters=max_iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, N), lambda j: (0, 0)),  # H: resident
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         interpret=interpret,
     )(H, values, erased_f)

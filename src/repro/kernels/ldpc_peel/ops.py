@@ -6,6 +6,13 @@
   fixed-``D`` decode inside a single ``pallas_call`` (H resident in VMEM
   across rounds, scatter epilogue fused in-kernel), unpad once.  This is
   what ``repro.core.decoder.peel_decode(..., backend="pallas")`` calls.
+* :func:`peel_decode_batch_pallas` — ``B`` independent erasure patterns in
+  one launch (grid over the batch, H resident and shared); the kernel side
+  of ``CodedComputeEngine.decode_batch``.
+* :func:`peel_decode_adaptive_pallas` — the early-exit decode as one launch
+  (in-kernel ``while_loop`` on the unresolved count), so
+  ``peel_decode_adaptive(backend="pallas")`` keeps single-launch parity with
+  the fixed-D path.
 
 ``interpret`` defaults to ``None`` = backend-detected: compiled on TPU,
 interpret mode elsewhere (CPU CI runs the same kernel code path, slowly but
@@ -18,22 +25,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.padding import pad_axis_to
 from repro.kernels.ldpc_peel.kernel import (
     check_pass,
     decode_fused,
+    decode_fused_adaptive,
+    decode_fused_batch,
     detect_interpret,
 )
 
-__all__ = ["peel_round_pallas", "peel_decode_pallas"]
-
-
-def _pad_to(x, m, axis):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+__all__ = ["peel_round_pallas", "peel_decode_pallas",
+           "peel_decode_batch_pallas", "peel_decode_adaptive_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -45,9 +47,9 @@ def _peel_round_impl(H, values, erased, *, interpret: bool,
     p = H.shape[0]
 
     bp_eff = min(bp, max(8, p))
-    Hp = _pad_to(_pad_to(H.astype(jnp.float32), bp_eff, 0), 128, 1)
-    vp = _pad_to(_pad_to(vals.astype(jnp.float32), 128, 0), bv, 1)
-    ep = _pad_to(erased.astype(jnp.float32)[:, None], 128, 0)
+    Hp = pad_axis_to(pad_axis_to(H.astype(jnp.float32), bp_eff, 0), 128, 1)
+    vp = pad_axis_to(pad_axis_to(vals.astype(jnp.float32), 128, 0), bv, 1)
+    ep = pad_axis_to(erased.astype(jnp.float32)[:, None], 128, 0)
 
     sums, cnt, pos, coeff = check_pass(Hp, vp, ep, bp=bp_eff,
                                        bv=min(bv, vp.shape[1]),
@@ -74,23 +76,25 @@ def peel_round_pallas(H, values, erased, *, interpret: bool | None = None,
                             bp=bp, bv=bv)
 
 
+def _pad_operands(H, vals, erased_f, bv):
+    """Pad ONCE for a whole fused decode: N → multiple of 128 (lanes),
+    p → multiple of 8 (sublanes), V → multiple of bv (payload tile).
+    Padded coordinates are "known" zeros on zero H columns/rows: never
+    counted, never solvable, never written."""
+    Hp = pad_axis_to(pad_axis_to(H.astype(jnp.float32), 8, 0), 128, 1)
+    vp = pad_axis_to(pad_axis_to(vals.astype(jnp.float32), 128, -2), bv, -1)
+    ep = pad_axis_to(erased_f, 128, -2)
+    return Hp, vp, ep
+
+
 @partial(jax.jit, static_argnames=("iters", "interpret", "bv"))
 def _peel_decode_impl(H, values, erased, *, iters: int, interpret: bool,
                       bv: int = 128):
     squeeze = values.ndim == 1
     vals = values[:, None] if squeeze else values
     N, V = vals.shape
-    p = H.shape[0]
 
-    # Pad ONCE for the whole decode (the old path re-padded every round):
-    # N → multiple of 128 (lanes), p → multiple of 8 (sublanes),
-    # V → multiple of bv (payload tile).
-    Hp = _pad_to(_pad_to(H.astype(jnp.float32), 8, 0), 128, 1)
-    vp = _pad_to(_pad_to(vals.astype(jnp.float32), 128, 0), bv, 1)
-    ep = _pad_to(erased.astype(jnp.float32)[:, None], 128, 0)
-    # Padded coordinates are "known" zeros on zero H columns / rows: they are
-    # never counted, never solvable, never written.
-
+    Hp, vp, ep = _pad_operands(H, vals, erased.astype(jnp.float32)[:, None], bv)
     out_v, out_e = decode_fused(Hp, vp, ep, iters=iters,
                                 bv=min(bv, vp.shape[1]), interpret=interpret)
     out_vals = out_v[:N, :V].astype(vals.dtype)
@@ -110,3 +114,67 @@ def peel_decode_pallas(H, values, erased, iters: int, *,
     """
     return _peel_decode_impl(H, values, erased, iters=int(iters),
                              interpret=detect_interpret(interpret), bv=bv)
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret", "bv"))
+def _peel_decode_batch_impl(H, values, erased, *, iters: int, interpret: bool,
+                            bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    Hp, vp, ep = _pad_operands(H, vals,
+                               erased.astype(jnp.float32)[:, :, None], bv)
+    out_v, out_e = decode_fused_batch(Hp, vp, ep, iters=iters,
+                                      bv=min(bv, vp.shape[2]),
+                                      interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_batch_pallas(H, values, erased, iters: int, *,
+                             interpret: bool | None = None, bv: int = 128):
+    """Fixed-D decode of B independent erasure patterns in ONE launch.
+
+    H (p, N) f32; values (B, N) or (B, N, V); erased (B, N) bool.  The grid
+    runs over the batch with H resident in VMEM and shared across all B
+    queries.  Returns (values, erased) with the batch axis preserved.
+    """
+    return _peel_decode_batch_impl(H, values, erased, iters=int(iters),
+                                   interpret=detect_interpret(interpret),
+                                   bv=bv)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "interpret", "bv"))
+def _peel_decode_adaptive_impl(H, values, erased, *, max_iters: int,
+                               interpret: bool, bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+
+    Hp, vp, ep = _pad_operands(H, vals, erased.astype(jnp.float32)[:, None], bv)
+    out_v, out_e, rounds = decode_fused_adaptive(
+        Hp, vp, ep, max_iters=max_iters, bv=min(bv, vp.shape[1]),
+        interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased, rounds[0, 0]
+
+
+def peel_decode_adaptive_pallas(H, values, erased, max_iters: int, *,
+                                interpret: bool | None = None, bv: int = 128):
+    """Early-exit decode in ONE launch (in-kernel while_loop).
+
+    Same stopping rule as ``decoder.peel_decode_adaptive``: stop when a
+    round resolves nothing, nothing is erased, or ``max_iters`` is reached.
+    Returns (values, erased, rounds_used ()).
+    """
+    return _peel_decode_adaptive_impl(H, values, erased,
+                                      max_iters=int(max_iters),
+                                      interpret=detect_interpret(interpret),
+                                      bv=bv)

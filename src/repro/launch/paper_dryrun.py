@@ -9,7 +9,14 @@ This is the "most representative of the paper's technique" §Perf pair: a
 k-feature linear model whose encoded moment C = G·M is sharded over the
 mesh (rows → "model", feature columns → "data"), worker products are the
 sharded matvec z = Cθ, and the master-side peeling decode runs as D
-unrolled flooding rounds over a sharded parity-check matrix.
+flooding rounds over a sharded parity-check matrix.
+
+This launcher is a thin client: the step itself is built by
+``repro.launch.steps.build_coded_gd_step``, which composes the SHARED
+engine stages (``repro.core.decoder`` fixed-D loops +
+``repro.core.engine.blocked_epilogue``) — the decode variants measured here
+are exactly the backends the rest of the codebase runs, not launcher-local
+copies.
 
   python -m repro.launch.paper_dryrun --k 32768 --multi-pod
   python -m repro.launch.paper_dryrun --k 32768 --dtype bf16 --decode-iters 4
@@ -21,140 +28,13 @@ import json
 import time
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.analysis import HW, analyze_compiled
+from repro.launch.analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_coded_gd_step
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
-
-
-def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
-                        mesh, *, decode: str = "dense", r: int = 6):
-    """Functional Scheme2Blocked step at scale, with explicit shardings.
-
-    Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
-    C_blocks (nb, N, k) sharded (None, model, data);
-    theta/b (k,) replicated.
-
-    decode variants (the §Perf hillclimb):
-      dense       — paper-faithful baseline: H and its boolean mask Hb are
-                    two dense (p, N) operands per round (3 passes over H).
-      dense-fused — Hb computed on the fly from H (one dense operand/round).
-      sparse      — H stored as (p, r) neighbour indices + edge values
-                    (the Tanner graph IS r-regular): decode rounds become
-                    gathers/scatters, no dense (p, N) traffic at all.
-    """
-    N, p, nb = 2 * K, K, k // K
-    dax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    dspec = dax if len(dax) > 1 else dax[0]
-    sh = lambda *spec: NamedSharding(mesh, P(*spec))
-
-    def epilogue(vals, erased, theta, b, lr):
-        unresolved = erased[:K]                           # same for all blocks
-        c_hat = jnp.where(unresolved[:, None], 0.0, vals[:K])  # (K, nb)
-        c_flat = c_hat.T.reshape(-1)                      # (k,)
-        b_hat = jnp.where(jnp.tile(unresolved, nb), 0.0, b)
-        return theta - lr * (c_flat - b_hat)
-
-    def worker_products(C_blocks, theta, mask):
-        z = jnp.einsum("bnk,k->nb", C_blocks, theta.astype(C_blocks.dtype))
-        return jnp.where(mask[:, None], 0.0, z.astype(jnp.float32))  # (N, nb)
-
-    c_spec = jax.ShapeDtypeStruct((nb, N, k), dtype)
-    common = (
-        jax.ShapeDtypeStruct((k,), jnp.float32),          # theta
-        jax.ShapeDtypeStruct((k,), jnp.float32),          # b
-        jax.ShapeDtypeStruct((N,), jnp.bool_),            # mask
-        jax.ShapeDtypeStruct((), jnp.float32),            # lr
-    )
-    common_sh = (sh(), sh(), sh(), sh())
-
-    if decode in ("dense", "dense-fused"):
-        def step(C_blocks, H, theta, b, mask, lr):
-            z = worker_products(C_blocks, theta, mask)
-            erased, vals = mask, z
-            Hb = (H != 0.0).astype(jnp.float32)
-            for _ in range(decode_iters):
-                e = erased.astype(jnp.float32)
-                cnt = Hb @ e
-                known = vals * (1.0 - e)[:, None]
-                sums = H @ known
-                idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), H.shape)
-                emask = (Hb > 0) & (e[None, :] > 0)
-                pos = jnp.max(jnp.where(emask, idx, -1), axis=1)
-                coeff = jnp.sum(H * (idx == pos[:, None]), axis=1)
-                solvable = cnt == 1.0
-                new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
-                safe = jnp.where(solvable, pos, N)
-                vals = vals.at[safe].set(new_val, mode="drop")
-                erased = erased.at[safe].set(False, mode="drop")
-            return epilogue(vals, erased, theta, b, lr)
-
-        if decode == "dense":
-            # paper-faithful: Hb is a SECOND materialized dense operand
-            def step_dense(C_blocks, H, Hb_in, theta, b, mask, lr):
-                z = worker_products(C_blocks, theta, mask)
-                erased, vals = mask, z
-                for _ in range(decode_iters):
-                    e = erased.astype(jnp.float32)
-                    cnt = Hb_in @ e
-                    known = vals * (1.0 - e)[:, None]
-                    sums = H @ known
-                    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32),
-                                           H.shape)
-                    emask = (Hb_in > 0) & (e[None, :] > 0)
-                    pos = jnp.max(jnp.where(emask, idx, -1), axis=1)
-                    coeff = jnp.sum(H * (idx == pos[:, None]), axis=1)
-                    solvable = cnt == 1.0
-                    new_val = -sums / jnp.where(coeff == 0.0, 1.0,
-                                                coeff)[:, None]
-                    safe = jnp.where(solvable, pos, N)
-                    vals = vals.at[safe].set(new_val, mode="drop")
-                    erased = erased.at[safe].set(False, mode="drop")
-                return epilogue(vals, erased, theta, b, lr)
-
-            args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32),
-                    jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
-            in_sh = (sh(None, "model", dspec), sh("model", None),
-                     sh("model", None), *common_sh)
-            return jax.jit(step_dense, in_shardings=in_sh,
-                           out_shardings=sh()), args
-
-        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
-        in_sh = (sh(None, "model", dspec), sh("model", None), *common_sh)
-        return jax.jit(step, in_shardings=in_sh, out_shardings=sh()), args
-
-    # sparse decode: H as neighbour lists (p, r) — the Tanner graph is
-    # r-regular, so this is exact, and removes ALL dense (p, N) traffic.
-    def step_sparse(C_blocks, H_idx, H_val, theta, b, mask, lr):
-        z = worker_products(C_blocks, theta, mask)
-        erased, vals = mask, z
-        for _ in range(decode_iters):
-            e = erased.astype(jnp.float32)
-            neigh_e = e[H_idx]                            # (p, r)
-            cnt = neigh_e.sum(axis=1)
-            neigh_v = vals[H_idx]                         # (p, r, nb)
-            known = neigh_v * (1.0 - neigh_e)[:, :, None]
-            sums = jnp.einsum("prb,pr->pb", known, H_val)
-            slot = jnp.argmax(neigh_e, axis=1)            # (p,)
-            pos = jnp.take_along_axis(H_idx, slot[:, None], 1)[:, 0]
-            coeff = jnp.take_along_axis(H_val, slot[:, None], 1)[:, 0]
-            solvable = cnt == 1.0
-            new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
-            safe = jnp.where(solvable, pos, N)
-            vals = vals.at[safe].set(new_val, mode="drop")
-            erased = erased.at[safe].set(False, mode="drop")
-        return epilogue(vals, erased, theta, b, lr)
-
-    args = (c_spec, jax.ShapeDtypeStruct((p, r), jnp.int32),
-            jax.ShapeDtypeStruct((p, r), jnp.float32), *common)
-    in_sh = (sh(None, "model", dspec), sh("model", None), sh("model", None),
-             *common_sh)
-    return jax.jit(step_sparse, in_shardings=in_sh, out_shardings=sh()), args
 
 
 def main(argv=None):

@@ -1,18 +1,25 @@
 """Step builders: jitted train / prefill / decode steps with explicit
-in/out shardings for a given (arch, shape, mesh).
+in/out shardings for a given (arch, shape, mesh), plus the paper-workload
+coded-GD step (:func:`build_coded_gd_step`).
 
-Used by the dry-run (lower+compile on placeholder meshes), by the real
+Used by the dry-runs (lower+compile on placeholder meshes), by the real
 trainer (single-device or small meshes on CPU), and by the roofline
-analyzer.
+analyzer.  No step builder carries its own decode implementation: the
+coded-GD step composes the shared :mod:`repro.core.decoder` fixed-D loops
+and the :mod:`repro.core.engine` epilogue, so the decode math exists in
+exactly one place.
 """
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.decoder import peel_fixed_dense, peel_fixed_sparse
+from repro.core.engine import blocked_epilogue
 from repro.launch.specs import input_specs
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -23,7 +30,7 @@ from repro.sharding import (
     opt_state_shardings,
 )
 
-__all__ = ["BuiltStep", "build_step"]
+__all__ = ["BuiltStep", "build_step", "build_coded_gd_step"]
 
 
 class BuiltStep(NamedTuple):
@@ -102,3 +109,100 @@ def build_step(cfg: ArchConfig, mesh, shape_name: str, *,
     )
     return BuiltStep(kind, jitted, (params_shapes, specs["token"], specs["pos"],
                                     specs["cache"]), model, p_sh)
+
+
+# --------------------------------------------------- paper coded-GD step --
+
+
+def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
+                        mesh, *, decode: str = "dense", r: int = 6):
+    """Functional Scheme2Blocked step at scale, with explicit shardings.
+
+    Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
+    C_blocks (nb, N, k) sharded (None, model, data);
+    theta/b (k,) replicated.
+
+    The step is pure composition of the shared engine stages — worker
+    matvec, a :mod:`repro.core.decoder` fixed-D loop
+    (:func:`peel_fixed_dense` / :func:`peel_fixed_sparse`, whose operands
+    are plain shardable arrays), and the engine's
+    :func:`repro.core.engine.blocked_epilogue` — there is no launch-local
+    decode implementation.
+
+    decode variants (the §Perf hillclimb):
+      dense       — paper-faithful baseline: H and its boolean mask Hb are
+                    two dense (p, N) operands per round (3 passes over H).
+      dense-fused — Hb computed on the fly from H (one dense operand/round).
+      sparse      — H stored as (p, r) neighbour indices + edge values
+                    (the Tanner graph IS r-regular): decode rounds become
+                    gathers/scatters, no dense (p, N) traffic at all.
+
+    Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
+    """
+    N, p, nb = 2 * K, K, k // K
+    dax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dspec = dax if len(dax) > 1 else dax[0]
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+
+    def update(vals, erased, theta, b, lr):
+        g, _ = blocked_epilogue(vals, erased, b, K=K, nb=nb)
+        return theta - lr * g
+
+    def worker_products(C_blocks, theta, mask):
+        z = jnp.einsum("bnk,k->nb", C_blocks, theta.astype(C_blocks.dtype))
+        return jnp.where(mask[:, None], 0.0, z.astype(jnp.float32))  # (N, nb)
+
+    c_spec = jax.ShapeDtypeStruct((nb, N, k), dtype)
+    common = (
+        jax.ShapeDtypeStruct((k,), jnp.float32),          # theta
+        jax.ShapeDtypeStruct((k,), jnp.float32),          # b
+        jax.ShapeDtypeStruct((N,), jnp.bool_),            # mask
+        jax.ShapeDtypeStruct((), jnp.float32),            # lr
+    )
+    common_sh = (sh(), sh(), sh(), sh())
+
+    if decode == "dense":
+        # paper-faithful: Hb is a SECOND materialized dense operand
+        def step_dense(C_blocks, H, Hb, theta, b, mask, lr):
+            z = worker_products(C_blocks, theta, mask)
+            # Hb is streamed as a SECOND dense f32 operand (that is the
+            # point of this paper-faithful variant); the decoder's round
+            # wants it boolean.
+            vals, erased = peel_fixed_dense(H, Hb != 0.0, z, mask,
+                                            decode_iters)
+            return update(vals, erased, theta, b, lr)
+
+        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32),
+                jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+        in_sh = (sh(None, "model", dspec), sh("model", None),
+                 sh("model", None), *common_sh)
+        return jax.jit(step_dense, in_shardings=in_sh,
+                       out_shardings=sh()), args
+
+    if decode == "dense-fused":
+        def step_fused(C_blocks, H, theta, b, mask, lr):
+            z = worker_products(C_blocks, theta, mask)
+            vals, erased = peel_fixed_dense(H, H != 0.0, z, mask,
+                                            decode_iters)
+            return update(vals, erased, theta, b, lr)
+
+        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+        in_sh = (sh(None, "model", dspec), sh("model", None), *common_sh)
+        return jax.jit(step_fused, in_shardings=in_sh,
+                       out_shardings=sh()), args
+
+    if decode != "sparse":
+        raise ValueError(f"unknown decode variant {decode!r}")
+
+    # sparse decode: H as neighbour lists (p, r) — the Tanner graph is
+    # r-regular, so this is exact, and removes ALL dense (p, N) traffic.
+    def step_sparse(C_blocks, H_idx, H_val, theta, b, mask, lr):
+        z = worker_products(C_blocks, theta, mask)
+        vals, erased = peel_fixed_sparse(H_idx, H_val, z, mask, decode_iters)
+        return update(vals, erased, theta, b, lr)
+
+    args = (c_spec, jax.ShapeDtypeStruct((p, r), jnp.int32),
+            jax.ShapeDtypeStruct((p, r), jnp.float32), *common)
+    in_sh = (sh(None, "model", dspec), sh("model", None), sh("model", None),
+             *common_sh)
+    return jax.jit(step_sparse, in_shardings=in_sh, out_shardings=sh()), args

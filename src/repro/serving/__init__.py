@@ -1,4 +1,6 @@
 from repro.serving import kvcache
 from repro.serving.batcher import Request, WaveBatcher
+from repro.serving.coded_queries import CodedQuery, CodedQueryBatcher
 
-__all__ = ["kvcache", "Request", "WaveBatcher"]
+__all__ = ["kvcache", "Request", "WaveBatcher",
+           "CodedQuery", "CodedQueryBatcher"]

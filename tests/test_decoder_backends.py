@@ -155,9 +155,40 @@ def test_adaptive_sparse_matches_dense_rounds():
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("K,q,seed", [(20, 0.25, 0), (64, 0.30, 7),
+                                      (100, 0.05, 9), (60, 0.0, 1)])
+def test_adaptive_pallas_matches_dense_stopping_rule(K, q, seed):
+    """The fused adaptive kernel's in-kernel while_loop must reproduce the
+    dense/sparse while_loops exactly: same round count (the early-exit
+    'decoding effort tracks stragglers' knob) and same erasure endpoint."""
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    cw, rx, erased = _random_instance(code, V=3, q=q, seed=seed)
+    d = peel_decode_adaptive(code, rx, erased, backend="dense")
+    p = peel_decode_adaptive(code, rx, erased, backend="pallas")
+    assert int(d.rounds_used) == int(p.rounds_used)
+    np.testing.assert_array_equal(np.asarray(d.erased), np.asarray(p.erased))
+    truth = np.asarray(cw)
+    ok = ~np.asarray(d.erased)
+    dev = float(np.max(np.abs(np.asarray(d.values)[ok] - truth[ok]),
+                       initial=0.0))
+    tol = max(5e-4, 3.0 * dev)
+    np.testing.assert_allclose(np.asarray(p.values), np.asarray(d.values),
+                               rtol=tol, atol=tol)
+
+
+def test_adaptive_pallas_budget_respected():
+    code = make_regular_ldpc(64, l=3, r=6, seed=3)
+    cw, rx, erased = _random_instance(code, V=None, q=0.3, seed=3)
+    res = peel_decode_adaptive(code, rx, erased, 1, backend="pallas")
+    ref = peel_decode(code, rx, erased, 1, backend="dense")
+    assert int(res.rounds_used) <= 1
+    np.testing.assert_array_equal(np.asarray(res.erased),
+                                  np.asarray(ref.erased))
+
+
 def test_fused_decode_is_one_kernel_launch():
     """The whole fixed-D pallas decode must be a SINGLE pallas_call — the
-    per-round relaunch (D launches, D re-pads) is exactly what this PR
+    per-round relaunch (D launches, D re-pads) is exactly what PR 1
     removed."""
     from repro.kernels.ldpc_peel.ops import _peel_decode_impl
 
@@ -168,6 +199,30 @@ def test_fused_decode_is_one_kernel_launch():
     fn = _peel_decode_impl.__wrapped__  # un-jitted impl
     jaxpr = jax.make_jaxpr(
         lambda H, v, e: fn(H, v, e, iters=10, interpret=True))(H, v, e)
+    assert str(jaxpr).count("pallas_call") == 1
+
+
+def test_batched_and_adaptive_fused_decodes_are_one_kernel_launch():
+    """The engine-era kernels keep the one-launch property: B patterns per
+    launch (grid over the batch) and the adaptive early-exit decode
+    (in-kernel while_loop) each lower to a single pallas_call."""
+    from repro.kernels.ldpc_peel.ops import (_peel_decode_adaptive_impl,
+                                             _peel_decode_batch_impl)
+
+    code = make_regular_ldpc(40, l=3, r=6, seed=0)
+    H = jnp.asarray(code.H, jnp.float32)
+    vB = jnp.zeros((6, code.N, 4), jnp.float32)
+    eB = jnp.zeros((6, code.N), bool)
+    fn = _peel_decode_batch_impl.__wrapped__
+    jaxpr = jax.make_jaxpr(
+        lambda H, v, e: fn(H, v, e, iters=10, interpret=True))(H, vB, eB)
+    assert str(jaxpr).count("pallas_call") == 1
+
+    v = jnp.zeros((code.N, 4), jnp.float32)
+    e = jnp.zeros((code.N,), bool)
+    fn = _peel_decode_adaptive_impl.__wrapped__
+    jaxpr = jax.make_jaxpr(
+        lambda H, v, e: fn(H, v, e, max_iters=40, interpret=True))(H, v, e)
     assert str(jaxpr).count("pallas_call") == 1
 
 
@@ -188,6 +243,14 @@ def test_neighbor_table_invariants():
             np.testing.assert_array_equal(coeff[i, : cols.size],
                                           code.H[i, cols].astype(np.float32))
             assert (coeff[i, cols.size:] == 0.0).all()
+        # column-side table (the scatter-free batched round's gather table)
+        vidx = code.var_idx
+        assert vidx.shape[0] == code.N and vidx.dtype == np.int32
+        assert vidx.shape[1] == int(mask.sum(axis=0).max())
+        for j in range(code.N):
+            rows = np.flatnonzero(mask[:, j])
+            assert (vidx[j, : rows.size] == rows).all()
+            assert (vidx[j, rows.size:] == p).all()
 
 
 def test_resolve_backend_matrix():
@@ -199,8 +262,8 @@ def test_resolve_backend_matrix():
         assert resolve_backend("auto", big) == "sparse"
     for b in ("dense", "sparse", "pallas"):
         assert resolve_backend(b, code) == b
-    # adaptive never yields the fixed-D-only pallas kernel
-    assert resolve_backend("pallas", code, adaptive=True) == "sparse"
+    # since the fused adaptive kernel landed, adaptive keeps pallas
+    assert resolve_backend("pallas", code, adaptive=True) == "pallas"
     # raw (H, Hb) tuples: dense only
     tup = (jnp.asarray(code.H, jnp.float32), jnp.asarray(code.H_mask))
     assert resolve_backend("auto", tup) == "dense"
