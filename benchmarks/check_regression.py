@@ -1,17 +1,21 @@
-"""CI gate: fail on batched-decode regression vs the committed
-``BENCH_decoder_scaling.json`` baseline.
+"""CI gate: fail on batched-decode or serving-policy regression vs the
+committed ``BENCH_decoder_scaling.json`` baseline.
 
-The gated quantity is ``speedup_vs_sequential`` — the batched launch's
-per-query advantage over B sequential single-pattern decodes, where BOTH
-sides are measured in the SAME benchmark run on the SAME machine.  Gating
-that ratio (rather than absolute per-query microseconds) makes the check
-hardware-independent: a CI runner that is uniformly slower than the machine
-that produced the committed baseline shifts both numerator and denominator
-and leaves the ratio alone, while a code change that erodes the batching
-win moves the ratio directly.
+Two gated quantities, both SAME-RUN ratios (numerator and denominator
+measured in one benchmark run on one machine), which makes the checks
+hardware-independent — a CI runner that is uniformly slower than the
+machine that produced the committed baseline shifts both sides and leaves
+the ratio alone, while a code change that erodes the win moves it directly:
 
-Every (mode, N, B, D) batched_scaling record present in both files is
-compared; the run fails if any fresh speedup drops more than ``--tol``
+* ``speedup_vs_sequential`` (``batched_scaling``) — the batched launch's
+  per-query advantage over B sequential single-pattern decodes;
+* ``speedup_vs_lockstep`` (``serving_sweep``) — continuous admission's
+  mean per-query decode-cost advantage over lockstep waves on the mixed
+  light/heavy straggler stream.
+
+Every record present in both files is compared (batched records key on
+(mode, N, B, D); serving records on (mode, N, B, budget, chunk,
+n_queries)); the run fails if any fresh speedup drops more than ``--tol``
 (relative) below the baseline's.  Interpret-mode Pallas records are skipped
 (interpret-mode latency is not a tracked quantity).  Absolute per-query
 times are printed for context but never gate.
@@ -36,40 +40,71 @@ def _batched_records(path: Path) -> dict[tuple, dict]:
     return out
 
 
+def _serving_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("serving_sweep", []):
+        if rec["mode"] != "continuous":
+            continue  # the lockstep row is the (unit-speedup) denominator
+        out[(rec["mode"], rec["N"], rec["B"], rec["budget"], rec["chunk"],
+             rec["n_queries"])] = rec
+    return out
+
+
+def _gate(name: str, metric: str, base: dict, new: dict, tol: float
+          ) -> bool | None:
+    """Compare shared records on ``metric``.
+
+    Returns True iff any record regressed, None if there was nothing to
+    compare (config divergence — a distinct failure from a regression).
+    """
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        print(f"check_regression: no overlapping {name} records — nothing "
+              "to compare (did the sweep configs diverge?)")
+        return None
+    failed = False
+    for key in shared:
+        sb, sn = base[key][metric], new[key][metric]
+        ratio = sn / sb if sb > 0 else float("inf")
+        status = "OK"
+        if ratio < 1.0 - tol:
+            status, failed = "REGRESSION", True
+        print(f"  {key}: speedup {sb:6.2f}x -> {sn:6.2f}x ({ratio:5.2f} of "
+              f"baseline)  [{base[key]['per_query_us']:8.1f} -> "
+              f"{new[key]['per_query_us']:8.1f} us/q]  {status}")
+    print(f"check_regression [{name}]: {len(shared)} records "
+          f"{'FAILED' if failed else 'within tolerance'}")
+    return failed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, type=Path)
     ap.add_argument("--new", required=True, type=Path)
     ap.add_argument("--tol", type=float, default=0.25,
-                    help="allowed relative drop in speedup_vs_sequential "
-                         "(default 25%%)")
+                    help="allowed relative drop in the gated same-run "
+                         "speedup ratios (default 25%%)")
     args = ap.parse_args(argv)
 
-    base = _batched_records(args.baseline)
-    new = _batched_records(args.new)
-    shared = sorted(set(base) & set(new))
-    if not shared:
-        print("check_regression: no overlapping batched records — nothing "
-              "to compare (did the sweep configs diverge?)")
+    results = [
+        _gate("batched", "speedup_vs_sequential",
+              _batched_records(args.baseline),
+              _batched_records(args.new), args.tol),
+        _gate("serving", "speedup_vs_lockstep",
+              _serving_records(args.baseline),
+              _serving_records(args.new), args.tol),
+    ]
+    if any(r is None for r in results):
+        print("check_regression: FAILED (a gated section had no "
+              "overlapping records — regenerate the committed baseline?)")
         return 1
-
-    failed = False
-    for key in shared:
-        sb = base[key]["speedup_vs_sequential"]
-        sn = new[key]["speedup_vs_sequential"]
-        ratio = sn / sb if sb > 0 else float("inf")
-        status = "OK"
-        if ratio < 1.0 - args.tol:
-            status, failed = "REGRESSION", True
-        print(f"  {key}: speedup {sb:6.2f}x -> {sn:6.2f}x ({ratio:5.2f} of "
-              f"baseline)  [{base[key]['per_query_us']:8.1f} -> "
-              f"{new[key]['per_query_us']:8.1f} us/q]  {status}")
-    if failed:
-        print(f"check_regression: FAILED (batching speedup dropped >"
+    if any(results):
+        print(f"check_regression: FAILED (a gated speedup dropped >"
               f"{args.tol:.0%} vs committed baseline)")
         return 2
-    print(f"check_regression: all {len(shared)} batched records within "
-          f"{args.tol:.0%} of baseline speedup")
+    print(f"check_regression: all gated speedups within {args.tol:.0%} of "
+          "baseline")
     return 0
 
 

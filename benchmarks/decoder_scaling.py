@@ -12,6 +12,15 @@ Sections:
      serving axis): per-query cost of one batched launch (vmapped-sparse /
      batched-Pallas) vs B sequential single-pattern decodes, B ∈
      {1, 8, 64, 256}.
+  2b. mixed light/heavy straggler SERVING sweep — continuous admission
+     (per-slot adaptive decode, slots retire/refill independently, chunked
+     round budgets — the policy behind
+     ``serving.coded_queries.CodedQueryBatcher(mode="continuous")``) vs
+     lockstep waves (every wave pays the worst-case fixed round budget).
+     Simulated on the decode path itself so the measured quantity is the
+     mean per-query DECODE cost; ``speedup_vs_lockstep`` is a same-run
+     ratio (both policies timed in one run on one machine), which is what
+     ``check_regression.py`` gates.
   3. the adaptive peeling decoder's round count AND cost track the number of
      realized stragglers (few stragglers -> 1-2 rounds -> "decoding effort
      auto-adjusts");
@@ -31,7 +40,7 @@ import numpy as np
 
 from benchmarks.common import print_table
 from repro.core import FixedCountStragglers, make_regular_ldpc, peel_decode, \
-    peel_decode_adaptive, peel_decode_batch
+    peel_decode_adaptive, peel_decode_batch, peel_decode_batch_adaptive
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
 
@@ -171,6 +180,165 @@ def run_batched_scaling(*, Ks=(64, 256, 1024), Bs=(1, 8, 64, 256), D=8,
     return rows, records
 
 
+def _serve_lockstep(code, rx, erased, *, B, budget):
+    """Wave policy: ONE fixed-budget batched decode per wave of B queries
+    (partial final wave padded with clean no-op slots).  Returns a callable
+    running the whole queue once, plus the launch count."""
+    N = code.N
+    fn = jax.jit(lambda v, e: peel_decode_batch(
+        code, v, e, budget, backend="sparse").values)
+    nq = rx.shape[0]
+    pad = (-nq) % B
+    rx_p = np.concatenate([rx, np.zeros((pad, N), np.float32)])
+    er_p = np.concatenate([erased, np.zeros((pad, N), bool)])
+    waves = [(jnp.asarray(rx_p[i:i + B]), jnp.asarray(er_p[i:i + B]))
+             for i in range(0, nq + pad, B)]
+
+    def serve():
+        for v, e in waves:
+            fn(v, e).block_until_ready()
+
+    return serve, len(waves)
+
+
+def _serve_continuous(code, rx, erased, *, B, budget, chunk):
+    """Continuous admission simulated on the decode path: a pool of B slots
+    advances by at most ``chunk`` per-slot adaptive rounds per launch;
+    converged / budget-exhausted slots retire and refill FIFO — the
+    ``CodedQueryBatcher(mode="continuous")`` slot lifecycle, minus the
+    worker matvec and epilogue that both policies pay once per query (so
+    the measured quantity is pure DECODE cost, the paper's adaptivity
+    claim).  NOTE: the lifecycle (admission order, budget chunking, retire
+    condition) is a hand-kept copy of
+    ``serving.coded_queries.CodedQueryBatcher._step_continuous`` — keep the
+    two in sync; the batcher's behavior itself is pinned by
+    tests/test_coded_queries.py.  Returns a callable running the whole
+    queue once and a stats dict (filled per run)."""
+    N = code.N
+    nq = rx.shape[0]
+    def _launch(v, e, bu):
+        dec = peel_decode_batch_adaptive(code, v, e, backend="sparse",
+                                         budgets=bu)
+        # per-slot unresolved counts on device: host only pulls (B,) stats
+        return dec.values, dec.erased, dec.rounds_used, dec.erased.sum(axis=1)
+
+    launch = jax.jit(_launch)
+    # fixed-size refill (unused rows carry the drop sentinel B) so varying
+    # admission counts reuse ONE compilation
+    refill = jax.jit(
+        lambda v, e, idx, nv, ne: (v.at[idx].set(nv, mode="drop"),
+                                   e.at[idx].set(ne, mode="drop")))
+    stats = {"launches": 0, "launch_rounds": 0, "slot_rounds": 0}
+
+    def serve():
+        # slot state stays DEVICE-RESIDENT across launches (free slots get
+        # budget 0, so the decode passes their rows through untouched and
+        # the outputs can be carried wholesale); the host sees only (B,)
+        # stats vectors for the retire/refill decisions.
+        vals = jnp.zeros((B, N), jnp.float32)
+        er = jnp.zeros((B, N), bool)
+        used = np.zeros((B,), np.int32)
+        slot = np.full((B,), -1, np.int64)   # query index or -1 (free)
+        nxt = done = launches = launch_rounds = slot_rounds = 0
+        while done < nq:
+            fill = [s for s in range(B) if slot[s] < 0][: nq - nxt]
+            if fill:
+                idx = np.full((B,), B, np.int32)   # sentinel rows: dropped
+                nv = np.zeros((B, N), np.float32)
+                ne = np.zeros((B, N), bool)
+                for j, s in enumerate(fill):
+                    idx[j] = s
+                    nv[j] = rx[nxt + j]
+                    ne[j] = erased[nxt + j]
+                slot[fill] = range(nxt, nxt + len(fill))
+                used[fill] = 0
+                nxt += len(fill)
+                vals, er = refill(vals, er, jnp.asarray(idx),
+                                  jnp.asarray(nv), jnp.asarray(ne))
+            occupied = slot >= 0
+            budgets = np.where(occupied,
+                               np.minimum(chunk, budget - used), 0)
+            vals, er, rounds_d, unres_d = launch(
+                vals, er, jnp.asarray(budgets.astype(np.int32)))
+            launches += 1
+            rounds = np.asarray(rounds_d)
+            unres = np.asarray(unres_d)
+            used[occupied] += rounds[occupied]
+            # wall-cost proxy: the launch's while_loop runs until its
+            # slowest active slot stops; work proxy: per-slot rounds spent.
+            launch_rounds += int(rounds.max(initial=0))
+            slot_rounds += int(rounds[occupied].sum())
+            retired = occupied & ((rounds < budgets) | (unres == 0)
+                                  | (used >= budget))
+            done += int(retired.sum())
+            slot[retired] = -1
+        stats["launches"] = launches
+        stats["launch_rounds"] = launch_rounds
+        stats["slot_rounds"] = slot_rounds
+
+    return serve, stats
+
+
+def run_serving_sweep(*, K=1024, B=64, n_queries=320, heavy_frac=0.15,
+                      light_q=0.08, heavy_q=0.42, budget=32, chunk=4,
+                      reps=3, seed=0):
+    """Mixed light/heavy straggler serving: continuous vs lockstep.
+
+    A stream of ``n_queries`` coded queries, ``heavy_frac`` of them with
+    near-threshold erasure rates (many peeling rounds to converge) and the
+    rest light (1-2 rounds).  Lockstep waves pay the worst-case ``budget``
+    rounds for every wave; continuous admission lets each slot stop at its
+    own fixpoint and refill, so the mean per-query decode cost tracks the
+    REALIZED straggler mix.  Returns (table_rows, json_records);
+    ``speedup_vs_lockstep`` is the same-run per-query cost ratio.
+    """
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    N = code.N
+    rng = np.random.default_rng(seed)
+    msgs = rng.standard_normal((n_queries, K))
+    cws = (code.G @ msgs.T).T.astype(np.float32)
+    heavy = rng.random(n_queries) < heavy_frac
+    qs = np.where(heavy, heavy_q, light_q)
+    erased = rng.random((n_queries, N)) < qs[:, None]
+    rx = np.where(erased, 0.0, cws)
+
+    serve_ls, n_waves = _serve_lockstep(code, rx, erased, B=B, budget=budget)
+    serve_ct, ct_stats = _serve_continuous(code, rx, erased, B=B,
+                                           budget=budget, chunk=chunk)
+    results = {}
+    for mode, serve in (("lockstep", serve_ls), ("continuous", serve_ct)):
+        serve()  # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            serve()
+            ts.append(time.perf_counter() - t0)
+        results[mode] = float(np.median(ts))
+
+    base = {"N": N, "K": K, "B": B, "n_queries": n_queries,
+            "heavy_frac": heavy_frac, "light_q": light_q, "heavy_q": heavy_q,
+            "budget": budget, "chunk": chunk,
+            "jax_backend": jax.default_backend()}
+    speedup = results["lockstep"] / results["continuous"]
+    rows, records = [], []
+    for mode, extra in (
+            ("lockstep", {"launches": n_waves,
+                          "launch_rounds": n_waves * budget,
+                          "slot_rounds": n_waves * B * budget,
+                          "speedup_vs_lockstep": 1.0}),
+            ("continuous", {"launches": ct_stats["launches"],
+                            "launch_rounds": ct_stats["launch_rounds"],
+                            "slot_rounds": ct_stats["slot_rounds"],
+                            "speedup_vs_lockstep": speedup})):
+        t = results[mode]
+        records.append({**base, "mode": mode, "median_s": t,
+                        "per_query_us": t / n_queries * 1e6, **extra})
+        rows.append([N, B, mode, extra["launches"], extra["launch_rounds"],
+                     f"{t / n_queries * 1e6:.0f}",
+                     f"{extra['speedup_vs_lockstep']:.2f}x"])
+    return rows, records
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -233,6 +401,16 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
                 ["N", "K", "B", "mode", "per_query_us", "speedup_vs_seq"],
                 batch_rows)
 
+    # 2b. mixed light/heavy serving: continuous admission vs lockstep waves
+    # (B=64, N=2048 — the acceptance config).  Quick mode trims only reps:
+    # the sweep config must stay IDENTICAL to the committed baseline's so
+    # check_regression finds matching records to gate.
+    serve_rows, serve_records = run_serving_sweep(reps=2 if quick else 3)
+    print_table("Serving sweep — mixed light/heavy stragglers, mean "
+                "per-query decode cost",
+                ["N", "B", "mode", "launches", "launch_rounds",
+                 "per_query_us", "speedup_vs_lockstep"], serve_rows)
+
     # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
@@ -251,11 +429,12 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
     out = {
         "benchmark": "decoder_scaling",
-        "schema_version": 2,
+        "schema_version": 3,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
         "batched_scaling": batch_records,
+        "serving_sweep": serve_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows

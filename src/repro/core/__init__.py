@@ -4,6 +4,7 @@ from repro.core.decoder import (
     peel_decode,
     peel_decode_adaptive,
     peel_decode_batch,
+    peel_decode_batch_adaptive,
     DecodeResult,
 )
 from repro.core.engine import CodedComputeEngine, blocked_epilogue
@@ -22,7 +23,8 @@ from repro.core.padding import pad_axis_to, pad_blocks
 
 __all__ = [
     "LDPCCode", "make_regular_ldpc", "make_ldgm",
-    "peel_decode", "peel_decode_adaptive", "peel_decode_batch", "DecodeResult",
+    "peel_decode", "peel_decode_adaptive", "peel_decode_batch",
+    "peel_decode_batch_adaptive", "DecodeResult",
     "CodedComputeEngine", "blocked_epilogue",
     "qd_sequence", "q_final", "threshold",
     "Moments", "second_moment", "encode_moment", "encode_moment_blocks",

@@ -87,13 +87,26 @@ class Scheme2:
         )
         return g / max(1.0 - qD, 1e-6)
 
+    def finish_gradient(self, c_hat: jax.Array, unresolved: jax.Array):
+        """Scheme-2 gradient epilogue from recovered systematic values:
+        zero ``b̂`` on the unresolved set, subtract, (optionally) debias.
+
+        Shapes: ``c_hat (K,)`` / ``unresolved (K,)`` or batched ``(B, K)``.
+        Returns ``(gradient, unresolved_count)`` with the count reduced over
+        the coordinate axis.  This is THE epilogue — :meth:`gradient`,
+        :meth:`gradient_batch`, and the serving layer's continuous launches
+        (:mod:`repro.serving.coded_queries`) all share it.
+        """
+        b = self.b if c_hat.ndim == 1 else self.b[None, :]
+        b_hat = jnp.where(unresolved, 0.0, b)
+        return self._debias(c_hat - b_hat), unresolved.sum(axis=-1)
+
     def gradient(self, theta: jax.Array, straggler_mask: jax.Array):
         """Return (approx gradient, |U_t|)."""
         z = self.C @ theta  # (N,) worker inner products (codeword of C)
         erased = self.worker_mask_to_erasure(straggler_mask)
         c_hat, unresolved = self.engine.recover(z, erased)
-        b_hat = jnp.where(unresolved, 0.0, self.b)
-        return self._debias(c_hat - b_hat), unresolved.sum()
+        return self.finish_gradient(c_hat, unresolved)
 
     def gradient_batch(self, theta_B: jax.Array, straggler_mask_B: jax.Array):
         """B concurrent queries (θ_b, mask_b) → (B, k) gradients, ONE decode.
@@ -102,13 +115,15 @@ class Scheme2:
         matvecs fuse into one (B, k) @ (k, N) matmul and the B peeling
         decodes run as a single batched launch
         (:meth:`CodedComputeEngine.decode_batch`).  Per-query results match
-        :meth:`gradient` run separately.
+        :meth:`gradient` run separately — including for ``adaptive=True``
+        schemes, where each query's decode now early-exits at ITS OWN
+        fixpoint (per-slot adaptive batch decode) instead of running the
+        whole batch for the worst-case ``decode_iters`` budget.
         """
         Z = theta_B @ self.C.T  # (B, N)
         erased_B = jax.vmap(self.worker_mask_to_erasure)(straggler_mask_B)
         c_hat, unresolved = self.engine.recover_batch(Z, erased_B)
-        b_hat = jnp.where(unresolved, 0.0, self.b[None, :])
-        return self._debias(c_hat - b_hat), unresolved.sum(axis=1)
+        return self.finish_gradient(c_hat, unresolved)
 
     def step(self, theta: jax.Array, straggler_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
         g, n_unresolved = self.gradient(theta, straggler_mask)

@@ -7,7 +7,8 @@ of rounds ``D`` is exactly the paper's decoding-iteration knob — the quality
 of the recovered gradient is monotone in ``D`` (Remark 3).
 
 Backend matrix (``backend=`` on :func:`peel_decode` /
-:func:`peel_decode_adaptive` / :func:`peel_decode_batch`):
+:func:`peel_decode_adaptive` / :func:`peel_decode_batch` /
+:func:`peel_decode_batch_adaptive`):
 
 =========  ==================================================================
 backend    what runs
@@ -15,28 +16,39 @@ backend    what runs
 "dense"    the original reference: three dense ``H``-structured ops per
            round (mask matvec, matmul, argmax) — O(p·N·V) work.  Always
            available, including for raw ``(H, Hb)`` tuples.  Batched decode
-           vmaps the whole fixed-D loop over the pattern axis.
+           vmaps the whole fixed-D loop over the pattern axis; batched
+           ADAPTIVE decode vmaps the early-exit while_loop (per-slot
+           predicates — a converged slot's carry freezes while stragglers
+           keep peeling).
 "sparse"   gathers over the code's padded neighbor table
            (``LDPCCode.check_idx`` / ``check_coeff``) — O(p·r_max·V) work,
            i.e. proportional to the Tanner-graph edge count, the complexity
            the paper's low-cost-decoding argument assumes.  Requires an
            :class:`LDPCCode` (the table is built at construction).  Batched
            decode vmaps the loop with the neighbor table broadcast (loaded
-           once, shared across all B patterns).
+           once, shared across all B patterns).  Batched ADAPTIVE decode
+           keeps the scatter-free batch-major round and threads a per-slot
+           ACTIVE mask through a single while_loop: converged slots'
+           columns are frozen (select, no gather feedback) and the loop
+           exits when every slot has converged or exhausted its budget.
 "pallas"   the fused one-kernel decodes (:mod:`repro.kernels.ldpc_peel`):
            the whole decode runs inside a single ``pallas_call`` with ``H``
            resident in VMEM — no per-round kernel relaunch or re-padding.
            Fixed-D (``peel_decode``), early-exit adaptive
            (``peel_decode_adaptive``: in-kernel while_loop on the
-           unresolved count), and batched (``peel_decode_batch``: grid over
+           unresolved count), batched (``peel_decode_batch``: grid over
            the B independent erasure patterns with the H tile shared across
-           the batch) are each ONE launch.  Runs in interpret mode off-TPU
-           (correct but not fast on CPU).
+           the batch), and batched-adaptive
+           (``peel_decode_batch_adaptive``: grid over slots, one in-kernel
+           while_loop PER SLOT with a traced per-slot round budget) are
+           each ONE launch.  Runs in interpret mode off-TPU (correct but
+           not fast on CPU).
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
            large codes off-TPU; "pallas" on TPU when the kernel's whole
            working set fits comfortably in VMEM (N ≤ 512), else "sparse".
            The same rule applies on the batch axis (the batched kernel's
-           per-step working set matches the single-pattern kernel's).
+           per-step working set matches the single-pattern kernel's), and
+           to the batched-adaptive decode.
 =========  ==================================================================
 
 All backends follow bit-identical erasure trajectories (solvability is an
@@ -82,6 +94,7 @@ __all__ = [
     "peel_decode",
     "peel_decode_adaptive",
     "peel_decode_batch",
+    "peel_decode_batch_adaptive",
     "erased_after",
     "resolve_backend",
 ]
@@ -103,7 +116,9 @@ _AUTO_PALLAS_MAX_N = 512
 class DecodeResult(NamedTuple):
     values: jax.Array  # (N,) / (N, V); batched: (B, N) / (B, N, V)
     erased: jax.Array  # (N,) bool (batched: (B, N)); True where unresolved
-    rounds_used: jax.Array  # () int32 (== D for fixed-D decode)
+    # () int32 (== D for fixed-D decode); the batched-adaptive decode
+    # returns the PER-SLOT vector (B,) int32 — each slot's own round count.
+    rounds_used: jax.Array
 
 
 def _expand(values: jax.Array) -> tuple[jax.Array, bool]:
@@ -495,6 +510,155 @@ def peel_decode_adaptive(
         v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))
     if squeeze:
         v = v[:, 0]
+    return DecodeResult(v, e, d)
+
+
+# -------------------------------------------------- batched x adaptive axis
+
+
+@jax.jit
+def _peel_adaptive_dense_batch(H, Hb, values, erased, budgets):
+    """Per-slot early-exit dense decode: vmap of the adaptive while_loop.
+
+    JAX's while_loop batching rule gives exactly the per-slot semantics: the
+    lowered loop runs while ANY slot's predicate holds, and a slot whose own
+    predicate is false has its carry frozen via select — so each slot's
+    (values, erased, rounds) trajectory is the one the sequential adaptive
+    decode produces under its own ``budgets[b]`` round budget.
+    """
+    def one(v, e, budget):
+        def cond(carry):
+            _, e_, d, progressed = carry
+            return (d < budget) & progressed & e_.any()
+
+        def body(carry):
+            v_, e_, d, _ = carry
+            v2, e2 = peel_round(H, Hb, v_, e_)
+            return v2, e2, d + 1, (e2 != e_).any()
+
+        return jax.lax.while_loop(
+            cond, body, (v, e, jnp.int32(0), jnp.bool_(True)))[:3]
+
+    return jax.vmap(one)(values, erased, budgets)
+
+
+@jax.jit
+def _peel_adaptive_sparse_batch(check_idx, check_coeff, var_idx, values,
+                                erased, budgets):
+    """Per-slot early-exit decode on the scatter-free batch-major round.
+
+    One while_loop advances ALL still-active slots a round at a time; a
+    per-slot active mask ``(d < budget) & progressed & any_erased`` freezes
+    converged slots' columns (select — their lanes carry no further work or
+    rounding churn) and the loop exits as soon as every slot is done, so a
+    batch of light stragglers costs 1-2 rounds regardless of the budget.
+    Layout and round semantics are exactly :func:`peel_round_sparse_batch`'s
+    (values (B, N, V), erased (B, N) bool; V lanes of one slot share the
+    trajectory).  Returns (values, erased, rounds (B,)).
+    """
+    B, N, V = values.shape
+    dt = values.dtype
+    vb = jnp.transpose(values, (1, 0, 2)).reshape(N, B * V)
+    eb = jnp.repeat(erased.T.astype(dt), V, axis=1)          # (N, B*V)
+    zrow = jnp.zeros((1, B * V), dt)
+    vb = jnp.concatenate([vb, zrow])
+    eb = jnp.concatenate([eb, zrow])
+    budgets = budgets.astype(jnp.int32)
+
+    def slot_erased_any(eb_):
+        # lane 0 of each slot (all V lanes share the mask): (B,) bool
+        return eb_[:N].reshape(N, B, V)[:, :, 0].sum(axis=0) > 0.0
+
+    # The per-slot predicate ``(d < budget) & progressed & any_erased`` is
+    # carried as one ACTIVE mask (slots only ever deactivate), so each round
+    # costs exactly one masked-round + two (N, B) reductions — the cond is a
+    # free ``active.any()``.
+    def cond(carry):
+        return carry[3].any()
+
+    def body(carry):
+        vb_, eb_, d, active = carry
+        lane = jnp.repeat(active, V)                         # (B*V,)
+        vb2, eb2 = peel_round_sparse_batch(check_idx, check_coeff, var_idx,
+                                           vb_, eb_)
+        changed = (eb2[:N] != eb_[:N]).reshape(N, B, V)[:, :, 0].any(axis=0)
+        vb_ = jnp.where(lane[None, :], vb2, vb_)
+        eb_ = jnp.where(lane[None, :], eb2, eb_)
+        d = jnp.where(active, d + 1, d)
+        active = (active & (d < budgets) & changed
+                  & slot_erased_any(eb_))
+        return vb_, eb_, d, active
+
+    active0 = (budgets > 0) & slot_erased_any(eb)
+    vb, eb, d, _ = jax.lax.while_loop(
+        cond, body, (vb, eb, jnp.zeros((B,), jnp.int32), active0))
+    out_v = jnp.transpose(vb[:N].reshape(N, B, V), (1, 0, 2))
+    out_e = eb[:N].reshape(N, B, V)[:, :, 0].T > 0.0
+    return out_v, out_e, d
+
+
+def peel_decode_batch_adaptive(
+    code: LDPCCode | tuple[jax.Array, jax.Array],
+    values: jax.Array,
+    erased: jax.Array,
+    max_iters: int | None = None,
+    *,
+    backend: str = "auto",
+    budgets: jax.Array | None = None,
+) -> DecodeResult:
+    """Decode ``B`` independent patterns with PER-SLOT early exit, one launch.
+
+    The batched form of :func:`peel_decode_adaptive`: every slot follows its
+    own stopping rule (no progress, nothing erased, or its round budget
+    exhausted) and reports its own round count — ``rounds_used`` is the
+    per-slot ``(B,) int32`` vector.  A slot full of light stragglers stops
+    after 1-2 rounds while a heavy slot keeps peeling; no slot's trajectory
+    depends on any other slot's.  Trajectory parity with the sequential
+    adaptive decode is exact (same erasure masks and round counts,
+    bit-for-bit); values agree up to f32 summation order, as on the fixed-D
+    batch axis.
+
+    ``budgets`` optionally gives each slot its own round budget
+    ``(B,) int`` — a TRACED operand (varying budgets launch-to-launch never
+    recompiles), clamped nowhere: a slot with budget 0 is returned
+    untouched with 0 rounds.  Without it every slot gets ``max_iters``
+    (default ``N``).  This is the primitive behind continuous-admission
+    serving (:mod:`repro.serving.coded_queries`): in-flight slots carry
+    their remaining budgets across chunked launches.
+    """
+    backend = resolve_backend(backend, code, adaptive=True)
+    v = jnp.asarray(values)
+    if v.ndim not in (2, 3):
+        raise ValueError(f"batched values must be (B, N) or (B, N, V); "
+                         f"got shape {v.shape}")
+    squeeze = v.ndim == 2
+    if squeeze:
+        v = v[:, :, None]
+    e = jnp.asarray(erased, bool)
+    B = v.shape[0]
+    if max_iters is None:
+        max_iters = int(code.N if isinstance(code, LDPCCode) else code[0].shape[1])
+    if budgets is None:
+        budgets = jnp.full((B,), int(max_iters), jnp.int32)
+    else:
+        budgets = jnp.asarray(budgets, jnp.int32)
+        if budgets.shape != (B,):
+            raise ValueError(f"budgets must be ({B},); got {budgets.shape}")
+    if backend == "sparse":
+        idx, coeff = _tables(code)
+        v, e, d = _peel_adaptive_sparse_batch(idx, coeff,
+                                              jnp.asarray(code.var_idx),
+                                              v, e, budgets)
+    elif backend == "pallas":
+        from repro.kernels.ldpc_peel import peel_decode_batch_adaptive_pallas
+
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e, d = peel_decode_batch_adaptive_pallas(H, v, e, budgets)
+    else:
+        H, Hb = _mats(code, v.dtype)
+        v, e, d = _peel_adaptive_dense_batch(H, Hb, v, e, budgets)
+    if squeeze:
+        v = v[:, :, 0]
     return DecodeResult(v, e, d)
 
 

@@ -25,9 +25,13 @@ epilogue zero-fill the unresolved systematic coordinates (paper Scheme 2:
 :meth:`CodedComputeEngine.decode_batch` (and :meth:`recover_batch`) run B
 concurrent coded queries — each with its OWN straggler realization — in one
 launch, via a vmapped sparse/dense flooding loop or the batched fused Pallas
-kernel (grid over the batch, H resident in VMEM and shared).  This is the
-primitive that serves heavy concurrent coded traffic
-(:mod:`repro.serving.coded_queries`) and that every later scaling layer
+kernel (grid over the batch, H resident in VMEM and shared).  The batch
+axis carries PER-SLOT adaptive state (``adaptive=True`` / per-slot
+``budgets``): every slot early-exits at its own fixpoint and reports its
+own round count, so decoding effort tracks each query's realized straggler
+load instead of the batch's worst case.  This is the primitive that serves
+heavy concurrent coded traffic (:mod:`repro.serving.coded_queries`'s
+continuous-admission slot server) and that every later scaling layer
 (sharded decode, async serving, multi-code support) builds on.
 
 The payload axis ``V`` (many codewords sharing ONE erasure pattern — the
@@ -47,6 +51,7 @@ from repro.core.decoder import (
     peel_decode,
     peel_decode_adaptive,
     peel_decode_batch,
+    peel_decode_batch_adaptive,
     resolve_backend,
 )
 from repro.core.ldpc import LDPCCode
@@ -133,18 +138,31 @@ class CodedComputeEngine:
         return peel_decode(self.code, values, erased, self.decode_iters,
                            backend=self.backend)
 
-    def decode_batch(self, values: jax.Array, erased: jax.Array) -> DecodeResult:
+    def decode_batch(self, values: jax.Array, erased: jax.Array, *,
+                     adaptive: bool | None = None,
+                     budgets: jax.Array | None = None) -> DecodeResult:
         """B independent erasure patterns in ONE launch; values (B, N) or
-        (B, N, V), erased (B, N).  Each element decodes exactly as
+        (B, N, V), erased (B, N).  Each slot decodes exactly as
         :meth:`decode` would decode it alone.
 
-        ``adaptive`` engines run the batch at the FIXED ``decode_iters``
-        budget: past its fixpoint a pattern has no solvable checks, so the
-        surplus rounds are no-ops — erasure trajectories match the adaptive
-        decode exactly (values up to the usual f32 summation order); only
-        ``rounds_used`` reports the full budget and the early-exit cost
-        saving is forgone (per-element early exit in the batch axis is a
-        ROADMAP item)."""
+        ``adaptive`` overrides the engine's policy for this call (``None``
+        = engine default).  Adaptive batches run the PER-SLOT early-exit
+        decode (:func:`repro.core.decoder.peel_decode_batch_adaptive`): each
+        slot stops at its own fixpoint under ``decode_iters`` (or its entry
+        in ``budgets``, a traced per-slot round-budget vector), and
+        ``rounds_used`` comes back as the per-slot ``(B,)`` stats vector —
+        per-slot unresolved counts are ``result.erased.sum(axis=1)``.
+        ``budgets`` is only meaningful for adaptive decodes."""
+        use_adaptive = self.adaptive if adaptive is None else adaptive
+        if use_adaptive:
+            return peel_decode_batch_adaptive(
+                self.code, values, erased, self.decode_iters,
+                backend=self.backend, budgets=budgets)
+        if budgets is not None:
+            raise ValueError(
+                "budgets= requires the adaptive batched decode (engine "
+                "adaptive=True or decode_batch(adaptive=True)); the fixed-D "
+                "path would silently ignore the per-slot round budgets")
         return peel_decode_batch(self.code, values, erased, self.decode_iters,
                                  backend=self.backend)
 
@@ -174,9 +192,14 @@ class CodedComputeEngine:
         dec = self.decode(self.erase(symbols, mask), mask)
         return self.systematic(dec)
 
-    def recover_batch(self, symbols: jax.Array, mask: jax.Array
+    def recover_batch(self, symbols: jax.Array, mask: jax.Array, *,
+                      adaptive: bool | None = None,
+                      budgets: jax.Array | None = None
                       ) -> tuple[jax.Array, jax.Array]:
         """erase → decode → epilogue for B patterns in one launch: returns
-        (B, K, ...) zero-filled systematic values and (B, K) unresolved."""
-        dec = self.decode_batch(self.erase(symbols, mask), mask)
+        (B, K, ...) zero-filled systematic values and (B, K) unresolved.
+        ``adaptive`` / ``budgets`` pass through to :meth:`decode_batch`
+        (per-slot early exit and round budgets)."""
+        dec = self.decode_batch(self.erase(symbols, mask), mask,
+                                adaptive=adaptive, budgets=budgets)
         return self.systematic(dec)

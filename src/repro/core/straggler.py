@@ -45,14 +45,22 @@ class BernoulliStragglers:
 @dataclasses.dataclass(frozen=True)
 class FixedCountStragglers:
     """Exactly ``s`` uniformly-random stragglers per step (the paper's
-    experimental setting: wait for the fastest ``w - s`` workers)."""
+    experimental setting: wait for the fastest ``w - s`` workers).
+
+    The mask is built from a random permutation's first ``s`` indices, so
+    the count is exactly ``s`` by construction.  (The previous
+    ``scores >= top_k(scores, s)[-1]`` comparison over-erased whenever the
+    threshold score was tied — f32 uniforms collide with probability
+    ~``w²/2²⁵`` per step, which is a real event over long runs.)
+    """
 
     s: int
 
     def sample(self, key: jax.Array, w: int) -> jax.Array:
-        scores = jax.random.uniform(key, (w,))
-        thresh = jax.lax.top_k(scores, self.s)[0][-1] if self.s > 0 else jnp.inf
-        return scores >= thresh if self.s > 0 else jnp.zeros((w,), bool)
+        if self.s <= 0:
+            return jnp.zeros((w,), bool)
+        idx = jax.random.permutation(key, w)[: self.s]
+        return jnp.zeros((w,), bool).at[idx].set(True)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,17 +6,22 @@ interpret-mode behaviour off-TPU).  ``peel_decode_batch_pallas`` extends it
 with a first-class batch axis over independent erasure patterns (grid over
 the batch, H resident in VMEM and shared), and
 ``peel_decode_adaptive_pallas`` runs the early-exit decode as one launch via
-an in-kernel while_loop.  ``peel_round_pallas`` keeps the single-round
-check-pass path for experimentation and tests.
+an in-kernel while_loop, and ``peel_decode_batch_adaptive_pallas`` combines
+the two axes: per-slot adaptive early exit (with per-slot round budgets)
+across a batch of independent erasure patterns, still one launch.
+``peel_round_pallas`` keeps the single-round check-pass path for
+experimentation and tests.
 """
 from repro.kernels.ldpc_peel.kernel import (
     check_pass,
     decode_fused,
     decode_fused_adaptive,
     decode_fused_batch,
+    decode_fused_batch_adaptive,
 )
 from repro.kernels.ldpc_peel.ops import (
     peel_decode_adaptive_pallas,
+    peel_decode_batch_adaptive_pallas,
     peel_decode_batch_pallas,
     peel_decode_pallas,
     peel_round_pallas,
@@ -24,5 +29,6 @@ from repro.kernels.ldpc_peel.ops import (
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_batch_pallas", "peel_decode_adaptive_pallas",
+           "peel_decode_batch_adaptive_pallas",
            "check_pass", "decode_fused", "decode_fused_batch",
-           "decode_fused_adaptive"]
+           "decode_fused_adaptive", "decode_fused_batch_adaptive"]

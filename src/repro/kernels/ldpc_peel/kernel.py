@@ -18,7 +18,17 @@ Four kernels live here:
 * :func:`decode_fused_adaptive` — the early-exit decode as one launch: an
   in-kernel ``lax.while_loop`` on the unresolved count replicates
   ``peel_decode_adaptive``'s exact stopping rule (progress made AND
-  erasures remain AND round budget left), emitting the rounds-used count.
+  erasures remain AND round budget left), emitting the rounds-used count;
+* :func:`decode_fused_batch_adaptive` — per-slot adaptive decode of ``B``
+  independent erasure patterns in one launch: the grid runs over the slots
+  (H resident/shared in VMEM as in :func:`decode_fused_batch`) and each
+  grid step runs its OWN in-kernel ``while_loop`` whose predicate combines
+  that slot's convergence state with a PER-SLOT round budget streamed in as
+  a ``(1, 1)`` int32 block — a light-straggler slot exits after 1-2 rounds
+  while a heavy one keeps peeling, and the per-slot rounds-used vector
+  comes back out.  This is the kernel behind
+  ``CodedComputeEngine.decode_batch(adaptive=True)`` and the serving
+  layer's continuous-admission slot server.
 
 The in-kernel "scatter" is expressed MXU-style: the per-check resolution
 one-hot ``(p, N)`` is transposed into a matmul that accumulates each
@@ -51,7 +61,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["check_pass", "decode_fused", "decode_fused_batch",
-           "decode_fused_adaptive", "detect_interpret"]
+           "decode_fused_adaptive", "decode_fused_batch_adaptive",
+           "detect_interpret"]
 
 
 def detect_interpret(interpret: bool | None) -> bool:
@@ -330,3 +341,82 @@ def decode_fused_adaptive(H: jax.Array, values: jax.Array,
         ],
         interpret=interpret,
     )(H, values, erased_f)
+
+
+# ------------------------------------- per-slot adaptive batched decode --
+
+
+def _decode_batch_adaptive_kernel(H_ref, vals_ref, erased_ref, budget_ref,
+                                  out_vals_ref, out_erased_ref,
+                                  out_rounds_ref):
+    round_body = _flood_round(H_ref[...])  # H shared across the whole batch
+    budget = budget_ref[0, 0]  # THIS slot's round budget
+
+    def cond(carry):
+        _, e, d, progressed = carry
+        return (d < budget) & progressed & (jnp.max(e) > 0.0)
+
+    def body(carry):
+        vals, e, d, _ = carry
+        vals2, e2 = round_body(vals, e)
+        return vals2, e2, d + 1, jnp.any(e2 != e)
+
+    vals, e, d, _ = jax.lax.while_loop(
+        cond, body,
+        (vals_ref[0], erased_ref[0], jnp.int32(0), jnp.bool_(True)),
+    )
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def decode_fused_batch_adaptive(H: jax.Array, values: jax.Array,
+                                erased_f: jax.Array, budgets: jax.Array, *,
+                                bv: int = 128, interpret: bool | None = None):
+    """Per-slot adaptive decode of ``B`` independent patterns, ONE launch.
+
+    Inputs (already padded by ops.py): H (p, N) f32 with p % 8 == 0 and
+    N % 128 == 0; values (B, N, V) f32 with V % bv == 0; erased_f (B, N, 1)
+    f32; budgets (B, 1) int32 — each slot's round budget.  The grid is
+    ``(B, V // bv)`` with the H block's index map constant, so H is fetched
+    into VMEM once and stays resident across the whole batch while per-slot
+    payload/mask/budget tiles stream through.  Each grid step runs its own
+    ``while_loop`` with the slot's convergence predicate (progress made AND
+    erasures remain AND slot budget left) — converged slots exit after the
+    exact round count ``peel_decode_adaptive`` would use, independent of the
+    other slots.  The round budget is a TRACED operand, so serving layers
+    can vary per-slot budgets launch-to-launch without recompiling.
+
+    ``interpret=None`` = backend-detected (compiled on TPU, else interpret).
+
+    Returns (values (B, N, V) f32, erased (B, N, 1) f32, rounds (B, 1) i32).
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    B, _, V = values.shape
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        _decode_batch_adaptive_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, N), lambda b, j: (0, 0)),      # H: resident
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),      # slot budget
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            # grid steps sharing a batch index recompute the identical
+            # trajectory (it depends only on H, the mask, and the budget)
+            # and rewrite the same block — benign (sequential grid on TPU).
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(H, values, erased_f, budgets)

@@ -13,6 +13,11 @@
   (in-kernel ``while_loop`` on the unresolved count), so
   ``peel_decode_adaptive(backend="pallas")`` keeps single-launch parity with
   the fixed-D path.
+* :func:`peel_decode_batch_adaptive_pallas` — per-slot adaptive decode of B
+  independent patterns in one launch: grid over the slots, each with its own
+  in-kernel ``while_loop`` and (traced) round budget; the kernel side of
+  ``CodedComputeEngine.decode_batch(adaptive=True)`` and the serving
+  layer's continuous-admission launches.
 
 ``interpret`` defaults to ``None`` = backend-detected: compiled on TPU,
 interpret mode elsewhere (CPU CI runs the same kernel code path, slowly but
@@ -31,11 +36,13 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_fused,
     decode_fused_adaptive,
     decode_fused_batch,
+    decode_fused_batch_adaptive,
     detect_interpret,
 )
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas",
-           "peel_decode_batch_pallas", "peel_decode_adaptive_pallas"]
+           "peel_decode_batch_pallas", "peel_decode_adaptive_pallas",
+           "peel_decode_batch_adaptive_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -178,3 +185,38 @@ def peel_decode_adaptive_pallas(H, values, erased, max_iters: int, *,
                                       max_iters=int(max_iters),
                                       interpret=detect_interpret(interpret),
                                       bv=bv)
+
+
+@partial(jax.jit, static_argnames=("interpret", "bv"))
+def _peel_decode_batch_adaptive_impl(H, values, erased, budgets, *,
+                                     interpret: bool, bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    Hp, vp, ep = _pad_operands(H, vals,
+                               erased.astype(jnp.float32)[:, :, None], bv)
+    out_v, out_e, rounds = decode_fused_batch_adaptive(
+        Hp, vp, ep, budgets.astype(jnp.int32)[:, None],
+        bv=min(bv, vp.shape[2]), interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased, rounds[:, 0]
+
+
+def peel_decode_batch_adaptive_pallas(H, values, erased, budgets, *,
+                                      interpret: bool | None = None,
+                                      bv: int = 128):
+    """Per-slot adaptive decode of B independent patterns in ONE launch.
+
+    H (p, N) f32; values (B, N) or (B, N, V); erased (B, N) bool;
+    budgets (B,) int — each slot's round budget (a traced operand: varying
+    budgets never recompile).  Each slot follows exactly the
+    ``decoder.peel_decode_adaptive`` stopping rule under its own budget.
+    Returns (values, erased, rounds_used (B,)).
+    """
+    return _peel_decode_batch_adaptive_impl(
+        H, values, erased, jnp.asarray(budgets),
+        interpret=detect_interpret(interpret), bv=bv)

@@ -44,7 +44,7 @@ def main(argv=None):
     ap.add_argument("--decode-iters", type=int, default=8)
     ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--decode", default="dense",
-                    choices=["dense", "dense-fused", "sparse"])
+                    choices=["dense", "dense-fused", "sparse", "pallas"])
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args(argv)
 

@@ -136,6 +136,15 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
       sparse      — H stored as (p, r) neighbour indices + edge values
                     (the Tanner graph IS r-regular): decode rounds become
                     gathers/scatters, no dense (p, N) traffic at all.
+      pallas      — the fused one-kernel decode
+                    (:func:`repro.kernels.ldpc_peel.peel_decode_pallas`):
+                    the whole fixed-D loop inside a single kernel with H
+                    resident in VMEM.  H is REPLICATED per chip (the
+                    kernel's VMEM-residency model shards the payload axis,
+                    not H), so its roofline trades collective traffic for
+                    per-chip H bandwidth; off-TPU the kernel lowers via
+                    interpret mode, so compile works everywhere but the
+                    HLO op mix is the emulated kernel, not Mosaic.
 
     Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
     """
@@ -189,6 +198,21 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
         args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
         in_sh = (sh(None, "model", dspec), sh("model", None), *common_sh)
         return jax.jit(step_fused, in_shardings=in_sh,
+                       out_shardings=sh()), args
+
+    if decode == "pallas":
+        from repro.kernels.ldpc_peel import peel_decode_pallas
+
+        def step_pallas(C_blocks, H, theta, b, mask, lr):
+            z = worker_products(C_blocks, theta, mask)
+            vals, erased = peel_decode_pallas(H, z, mask, decode_iters,
+                                              bv=8)  # nb is small; pad to 8
+            return update(vals, erased, theta, b, lr)
+
+        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+        # H replicated: the fused kernel keeps the whole H tile in VMEM.
+        in_sh = (sh(None, "model", dspec), sh(), *common_sh)
+        return jax.jit(step_pallas, in_shardings=in_sh,
                        out_shardings=sh()), args
 
     if decode != "sparse":

@@ -1,24 +1,39 @@
-"""Lockstep batcher for concurrent coded-compute queries.
+"""Continuous-admission slot server for concurrent coded-compute queries.
 
 The serving-side counterpart of :class:`repro.serving.batcher.WaveBatcher`,
 for the paper's workload instead of token decoding: clients submit coded
 matvec/gradient queries — each a ``(θ, straggler_mask)`` pair with its OWN
-independent straggler realization — and the batcher accumulates them into
-waves of ``B`` slots that flush through ONE batched
-encode→erase→decode→epilogue launch
-(:meth:`repro.core.coded_step.Scheme2.gradient_batch`, backed by
-:meth:`repro.core.engine.CodedComputeEngine.decode_batch`).
+independent straggler realization — and the batcher serves them through
+batched encode→erase→decode→epilogue launches over a fixed pool of ``B``
+decode slots.  Two admission policies share the pool:
 
-Lockstep means every wave has the same static shape: a partial final wave is
-padded with no-op queries (θ = 0, no stragglers) so the jitted flush
-compiles once and is reused for every wave.  ``launches`` counts the batched
-decode launches actually issued — the efficiency claim (B queries per
-launch) is observable, and tested.
+``mode="continuous"`` (default)
+    Slots retire and refill INDEPENDENTLY between launches, mirroring
+    WaveBatcher's slot model.  Every launch advances each in-flight slot by
+    at most ``rounds_per_launch`` peeling rounds via the PER-SLOT adaptive
+    batched decode (:meth:`repro.core.engine.CodedComputeEngine.decode_batch`
+    with ``adaptive=True`` and a per-slot round-budget vector): a
+    light-straggler query converges inside its first launch and its slot is
+    refilled from the FIFO queue, while a heavy query keeps its slot across
+    launches — light queries never wait on a heavy query's decode rounds.
+    Slot state (partial values, erasure mask, rounds spent) carries across
+    launches; per-query accounting (``rounds``, ``launches``,
+    ``admitted_launch`` / ``finished_launch``) makes the fairness and cost
+    claims observable, and tested.  With ``backend="pallas"`` every launch
+    is still ONE ``pallas_call`` (grid over slots, H resident in VMEM,
+    budgets a traced operand — no recompiles as budgets vary).
 
-This is the honest CPU-scale "serve many concurrent coded queries" driver;
-per-query asynchronous admission (continuous batching) would need a
-per-slot round-budget vector through the decode loop — noted as future work
-alongside WaveBatcher's equivalent limitation.
+``mode="lockstep"``
+    The PR-2 wave policy, kept as the measured baseline: queries flush in
+    waves of ``B`` through one fixed-budget batched launch
+    (:meth:`repro.core.coded_step.Scheme2.gradient_batch`); the whole wave
+    pays the worst-case round budget and refills only when it drains.
+
+Both modes pad partial occupancy with inert slots (θ = 0, no stragglers,
+round budget 0) so each jitted launch function compiles ONCE and is reused
+for every launch.  ``launches`` counts the batched decode launches actually
+issued — the efficiency claims (B queries per launch; per-query decode cost
+tracking realized stragglers) are observable, and tested.
 """
 from __future__ import annotations
 
@@ -31,6 +46,8 @@ import numpy as np
 
 __all__ = ["CodedQuery", "CodedQueryBatcher"]
 
+MODES = ("continuous", "lockstep")
+
 
 @dataclasses.dataclass
 class CodedQuery:
@@ -42,31 +59,121 @@ class CodedQuery:
     gradient: np.ndarray | None = None
     unresolved: int = -1
     done: bool = False
+    # per-query serving stats (filled by the batcher):
+    rounds: int = 0              # decode rounds charged to this query
+    #                              (-1: lockstep wave of an adaptive scheme —
+    #                               per-slot rounds unknown at this layer)
+    launches: int = 0            # batched launches this query rode in
+    admitted_launch: int = -1    # launch index at slot admission
+    finished_launch: int = -1    # launch index at retirement
 
 
 class CodedQueryBatcher:
-    """Wave/static batching of coded queries over one shared scheme.
+    """Slot-pool serving of coded queries over one shared scheme.
 
     ``scheme`` is any engine-backed scheme exposing
     ``gradient_batch(theta_B, mask_B)`` (e.g.
-    :class:`repro.core.coded_step.Scheme2`).  All queries share the scheme's
-    code and encoded operator; each brings its own straggler realization.
+    :class:`repro.core.coded_step.Scheme2`); continuous mode additionally
+    drives the scheme's engine stages directly (``C`` / ``b`` / ``engine``)
+    so partial decode state can live across launches.  All queries share the
+    scheme's code and encoded operator; each brings its own straggler
+    realization.  ``scheme.decode_iters`` is the per-query total round
+    budget in both modes; ``rounds_per_launch`` (continuous only, default
+    the full budget) caps how many rounds one launch may spend per slot —
+    smaller chunks retire/refill slots more often, bounding how long a
+    light query can be stuck behind a heavy one.
     """
 
-    def __init__(self, scheme, *, n_slots: int = 8):
+    def __init__(self, scheme, *, n_slots: int = 8, mode: str = "continuous",
+                 rounds_per_launch: int | None = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; want one of {MODES}")
         if not hasattr(scheme, "gradient_batch"):
             raise TypeError(
                 f"{type(scheme).__name__} has no gradient_batch; the coded "
                 "batcher needs an engine-backed scheme (e.g. Scheme2)")
+        if mode == "continuous" and not all(
+                hasattr(scheme, a)
+                for a in ("engine", "C", "finish_gradient",
+                          "worker_mask_to_erasure")):
+            raise TypeError(
+                f"{type(scheme).__name__} does not expose engine/C/"
+                "finish_gradient/worker_mask_to_erasure; continuous "
+                "admission needs the engine stages directly")
         self.scheme = scheme
+        self.mode = mode
         self.n_slots = n_slots
+        self.budget = int(scheme.decode_iters)
+        self.rounds_per_launch = (self.budget if rounds_per_launch is None
+                                  else int(rounds_per_launch))
+        if self.mode == "continuous" and self.rounds_per_launch < 1:
+            raise ValueError("rounds_per_launch must be >= 1")
         self.queue: deque[CodedQuery] = deque()
         self.finished: list[CodedQuery] = []
-        self.launches = 0  # batched decode launches issued
+        self.launches = 0   # batched decode launches issued
+        self.traces = 0     # jit traces of the launch fn (1 == compiled once)
         self._k = int(scheme.C.shape[1])
         self._N = int(scheme.w)
-        self._flush = jax.jit(
-            lambda th, m: scheme.gradient_batch(th, m))
+        if mode == "lockstep":
+            self._flush = self._make_lockstep_flush()
+        else:
+            self._init, self._launch = self._make_continuous_fns()
+            B = n_slots
+            self._slots: list[CodedQuery | None] = [None] * B
+            self._theta = np.zeros((B, self._k), np.float32)
+            self._mask = np.zeros((B, self._N), bool)
+            # decode state is DEVICE-RESIDENT across launches (inert slots
+            # get budget 0, so launch outputs pass their rows through);
+            # the host pulls only (B,) stats and retired slots' gradients.
+            self._vals = jnp.zeros((B, self._N), jnp.float32)
+            self._erased = jnp.zeros((B, self._N), bool)
+            self._fresh = np.zeros((B,), bool)
+            self._used = np.zeros((B,), np.int32)
+
+    # ------------------------------------------------------- jitted launches
+
+    def _make_lockstep_flush(self):
+        scheme = self.scheme
+
+        def flush(th, m):
+            self.traces += 1  # trace-time side effect: counts compilations
+            return scheme.gradient_batch(th, m)
+
+        return jax.jit(flush)
+
+    def _make_continuous_fns(self):
+        scheme = self.scheme
+        eng = scheme.engine
+        C = jnp.asarray(scheme.C)
+
+        def init(theta_B, mask_B, vals_B, erased_B, fresh_B):
+            # Admission-time encode: fresh slots start from their worker
+            # products (erased through the scheme's mask→erasure hook, as
+            # gradient_batch does); in-flight slots keep their carried
+            # partial decode state.  Called only on launches that admitted
+            # — heavy queries' tail launches skip the (B, k) @ (k, N)
+            # matvec.
+            Z = theta_B @ C.T                               # (B, N)
+            erased_new = jax.vmap(scheme.worker_mask_to_erasure)(mask_B)
+            vals = jnp.where(fresh_B[:, None],
+                             eng.erase(Z, erased_new), vals_B)
+            er = jnp.where(fresh_B[:, None], erased_new, erased_B)
+            return vals, er
+
+        def launch(vals, er, budgets_B):
+            self.traces += 1  # trace-time side effect: counts compilations
+            dec = eng.decode_batch(vals, er, adaptive=True,
+                                   budgets=budgets_B)
+            c_hat, unresolved = eng.systematic(dec)
+            # the scheme's own epilogue (zero-filled b̂ + debias) — shared
+            # with gradient / gradient_batch, so the rules cannot diverge
+            g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+            return (dec.values, dec.erased, dec.rounds_used, g, n_unres,
+                    dec.erased.sum(axis=1))
+
+        return jax.jit(init), jax.jit(launch)
+
+    # ---------------------------------------------------------------- intake
 
     def submit(self, query: CodedQuery) -> None:
         if query.theta.shape != (self._k,):
@@ -78,7 +185,12 @@ class CodedQueryBatcher:
 
     @property
     def active(self) -> bool:
+        if self.mode == "continuous" and any(
+                s is not None for s in self._slots):
+            return True
         return bool(self.queue)
+
+    # ------------------------------------------------------------- lockstep
 
     def _run_wave(self, wave: list[CodedQuery]) -> None:
         B = self.n_slots
@@ -89,6 +201,16 @@ class CodedQueryBatcher:
             mask_B[s] = q.straggler_mask
         grads, unresolved = self._flush(jnp.asarray(theta_B),
                                         jnp.asarray(mask_B))
+        # Fixed-budget waves charge every query the full budget; a scheme
+        # built with adaptive=True early-exits per slot inside the flush,
+        # so the actual per-slot rounds are unknown at this layer (-1).
+        wave_rounds = (-1 if getattr(self.scheme, "adaptive", False)
+                       else self.budget)
+        for s, q in enumerate(wave):
+            q.admitted_launch = self.launches
+            q.finished_launch = self.launches
+            q.launches = 1
+            q.rounds = wave_rounds
         self.launches += 1
         grads = np.asarray(grads)
         unresolved = np.asarray(unresolved)
@@ -98,10 +220,73 @@ class CodedQueryBatcher:
             q.done = True
             self.finished.append(q)
 
+    # ----------------------------------------------------------- continuous
+
+    def _admit(self) -> None:
+        """FIFO: fill every free slot from the head of the queue."""
+        for s in range(self.n_slots):
+            if self._slots[s] is not None or not self.queue:
+                continue
+            q = self.queue.popleft()
+            self._slots[s] = q
+            self._theta[s] = q.theta
+            self._mask[s] = q.straggler_mask
+            self._fresh[s] = True
+            self._used[s] = 0
+            q.admitted_launch = self.launches
+
+    def _step_continuous(self) -> None:
+        occupied = np.array([q is not None for q in self._slots])
+        budgets = np.where(
+            occupied,
+            np.minimum(self.rounds_per_launch, self.budget - self._used),
+            0).astype(np.int32)
+        if self._fresh.any():   # encode newly admitted slots' worker products
+            self._vals, self._erased = self._init(
+                jnp.asarray(self._theta), jnp.asarray(self._mask),
+                self._vals, self._erased, jnp.asarray(self._fresh))
+        self._vals, self._erased, rounds_d, g, unres_d, ecnt_d = \
+            self._launch(self._vals, self._erased, jnp.asarray(budgets))
+        launch_idx = self.launches
+        self.launches += 1
+        rounds, unres, ecnt = (np.asarray(rounds_d), np.asarray(unres_d),
+                               np.asarray(ecnt_d))
+        self._fresh[:] = False
+        for s, q in enumerate(self._slots):
+            if q is None:
+                continue
+            q.launches += 1
+            q.rounds += int(rounds[s])
+            self._used[s] += rounds[s]
+            # Early exit (rounds < budget) or full resolution == this slot
+            # is at its fixpoint.  A slot whose fixpoint lands EXACTLY on
+            # its chunk boundary is detected one launch later via a
+            # no-progress probe round — the same probe round the sequential
+            # adaptive decode charges for stall detection, so per-query
+            # rounds accounting stays parity-exact.
+            converged = (int(rounds[s]) < int(budgets[s])
+                         or int(ecnt[s]) == 0)
+            if converged or int(self._used[s]) >= self.budget:
+                q.gradient = np.asarray(g[s])   # pull the retired row only
+                q.unresolved = int(unres[s])
+                q.finished_launch = launch_idx
+                q.done = True
+                self.finished.append(q)
+                self._slots[s] = None
+
+    # ------------------------------------------------------------------ run
+
     def run(self) -> list[CodedQuery]:
-        """Drain the queue in lockstep waves; returns the finished queries."""
-        while self.queue:
-            wave = [self.queue.popleft()
-                    for _ in range(min(self.n_slots, len(self.queue)))]
-            self._run_wave(wave)
+        """Serve until the queue and all slots drain; returns finished
+        queries (continuous mode: in completion order, which is FIFO up to
+        heavy queries finishing later)."""
+        if self.mode == "lockstep":
+            while self.queue:
+                wave = [self.queue.popleft()
+                        for _ in range(min(self.n_slots, len(self.queue)))]
+                self._run_wave(wave)
+            return self.finished
+        while self.active:
+            self._admit()
+            self._step_continuous()
         return self.finished

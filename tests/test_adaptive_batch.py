@@ -1,0 +1,210 @@
+"""Per-slot adaptive batched decode: parity with the sequential adaptive
+decode across every backend, per-slot round budgets, edge cases, and the
+one-launch property of the fused kernel.
+
+Contract (mirrors test_engine.py's batched fixed-D contract):
+``peel_decode_batch_adaptive`` of B independent patterns follows
+BIT-IDENTICAL erasure trajectories AND per-slot round counts to a Python
+loop of B sequential ``peel_decode_adaptive`` calls, on every backend;
+decoded values agree up to f32 summation order, so value agreement is
+anchored to the single decode's own deviation from the true codeword.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CodedComputeEngine,
+    Scheme2,
+    make_regular_ldpc,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    peel_decode_batch_adaptive,
+    second_moment,
+)
+from repro.data import make_linear_problem
+
+BACKENDS = ("dense", "sparse", "pallas")
+
+
+def _batch_instance(code, *, B, V, qs, seed):
+    rng = np.random.default_rng(seed)
+    sh = (B, code.K) if V is None else (B, code.K, V)
+    msgs = rng.standard_normal(sh)
+    cws = np.einsum("nk,bk...->bn...", code.G, msgs)
+    erased = rng.random((B, code.N)) < np.asarray(qs)[:, None]
+    emask = erased if V is None else erased[:, :, None]
+    rx = jnp.asarray(np.where(emask, 0.0, cws), jnp.float32)
+    return cws, rx, jnp.asarray(erased)
+
+
+def _assert_matches_sequential(code, cws, rx, erased, budgets):
+    B = rx.shape[0]
+    for backend in BACKENDS:
+        bat = peel_decode_batch_adaptive(code, rx, erased, backend=backend,
+                                         budgets=jnp.asarray(budgets))
+        assert bat.rounds_used.shape == (B,)
+        for i in range(B):
+            single = peel_decode_adaptive(code, rx[i], erased[i],
+                                          int(budgets[i]), backend=backend)
+            # bit-for-bit: same per-slot round count and erasure endpoint
+            assert int(bat.rounds_used[i]) == int(single.rounds_used), \
+                f"backend={backend} slot={i}: round count diverged"
+            np.testing.assert_array_equal(
+                np.asarray(bat.erased[i]), np.asarray(single.erased),
+                err_msg=f"backend={backend} slot={i}: mask diverged")
+            # values: anchored to the single decode's own f32 conditioning
+            ok = ~np.asarray(single.erased)
+            truth, got_s = np.asarray(cws[i]), np.asarray(single.values)
+            dev = float(np.max(np.abs(got_s[ok] - truth[ok]), initial=0.0))
+            atol = max(5e-4, 3.0 * dev)
+            np.testing.assert_allclose(
+                np.asarray(bat.values[i]), got_s, rtol=atol, atol=atol,
+                err_msg=f"backend={backend} slot={i}: values diverged")
+
+
+@pytest.mark.parametrize("K,B,V,qs,seed", [
+    # ragged mix: clean, light, moderate, heavy slots -> ragged round counts
+    (20, 4, None, (0.0, 0.1, 0.25, 0.4), 0),
+    (60, 5, 3, (0.05, 0.2, 0.3, 0.4, 0.25), 1),   # N=120 (not 128k), payload V
+    (100, 4, None, (0.4, 0.0, 0.3, 0.4), 2),      # heavy first, clean inside
+])
+def test_batched_adaptive_matches_sequential(K, B, V, qs, seed):
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    cws, rx, erased = _batch_instance(code, B=B, V=V, qs=qs, seed=seed)
+    _assert_matches_sequential(code, cws, rx, erased, [code.N] * B)
+
+
+def test_batched_adaptive_per_slot_budgets():
+    """Per-slot budgets truncate exactly like sequential max_iters — and are
+    traced (two different budget vectors reuse one compilation)."""
+    code = make_regular_ldpc(60, l=3, r=6, seed=3)
+    cws, rx, erased = _batch_instance(code, B=4, V=None,
+                                      qs=(0.3, 0.3, 0.3, 0.3), seed=3)
+    _assert_matches_sequential(code, cws, rx, erased, [0, 1, 2, code.N])
+
+
+def test_batched_adaptive_all_and_none_converged_edges():
+    """Edges: nothing erased anywhere (0 rounds per slot) and everything
+    erased everywhere (never solvable: one probe round, all unresolved)."""
+    code = make_regular_ldpc(32, l=3, r=6, seed=4)
+    rng = np.random.default_rng(4)
+    msgs = rng.standard_normal((3, code.K))
+    cws = np.einsum("nk,bk->bn", code.G, msgs)
+    rx = jnp.asarray(cws, jnp.float32)
+    clean = jnp.zeros((3, code.N), bool)
+    full = jnp.ones((3, code.N), bool)
+    for backend in BACKENDS:
+        dec = peel_decode_batch_adaptive(code, rx, clean, backend=backend)
+        assert np.asarray(dec.rounds_used).tolist() == [0, 0, 0]
+        assert not bool(dec.erased.any())
+        np.testing.assert_allclose(np.asarray(dec.values), cws,
+                                   rtol=1e-6, atol=1e-6)
+        dec = peel_decode_batch_adaptive(code, jnp.zeros_like(rx), full,
+                                         backend=backend)
+        # r >= 2: no check is ever solvable -> one no-progress probe round
+        assert np.asarray(dec.rounds_used).tolist() == [1, 1, 1]
+        assert bool(dec.erased.all())
+
+
+def test_batched_adaptive_is_one_pallas_launch():
+    """The per-slot adaptive batched decode must stay ONE pallas_call —
+    grid over slots, in-kernel while_loop, budgets a traced operand."""
+    code = make_regular_ldpc(64, l=3, r=6, seed=0)
+    B = 3
+    vals = jnp.zeros((B, code.N), jnp.float32)
+    er = jnp.zeros((B, code.N), bool)
+    budgets = jnp.full((B,), 5, jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda v, e, bu: peel_decode_batch_adaptive(
+            code, v, e, backend="pallas", budgets=bu).values
+    )(vals, er, budgets)
+    assert str(jaxpr).count("pallas_call") == 1
+
+
+def test_batched_adaptive_rejects_bad_shapes():
+    code = make_regular_ldpc(20, l=3, r=6, seed=0)
+    with pytest.raises(ValueError):
+        peel_decode_batch_adaptive(code, jnp.zeros((code.N,)),
+                                   jnp.zeros((code.N,), bool))
+    with pytest.raises(ValueError):
+        peel_decode_batch_adaptive(code, jnp.zeros((2, code.N)),
+                                   jnp.zeros((2, code.N), bool),
+                                   budgets=jnp.zeros((3,), jnp.int32))
+
+
+def test_adaptive_matches_fixed_point_of_fixed_d():
+    """At a budget >= convergence, per-slot adaptive reaches the same
+    endpoint as the fixed-D batch run at the full budget (the surplus
+    fixed-D rounds are no-ops) — the efficiency is free."""
+    code = make_regular_ldpc(48, l=3, r=6, seed=6)
+    cws, rx, erased = _batch_instance(code, B=4, V=None,
+                                      qs=(0.0, 0.1, 0.3, 0.2), seed=6)
+    for backend in BACKENDS:
+        ada = peel_decode_batch_adaptive(code, rx, erased, code.N,
+                                         backend=backend)
+        fix = peel_decode_batch(code, rx, erased, code.N, backend=backend)
+        np.testing.assert_array_equal(np.asarray(ada.erased),
+                                      np.asarray(fix.erased))
+        np.testing.assert_allclose(np.asarray(ada.values),
+                                   np.asarray(fix.values),
+                                   rtol=1e-5, atol=1e-5)
+        assert int(jnp.max(ada.rounds_used)) <= code.N
+
+
+# --------------------------------------------------------- engine / scheme
+
+
+def test_engine_decode_batch_adaptive_stats_and_override():
+    code = make_regular_ldpc(64, l=3, r=6, seed=5)
+    rng = np.random.default_rng(5)
+    msgs = rng.standard_normal((4, code.K))
+    sym = np.einsum("nk,bk->bn", code.G, msgs)
+    er = rng.random((4, code.N)) < np.array([0.0, 0.1, 0.3, 0.5])[:, None]
+    rx = jnp.asarray(np.where(er, 0.0, sym), jnp.float32)
+    erj = jnp.asarray(er)
+
+    eng = CodedComputeEngine(code, decode_iters=10, adaptive=True,
+                             backend="sparse")
+    dec = eng.decode_batch(rx, erj)
+    assert dec.rounds_used.shape == (4,)           # per-slot stats
+    assert int(dec.rounds_used[0]) == 0            # clean slot: zero rounds
+    assert int(dec.rounds_used[2]) > int(dec.rounds_used[1])
+    # per-slot unresolved counts are derivable from the per-slot mask
+    assert np.asarray(dec.erased.sum(axis=1)).shape == (4,)
+
+    # explicit override: fixed-D on an adaptive engine and vice versa
+    assert eng.decode_batch(rx, erj, adaptive=False).rounds_used.ndim == 0
+    fixed_eng = CodedComputeEngine(code, decode_iters=10, backend="sparse")
+    assert fixed_eng.decode_batch(rx, erj, adaptive=True
+                                  ).rounds_used.shape == (4,)
+    # budgets on a fixed-D decode would be silently ignored -> hard error
+    with pytest.raises(ValueError):
+        fixed_eng.decode_batch(rx, erj, budgets=jnp.array([1, 1, 1, 1]))
+
+    # budgets thread through recover_batch too
+    c_hat, unres = eng.recover_batch(jnp.asarray(sym, jnp.float32), erj,
+                                     budgets=jnp.array([0, 0, 0, 0]))
+    assert c_hat.shape == (4, code.K)
+    np.testing.assert_array_equal(np.asarray(unres), er[:, :code.K])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scheme2_adaptive_gradient_batch_matches_loop(backend):
+    """Adaptive Scheme2.gradient_batch == per-query adaptive gradient."""
+    prob = make_linear_problem(m=256, k=60, seed=1)
+    code = make_regular_ldpc(60, l=3, r=6, seed=1)
+    mom = second_moment(prob.X, prob.y)
+    s2 = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8, adaptive=True,
+                       decode_backend=backend)
+    rng = np.random.default_rng(2)
+    B = 5
+    theta_B = jnp.asarray(rng.standard_normal((B, 60)), jnp.float32)
+    mask_B = jnp.asarray(rng.random((B, code.N)) < 0.2)
+    g_B, u_B = s2.gradient_batch(theta_B, mask_B)
+    for i in range(B):
+        g, u = s2.gradient(theta_B[i], mask_B[i])
+        assert int(u_B[i]) == int(u)
+        np.testing.assert_allclose(np.asarray(g_B[i]), np.asarray(g),
+                                   rtol=2e-3, atol=2e-3)

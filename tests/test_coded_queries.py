@@ -1,4 +1,5 @@
-"""Serving-layer lockstep batcher for concurrent coded queries."""
+"""Serving-layer batcher for concurrent coded queries: lockstep waves and
+continuous per-slot admission."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,8 +14,8 @@ CODE = make_regular_ldpc(K, l=3, r=6, seed=0)
 MOM = second_moment(PROB.X, PROB.y)
 
 
-def _scheme(backend="sparse"):
-    return Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=8,
+def _scheme(backend="sparse", decode_iters=8):
+    return Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=decode_iters,
                          decode_backend=backend)
 
 
@@ -22,6 +23,14 @@ def _queries(n, seed=0, q=0.2):
     rng = np.random.default_rng(seed)
     return [CodedQuery(i, rng.standard_normal(K).astype(np.float32),
                        rng.random(CODE.N) < q) for i in range(n)]
+
+
+def _assert_matches_reference(q, scheme, rtol=2e-3):
+    g_ref, u_ref = scheme.gradient(jnp.asarray(q.theta),
+                                   jnp.asarray(q.straggler_mask))
+    assert q.unresolved == int(u_ref)
+    np.testing.assert_allclose(q.gradient, np.asarray(g_ref),
+                               rtol=rtol, atol=rtol)
 
 
 def test_waves_flush_through_one_launch_each():
@@ -83,3 +92,142 @@ def test_rejects_scheme_without_batch_api():
 
     with pytest.raises(TypeError):
         CodedQueryBatcher(NoBatch())
+
+
+def test_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        CodedQueryBatcher(_scheme(), mode="async")
+
+
+# ------------------------------------------------------ continuous admission
+
+
+def _heavy_light_queries(n, *, heavy_ids, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        q = 0.42 if i in heavy_ids else 0.08
+        out.append(CodedQuery(i, rng.standard_normal(K).astype(np.float32),
+                              rng.random(CODE.N) < q))
+    return out
+
+
+def test_lockstep_mode_flushes_in_waves():
+    """The explicit lockstep baseline keeps the PR-2 wave contract."""
+    bat = CodedQueryBatcher(_scheme(), n_slots=4, mode="lockstep")
+    for q in _queries(10):
+        bat.submit(q)
+    done = bat.run()
+    assert len(done) == 10 and bat.launches == 3
+    # every wave pays the fixed budget; accounting says so
+    assert all(q.rounds == 8 and q.launches == 1 for q in done)
+    for q in done:
+        _assert_matches_reference(q, _scheme())
+
+
+def test_continuous_light_never_waits_on_heavy():
+    """One heavy query pins a slot across launches; light queries stream
+    through the remaining slot, one launch each."""
+    scheme = _scheme(decode_iters=12)
+    bat = CodedQueryBatcher(scheme, n_slots=2, rounds_per_launch=2)
+    qs = _heavy_light_queries(5, heavy_ids={0}, seed=3)
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    heavy, lights = qs[0], qs[1:]
+    assert heavy.launches > 1                       # spans several launches
+    assert all(q.launches == 1 for q in lights)     # lights: in-and-out
+    assert all(q.finished_launch <= heavy.finished_launch for q in lights)
+    assert heavy.rounds > max(q.rounds for q in lights)
+    for q in lights:
+        _assert_matches_reference(q, scheme)
+
+
+def test_continuous_results_match_single_query_path():
+    scheme = _scheme()
+    bat = CodedQueryBatcher(scheme, n_slots=4, rounds_per_launch=3)
+    queries = _queries(9, seed=1)
+    for q in queries:
+        bat.submit(q)
+    done = bat.run()
+    assert len(done) == 9
+    for q in queries:
+        _assert_matches_reference(q, scheme)
+
+
+def test_continuous_fifo_admission_and_refill():
+    """Slots refill from the FIFO head: admission order == submission
+    order, and a retired slot is reused by the next queued query."""
+    bat = CodedQueryBatcher(_scheme(), n_slots=2, rounds_per_launch=8)
+    qs = _queries(7, seed=2)
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    admits = [q.admitted_launch for q in qs]
+    assert admits == sorted(admits)                 # FIFO admission order
+    assert admits[0] == admits[1] == 0              # first pair fills pool
+    assert len({q.admitted_launch for q in qs}) >= 3  # refills happened
+    assert not bat.active
+
+
+def test_continuous_launch_accounting():
+    """launches counts batched launches; per-query launches sum to the
+    slot-launch occupancy (every occupied slot rides every launch once)."""
+    bat = CodedQueryBatcher(_scheme(), n_slots=4, rounds_per_launch=8)
+    qs = _queries(10, seed=0)
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    # light q=0.2 queries converge within one 8-round chunk -> wave-like
+    assert bat.launches == 3
+    assert sum(q.launches for q in qs) == 10
+    assert all(q.finished_launch >= q.admitted_launch for q in qs)
+
+
+def test_continuous_partial_pool_padding_compiles_once():
+    """Inert padding slots keep every launch the same static shape: ONE
+    trace of the launch fn serves full, partial, and refilled pools."""
+    scheme = _scheme()
+    bat = CodedQueryBatcher(scheme, n_slots=8, rounds_per_launch=2)
+    qs = _queries(11, seed=4, q=0.25)   # 11 queries, 8 slots: partial waves
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    assert len(bat.finished) == 11
+    assert bat.traces == 1
+    for q in qs:
+        _assert_matches_reference(q, scheme)
+
+
+def test_continuous_single_query_matches_unbatched():
+    """A lone query in an 8-slot pool gets the same answer as unbatched."""
+    scheme = _scheme()
+    bat = CodedQueryBatcher(scheme, n_slots=8)
+    [q] = _queries(1, seed=2, q=0.3)
+    bat.submit(q)
+    bat.run()
+    _assert_matches_reference(q, scheme)
+
+
+def test_continuous_budget_exhaustion_matches_fixed_d():
+    """A query that cannot fully decode within the budget retires with the
+    same unresolved set and gradient as the fixed-budget reference."""
+    scheme = _scheme(decode_iters=2)    # tiny budget: q=0.3 won't finish
+    bat = CodedQueryBatcher(scheme, n_slots=2, rounds_per_launch=1)
+    qs = _queries(4, seed=5, q=0.3)
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    assert any(q.unresolved > 0 for q in qs)
+    for q in qs:
+        assert q.rounds <= 2
+        _assert_matches_reference(q, scheme)
+
+
+def test_continuous_requires_engine_backed_scheme():
+    class BatchOnly:
+        def gradient_batch(self, th, m):
+            return th, m
+
+    with pytest.raises(TypeError):
+        CodedQueryBatcher(BatchOnly(), mode="continuous")

@@ -72,6 +72,26 @@ def test_param_shardings_divisibility():
             lambda p, l, s: check(p, l, s), shapes, shardings)
 
 
+def test_paper_dryrun_pallas_variant():
+    """The fused-kernel decode variant must lower+compile in the AOT
+    roofline comparison alongside dense/dense-fused/sparse (H replicated,
+    interpret-mode lowering off-TPU)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.paper_dryrun", "--k", "1024",
+         "--K", "512", "--decode-iters", "4", "--decode", "pallas"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert res.returncode == 0, f"paper_dryrun failed:\n{res.stdout}\n{res.stderr}"
+    assert "scheme2-k1024-D4-f32-pallas" in res.stdout
+    assert "roofline:" in res.stdout
+    out = json.loads((REPO / "artifacts" / "dryrun" /
+                      "paper-coded-gd__scheme2-k1024-D4-f32-pallas__16_16.json"
+                      ).read_text())
+    assert out["ok"] and out["shape"].endswith("-pallas")
+
+
 def test_input_specs_all_shapes():
     from repro.configs import get_config
     from repro.launch.specs import SHAPES, input_specs

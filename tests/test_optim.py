@@ -109,6 +109,22 @@ def test_fixed_count_exact_s():
     assert int(FixedCountStragglers(0).sample(jax.random.PRNGKey(0), 40).sum()) == 0
 
 
+def test_fixed_count_exact_s_always_and_uniform():
+    """Permutation-based sampling: EXACTLY s for every key (the old
+    score-threshold comparison over-erased on f32 score ties), all workers
+    reachable, full-erasure edge included, and jit-able."""
+    for s, w in ((1, 8), (5, 40), (39, 40), (40, 40)):
+        model = FixedCountStragglers(s)
+        keys = jax.random.split(jax.random.PRNGKey(s), 300)
+        masks = np.stack([np.asarray(model.sample(k, w)) for k in keys])
+        assert (masks.sum(axis=1) == s).all(), (s, w)
+        if 0 < s < w:
+            assert masks.any(axis=0).all(), "some worker never straggles"
+            assert not masks.all(axis=0).any(), "some worker always straggles"
+    jitted = jax.jit(lambda k: FixedCountStragglers(3).sample(k, 16))
+    assert int(jitted(jax.random.PRNGKey(0)).sum()) == 3
+
+
 def test_adversarial_fixed_set():
     model = AdversarialStragglers((1, 5))
     m1 = model.sample(jax.random.PRNGKey(0), 10)
