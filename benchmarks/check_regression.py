@@ -1,7 +1,7 @@
-"""CI gate: fail on batched-decode or serving-policy regression vs the
-committed ``BENCH_decoder_scaling.json`` baseline.
+"""CI gate: fail on batched-decode, serving-policy, or distributed-runtime
+regression vs the committed ``BENCH_decoder_scaling.json`` baseline.
 
-Two gated quantities, both SAME-RUN ratios (numerator and denominator
+All gated quantities are SAME-RUN ratios (numerator and denominator
 measured in one benchmark run on one machine), which makes the checks
 hardware-independent — a CI runner that is uniformly slower than the
 machine that produced the committed baseline shifts both sides and leaves
@@ -11,17 +11,28 @@ the ratio alone, while a code change that erodes the win moves it directly:
   per-query advantage over B sequential single-pattern decodes;
 * ``speedup_vs_lockstep`` (``serving_sweep``) — continuous admission's
   mean per-query decode-cost advantage over lockstep waves on the mixed
-  light/heavy straggler stream.
+  light/heavy straggler stream;
+* ``single_vs_distributed`` (``distributed_scaling``) — the distributed
+  master/worker step's same-run overhead ratio vs the single-device step
+  (a control-plane or placement regression drags it down);
+* ``round_savings`` (``distributed_scaling``) — the telemetry budget
+  loop's mean-decode-rounds advantage over the fixed worst-case budget
+  (deterministic for a fixed seed: PRNG masks, count-based metric) —
+  together with ``quality_preservation`` (fixed/telemetry mean
+  unresolved), so round savings bought by abandoning recovery fail.
 
+``--sections`` selects which gates run (CI's tier-1 job gates
+batched+serving; the fake-8-device distributed job gates distributed).
 Every record present in both files is compared (batched records key on
-(mode, N, B, D); serving records on (mode, N, B, budget, chunk,
-n_queries)); the run fails if any fresh speedup drops more than ``--tol``
-(relative) below the baseline's.  Interpret-mode Pallas records are skipped
-(interpret-mode latency is not a tracked quantity).  Absolute per-query
-times are printed for context but never gate.
+(mode, N, B, D); serving on (mode, N, B, budget, chunk, n_queries);
+distributed on (mode, W, N)); the run fails if any fresh ratio drops more
+than ``--tol`` (relative) below the baseline's.  Interpret-mode Pallas
+records are skipped (interpret-mode latency is not a tracked quantity).
+Absolute per-query/per-step times are printed for context but never gate.
 
   python benchmarks/check_regression.py \
-      --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json
+      --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json \
+      --sections batched,serving
 """
 from __future__ import annotations
 
@@ -51,12 +62,23 @@ def _serving_records(path: Path) -> dict[tuple, dict]:
     return out
 
 
-def _gate(name: str, metric: str, base: dict, new: dict, tol: float
-          ) -> bool | None:
+def _distributed_records(path: Path, mode: str) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("distributed_scaling", []):
+        if rec["mode"] == mode:
+            out[(rec["mode"], rec["W"], rec["N"])] = rec
+    return out
+
+
+def _gate(name: str, metric: str, base: dict, new: dict, tol: float,
+          context_key: str = "per_query_us") -> bool | None:
     """Compare shared records on ``metric``.
 
     Returns True iff any record regressed, None if there was nothing to
     compare (config divergence — a distinct failure from a regression).
+    ``context_key`` names an absolute-time field printed for context when
+    both records carry it (never gated).
     """
     shared = sorted(set(base) & set(new))
     if not shared:
@@ -70,9 +92,12 @@ def _gate(name: str, metric: str, base: dict, new: dict, tol: float
         status = "OK"
         if ratio < 1.0 - tol:
             status, failed = "REGRESSION", True
-        print(f"  {key}: speedup {sb:6.2f}x -> {sn:6.2f}x ({ratio:5.2f} of "
-              f"baseline)  [{base[key]['per_query_us']:8.1f} -> "
-              f"{new[key]['per_query_us']:8.1f} us/q]  {status}")
+        ctx = ""
+        if context_key in base[key] and context_key in new[key]:
+            ctx = (f"  [{context_key} {base[key][context_key]:8.1f} -> "
+                   f"{new[key][context_key]:8.1f}]")
+        print(f"  {key}: {metric} {sb:6.2f}x -> {sn:6.2f}x ({ratio:5.2f} of "
+              f"baseline){ctx}  {status}")
     print(f"check_regression [{name}]: {len(shared)} records "
           f"{'FAILED' if failed else 'within tolerance'}")
     return failed
@@ -85,16 +110,45 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed relative drop in the gated same-run "
                          "speedup ratios (default 25%%)")
+    ap.add_argument("--sections", default="batched,serving,distributed",
+                    help="comma-separated gates to run "
+                         "(batched|serving|distributed)")
     args = ap.parse_args(argv)
+    sections = [s for s in args.sections.split(",") if s]
+    unknown = set(sections) - {"batched", "serving", "distributed"}
+    if unknown:
+        print(f"check_regression: unknown sections {sorted(unknown)}")
+        return 1
 
-    results = [
-        _gate("batched", "speedup_vs_sequential",
-              _batched_records(args.baseline),
-              _batched_records(args.new), args.tol),
-        _gate("serving", "speedup_vs_lockstep",
-              _serving_records(args.baseline),
-              _serving_records(args.new), args.tol),
-    ]
+    results = []
+    if "batched" in sections:
+        results.append(
+            _gate("batched", "speedup_vs_sequential",
+                  _batched_records(args.baseline),
+                  _batched_records(args.new), args.tol))
+    if "serving" in sections:
+        results.append(
+            _gate("serving", "speedup_vs_lockstep",
+                  _serving_records(args.baseline),
+                  _serving_records(args.new), args.tol))
+    if "distributed" in sections:
+        results.append(
+            _gate("dist-overhead", "single_vs_distributed",
+                  _distributed_records(args.baseline, "distributed-overhead"),
+                  _distributed_records(args.new, "distributed-overhead"),
+                  args.tol, context_key="per_step_us"))
+        results.append(
+            _gate("dist-telemetry", "round_savings",
+                  _distributed_records(args.baseline, "telemetry"),
+                  _distributed_records(args.new, "telemetry"), args.tol,
+                  context_key="telemetry_mean_rounds"))
+        # round savings must not be bought by giving up on recovery:
+        # fixed/telemetry mean-unresolved is gated the same way
+        results.append(
+            _gate("dist-quality", "quality_preservation",
+                  _distributed_records(args.baseline, "telemetry"),
+                  _distributed_records(args.new, "telemetry"), args.tol,
+                  context_key="telemetry_mean_unresolved"))
     if any(r is None for r in results):
         print("check_regression: FAILED (a gated section had no "
               "overlapping records — regenerate the committed baseline?)")

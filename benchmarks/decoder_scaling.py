@@ -41,6 +41,7 @@ import numpy as np
 from benchmarks.common import print_table
 from repro.core import FixedCountStragglers, make_regular_ldpc, peel_decode, \
     peel_decode_adaptive, peel_decode_batch, peel_decode_batch_adaptive
+from repro.serving.slot_lifecycle import SlotPool
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
 
@@ -201,23 +202,24 @@ def _serve_lockstep(code, rx, erased, *, B, budget):
     return serve, len(waves)
 
 
-def _serve_continuous(code, rx, erased, *, B, budget, chunk):
+def serve_continuous(code, rx, erased, *, B, budget, chunk,
+                     backend="sparse"):
     """Continuous admission simulated on the decode path: a pool of B slots
     advances by at most ``chunk`` per-slot adaptive rounds per launch;
     converged / budget-exhausted slots retire and refill FIFO — the
     ``CodedQueryBatcher(mode="continuous")`` slot lifecycle, minus the
     worker matvec and epilogue that both policies pay once per query (so
     the measured quantity is pure DECODE cost, the paper's adaptivity
-    claim).  NOTE: the lifecycle (admission order, budget chunking, retire
-    condition) is a hand-kept copy of
-    ``serving.coded_queries.CodedQueryBatcher._step_continuous`` — keep the
-    two in sync; the batcher's behavior itself is pinned by
-    tests/test_coded_queries.py.  Returns a callable running the whole
-    queue once and a stats dict (filled per run)."""
+    claim).  The lifecycle itself (admission order, budget chunking,
+    retire condition) is the SHARED ``serving.slot_lifecycle.SlotPool``
+    state machine — the same object the batcher drives, so the two can no
+    longer drift apart; ``benchmarks/distributed_scaling`` reuses this
+    driver for the master's decode-stream serving.  Returns a callable
+    running the whole queue once and a stats dict (filled per run)."""
     N = code.N
     nq = rx.shape[0]
     def _launch(v, e, bu):
-        dec = peel_decode_batch_adaptive(code, v, e, backend="sparse",
+        dec = peel_decode_batch_adaptive(code, v, e, backend=backend,
                                          budgets=bu)
         # per-slot unresolved counts on device: host only pulls (B,) stats
         return dec.values, dec.erased, dec.rounds_used, dec.erased.sum(axis=1)
@@ -234,44 +236,38 @@ def _serve_continuous(code, rx, erased, *, B, budget, chunk):
         # slot state stays DEVICE-RESIDENT across launches (free slots get
         # budget 0, so the decode passes their rows through untouched and
         # the outputs can be carried wholesale); the host sees only (B,)
-        # stats vectors for the retire/refill decisions.
+        # stats vectors for the retire/refill decisions, which live in the
+        # shared SlotPool.
+        pool = SlotPool(B, budget, chunk)
         vals = jnp.zeros((B, N), jnp.float32)
         er = jnp.zeros((B, N), bool)
-        used = np.zeros((B,), np.int32)
-        slot = np.full((B,), -1, np.int64)   # query index or -1 (free)
         nxt = done = launches = launch_rounds = slot_rounds = 0
         while done < nq:
-            fill = [s for s in range(B) if slot[s] < 0][: nq - nxt]
+            fill = pool.free_slots()[: nq - nxt]
             if fill:
                 idx = np.full((B,), B, np.int32)   # sentinel rows: dropped
                 nv = np.zeros((B, N), np.float32)
                 ne = np.zeros((B, N), bool)
                 for j, s in enumerate(fill):
+                    pool.admit(s, nxt + j)         # owner = query index
                     idx[j] = s
                     nv[j] = rx[nxt + j]
                     ne[j] = erased[nxt + j]
-                slot[fill] = range(nxt, nxt + len(fill))
-                used[fill] = 0
                 nxt += len(fill)
                 vals, er = refill(vals, er, jnp.asarray(idx),
                                   jnp.asarray(nv), jnp.asarray(ne))
-            occupied = slot >= 0
-            budgets = np.where(occupied,
-                               np.minimum(chunk, budget - used), 0)
+            occupied = pool.occupied
+            budgets = pool.launch_budgets()
             vals, er, rounds_d, unres_d = launch(
-                vals, er, jnp.asarray(budgets.astype(np.int32)))
+                vals, er, jnp.asarray(budgets))
             launches += 1
             rounds = np.asarray(rounds_d)
             unres = np.asarray(unres_d)
-            used[occupied] += rounds[occupied]
             # wall-cost proxy: the launch's while_loop runs until its
             # slowest active slot stops; work proxy: per-slot rounds spent.
             launch_rounds += int(rounds.max(initial=0))
             slot_rounds += int(rounds[occupied].sum())
-            retired = occupied & ((rounds < budgets) | (unres == 0)
-                                  | (used >= budget))
-            done += int(retired.sum())
-            slot[retired] = -1
+            done += len(pool.account(rounds, unres))
         stats["launches"] = launches
         stats["launch_rounds"] = launch_rounds
         stats["slot_rounds"] = slot_rounds
@@ -303,7 +299,7 @@ def run_serving_sweep(*, K=1024, B=64, n_queries=320, heavy_frac=0.15,
     rx = np.where(erased, 0.0, cws)
 
     serve_ls, n_waves = _serve_lockstep(code, rx, erased, B=B, budget=budget)
-    serve_ct, ct_stats = _serve_continuous(code, rx, erased, B=B,
+    serve_ct, ct_stats = serve_continuous(code, rx, erased, B=B,
                                            budget=budget, chunk=chunk)
     results = {}
     for mode, serve in (("lockstep", serve_ls), ("continuous", serve_ct)):
@@ -429,7 +425,7 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
     out = {
         "benchmark": "decoder_scaling",
-        "schema_version": 3,
+        "schema_version": 4,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
@@ -441,6 +437,15 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
         ],
         "d_monotonicity": [dict(zip(["D", "unresolved"], r)) for r in drows],
     }
+    # schema v4: the distributed sweep (benchmarks/distributed_scaling.py,
+    # run on its own fake-worker mesh process) appends its section to the
+    # same file — carry it through instead of dropping it on rewrite.
+    try:
+        prev = json.loads(Path(json_path).read_text())
+        if "distributed_scaling" in prev:
+            out["distributed_scaling"] = prev["distributed_scaling"]
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
     Path(json_path).write_text(json.dumps(out, indent=2))
     print(f"\nwrote {json_path}")
     return brows

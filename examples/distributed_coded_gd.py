@@ -1,0 +1,108 @@
+"""Distributed moment-encoded GD demo: master/worker over a device mesh,
+with online straggler telemetry driving wait-for thresholds and decode
+budgets.
+
+Runs on whatever devices the process has (fake a worker mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Three acts:
+
+  1. parity — the distributed trajectory is bit-identical to the
+     single-device Scheme2 under the same per-worker erasures;
+  2. telemetry vs fixed budget — a calm→storm→calm straggler climate; the
+     EMA estimator's budgets track it, the adaptive decode's rounds stay
+     far under the fixed worst-case budget;
+  3. wait-for-fastest — shifted-exponential worker latencies
+     (``DelayModel``); the master waits for the telemetry-chosen fastest
+     ``wait_for`` workers and the simulated step time follows.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/distributed_coded_gd.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BernoulliStragglers,
+    DelayModel,
+    Scheme2,
+    make_regular_ldpc,
+    second_moment,
+)
+from repro.data import make_linear_problem
+from repro.distributed import (
+    DistributedCodedGD,
+    StragglerRateEstimator,
+    WorkerTopology,
+    WorkerStragglers,
+    make_worker_mesh,
+)
+
+K, W, MAX_ROUNDS = 128, 8, 32
+
+
+def main():
+    code = make_regular_ldpc(K, l=3, r=6, seed=0)
+    prob = make_linear_problem(m=4 * K, k=K, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    topo = WorkerTopology(W, code.N)
+    mesh = make_worker_mesh()
+    print(f"mesh: {mesh.devices.size} device(s), {W} logical workers, "
+          f"N={code.N} encoded rows ({topo.rows_per_worker}/worker)")
+
+    # --- 1. parity with the single-device Scheme2 -------------------------
+    scheme = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
+                           decode_backend="sparse")
+    dist = DistributedCodedGD(scheme, topo, mesh)
+    stragglers = WorkerStragglers(BernoulliStragglers(0.2), topo)
+    ref_step = jax.jit(scheme.step)
+    th_ref = th_dist = jnp.zeros(K)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    for t in range(8):
+        wm = stragglers.sample_workers(keys[t])
+        th_ref, _ = ref_step(th_ref, topo.to_symbol_erasure(wm))
+        th_dist, _, _, _ = dist.step(th_dist, wm)
+    exact = bool((np.asarray(th_ref) == np.asarray(th_dist)).all())
+    print(f"\n== parity: 8 steps, worker-granular erasures -> "
+          f"bit-identical iterates: {exact} ==")
+
+    # --- 2. telemetry budgets through a shifting climate ------------------
+    scheme32 = Scheme2.build(code, mom, lr=prob.lr, decode_iters=MAX_ROUNDS,
+                             decode_backend="sparse")
+    dist_tel = DistributedCodedGD(scheme32, topo, mesh,
+                                  budget_mode="telemetry",
+                                  estimator=StragglerRateEstimator(decay=0.8),
+                                  max_rounds=MAX_ROUNDS)
+    phases = (("calm", 0.05, 10), ("storm", 0.3, 10), ("calm", 0.08, 10))
+    th = jnp.zeros(K)
+    key = jax.random.PRNGKey(1)
+    print(f"\n== telemetry budgets (fixed worst case = {MAX_ROUNDS} "
+          "rounds/step) ==")
+    for name, q, steps in phases:
+        key, sub = jax.random.split(key)
+        model = WorkerStragglers(BernoulliStragglers(q), topo)
+        rounds, budgets = [], []
+        for k_t in jax.random.split(sub, steps):
+            th, _, spent, budget = dist_tel.step(
+                th, model.sample_workers(k_t))
+            rounds.append(spent)
+            budgets.append(budget)
+        print(f"  {name:6s} q={q:.2f}: q_hat={dist_tel.estimator.rate:.3f} "
+              f"mean_budget={np.mean(budgets):4.1f} "
+              f"mean_rounds={np.mean(rounds):4.1f}")
+
+    # --- 3. wait-for-fastest under a latency model ------------------------
+    dist_dm = DistributedCodedGD(scheme32, topo, mesh,
+                                 budget_mode="telemetry",
+                                 max_rounds=MAX_ROUNDS)
+    res = dist_dm.run(jnp.zeros(K), None, 12, key=jax.random.PRNGKey(2),
+                      theta_star=prob.theta_star,
+                      delay_model=DelayModel(tau=1.0, mu=2.0))
+    print("\n== wait-for-fastest (shifted-exponential delays) ==")
+    print(f"  wait_for per step: {res.wait_for.tolist()} (of {W})")
+    print(f"  simulated step times: {np.round(res.step_times, 2).tolist()}")
+    print(f"  error ||theta-theta*||: {res.errors[0]:.3f} -> "
+          f"{res.errors[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Sharded coded-worker runtime: master/worker moment-encoded GD over a
+real device mesh, with online straggler telemetry driving decode budgets.
+
+Layers (each its own module):
+
+* :mod:`repro.distributed.topology` — worker mesh construction, encoded-row
+  → worker assignment, per-worker → per-symbol erasure lifting;
+* :mod:`repro.distributed.worker` — per-worker shard ownership and local
+  partial-product compute (``shard_map`` over the ``"workers"`` axis), with
+  straggler injection at per-WORKER granularity;
+* :mod:`repro.distributed.master` — survivor gather, decode through the
+  shared :class:`repro.core.engine.CodedComputeEngine` backends, the
+  :class:`~repro.distributed.master.DistributedCodedGD` driver (bit-identical
+  to single-device ``Scheme2``), and the production-scale AOT step;
+* :mod:`repro.distributed.telemetry` — online EMA straggler-rate estimation
+  feeding density evolution to pick wait-for thresholds and per-step
+  adaptive decode budgets.
+"""
+from repro.distributed.master import (
+    DistributedCodedGD,
+    DistributedRunResult,
+    build_distributed_gd_step,
+)
+from repro.distributed.telemetry import (
+    StragglerRateEstimator,
+    decode_budget,
+    pick_wait_for,
+    rounds_to_clear,
+)
+from repro.distributed.topology import (
+    WorkerTopology,
+    make_worker_mesh,
+    row_sharding,
+)
+from repro.distributed.worker import (
+    WorkerStragglers,
+    build_worker_products,
+    shard_encoded_rows,
+)
+
+__all__ = [
+    "DistributedCodedGD", "DistributedRunResult", "build_distributed_gd_step",
+    "StragglerRateEstimator", "decode_budget", "pick_wait_for",
+    "rounds_to_clear",
+    "WorkerTopology", "make_worker_mesh", "row_sharding",
+    "WorkerStragglers", "build_worker_products", "shard_encoded_rows",
+]

@@ -1,0 +1,381 @@
+"""Master side: gather survivors, decode, update — and the end-to-end driver.
+
+:class:`DistributedCodedGD` composes the distributed subsystem into a
+master/worker train step over a real device mesh, as TWO device programs —
+the same split the paper's Section-5 cluster runs:
+
+  1. **worker program** (one SPMD launch, ``shard_map`` over the
+     ``"workers"`` axis, θ broadcast in): each device computes the partial
+     products for its row shard of ``C`` and zeroes them if its workers
+     straggled (:mod:`repro.distributed.worker`); the program's replicated
+     output IS the master's gather of survivor rows (the wait-for-fastest
+     semantics live one level up, where the straggler mask is produced —
+     :meth:`DistributedCodedGD.run` with a
+     :class:`~repro.core.straggler.DelayModel` waits for the fastest
+     ``wait_for`` workers per :func:`~repro.core.straggler.DelayModel
+     .mask_and_time`, with ``wait_for`` chosen online by telemetry);
+  2. **master program** (a single-device launch on the master device):
+     peel-decode of whatever arrived through the existing
+     :class:`repro.core.engine.CodedComputeEngine` stages — every decode
+     backend (dense / sparse / pallas) works unchanged — then the scheme's
+     own epilogue and projection, shared verbatim with the single-device
+     :class:`repro.core.coded_step.Scheme2`.
+
+The split is what makes the distributed trajectory BIT-IDENTICAL to the
+single-device ``Scheme2`` one (tested on the fake 8-device CPU mesh): the
+sharded row-block matvec produces the same bits as the full matvec (each
+output element is an independent dot product), and the decode runs as a
+single-device program on the master instead of being auto-partitioned over
+the mesh (an SPMD decode would shard the peeling matmuls' contraction and
+change f32 summation order).
+
+Budget policy: ``budget_mode="fixed"`` runs the scheme's fixed-D decode
+(the parity configuration); ``budget_mode="telemetry"`` decodes adaptively
+under a per-step round budget chosen by the online straggler-rate estimator
+(:mod:`repro.distributed.telemetry`).  The budget is a TRACED operand of
+the one compiled master program (via the engine's batched-adaptive decode
+at B=1), so a drifting straggler climate never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from jax.experimental.shard_map import shard_map
+
+from repro.core.coded_step import Scheme2
+from repro.core.engine import blocked_epilogue
+from repro.core.straggler import DelayModel
+from repro.distributed.telemetry import (
+    StragglerRateEstimator,
+    decode_budget,
+    pick_wait_for,
+)
+from repro.distributed.topology import (
+    WorkerTopology,
+    make_worker_mesh,
+    replicated_sharding,
+)
+from repro.distributed.worker import build_worker_products, shard_encoded_rows
+
+__all__ = ["DistributedRunResult", "DistributedCodedGD",
+           "build_distributed_gd_step"]
+
+BUDGET_MODES = ("fixed", "telemetry")
+
+
+class DistributedRunResult(NamedTuple):
+    theta: jax.Array        # final iterate
+    theta_bar: jax.Array    # running average (Theorem 1 is stated for it)
+    errors: np.ndarray      # (T,) ||θ_t - θ*|| (or loss / norm)
+    unresolved: np.ndarray  # (T,) |U_t| per step
+    rounds: np.ndarray      # (T,) decode rounds actually spent per step
+    budgets: np.ndarray     # (T,) round budget granted per step
+    rates: np.ndarray       # (T,) telemetry estimate q̂ entering each step
+    wait_for: np.ndarray    # (T,) workers waited for (delay-model runs; else W)
+    step_times: np.ndarray  # (T,) simulated wall-clock (delay-model runs; else 0)
+
+
+@dataclasses.dataclass
+class DistributedCodedGD:
+    """Moment-encoded GD over a worker mesh, driven from a master loop.
+
+    ``scheme`` supplies the code, the encoded operator ``C``, the moment
+    vector ``b``, the learning rate, the decode backend, and the gradient
+    epilogue — everything the single-device path uses, reused verbatim.
+    ``topology`` fixes the row→worker assignment (``W`` logical workers);
+    ``mesh`` places the workers onto devices (``n_devices | W``).
+    """
+
+    scheme: Scheme2
+    topology: WorkerTopology
+    mesh: Mesh | None = None
+    budget_mode: str = "fixed"
+    estimator: StragglerRateEstimator | None = None
+    max_rounds: int | None = None     # telemetry worst-case budget ceiling
+    # Delay-model runs: a worker counts as STRAGGLING when its latency
+    # exceeds straggler_factor × the median of the waited-for arrivals.
+    # This is what telemetry observes under a DelayModel — observing the
+    # erasure mask itself would be circular there (the mask is exactly the
+    # wait-for cut the estimator chose, so q̂ would converge to its own
+    # decision instead of to anything about the workers).
+    straggler_factor: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.budget_mode not in BUDGET_MODES:
+            raise ValueError(f"unknown budget_mode {self.budget_mode!r}; "
+                             f"want one of {BUDGET_MODES}")
+        if self.topology.N != self.scheme.w:
+            raise ValueError(
+                f"topology covers N={self.topology.N} rows but the scheme's "
+                f"code has N={self.scheme.w}")
+        if self.mesh is None:
+            self.mesh = make_worker_mesh()
+        self.topology.validate_mesh(self.mesh)
+        if self.estimator is None:
+            self.estimator = StragglerRateEstimator()
+        if self.max_rounds is None:
+            self.max_rounds = int(self.scheme.decode_iters)
+        self._C_sharded = shard_encoded_rows(
+            jnp.asarray(self.scheme.C), self.mesh, self.topology)
+        self._replicated = replicated_sharding(self.mesh)
+        self.master_device = self.mesh.devices.flat[0]
+        self._worker_program, self._master_program = self._build_programs()
+
+    # ------------------------------------------------------------ step build
+
+    @property
+    def n_workers(self) -> int:
+        return self.topology.n_workers
+
+    def _build_programs(self):
+        scheme, topo = self.scheme, self.topology
+        eng = scheme.engine
+        worker_products = build_worker_products(self.mesh)
+
+        # Worker program: ONE SPMD launch over the workers axis.  θ and the
+        # per-worker mask come in replicated (the master's broadcast), each
+        # device computes/erases only its own rows, and the replicated
+        # output is the master's gather of survivor rows.
+        def worker_program(C_sh, theta, worker_mask):
+            erased = topo.to_symbol_erasure(worker_mask)  # partition lift
+            return worker_products(C_sh, theta, erased)
+
+        worker_jit = jax.jit(worker_program, out_shardings=self._replicated)
+
+        # Master program: a SINGLE-DEVICE launch (inputs committed to the
+        # master device pin it there) — decode of the gathered survivors
+        # plus the scheme's own epilogue/update, shared verbatim with the
+        # single-device Scheme2 so the two paths cannot diverge.  erase()
+        # on the already-zeroed survivors is idempotent, so the decode sees
+        # exactly what Scheme2.gradient feeds it.
+        if self.budget_mode == "fixed":
+            def master_program(z, worker_mask, theta, budget):
+                del budget  # fixed-D decode; kept for a stable signature
+                erased = topo.to_symbol_erasure(worker_mask)
+                c_hat, unresolved = eng.recover(z, erased)
+                g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+                theta2 = scheme.projection(theta - scheme.lr * g)
+                return theta2, n_unres, jnp.int32(eng.decode_iters)
+        else:
+            # Telemetry mode rides the engine's batched-adaptive decode at
+            # B=1: the round budget is a TRACED (1,) operand (changing
+            # budgets never recompile) and rounds_used surfaces per step.
+            def master_program(z, worker_mask, theta, budget):
+                erased = topo.to_symbol_erasure(worker_mask)
+                dec = eng.decode_batch(z[None], erased[None], adaptive=True,
+                                       budgets=budget)
+                c_hat, unresolved = eng.systematic(dec)
+                g, n_unres = scheme.finish_gradient(c_hat[0], unresolved[0])
+                theta2 = scheme.projection(theta - scheme.lr * g)
+                return theta2, n_unres, dec.rounds_used[0]
+
+        return worker_jit, jax.jit(master_program)
+
+    # --------------------------------------------------------------- driving
+
+    def step(self, theta: jax.Array, worker_mask: jax.Array, *,
+             observed_fraction: float | None = None
+             ) -> tuple[jax.Array, int, int, int]:
+        """One master step from a realized (W,) worker straggler mask.
+
+        Telemetry observes BEFORE the decode budget is chosen — the master
+        knows exactly which workers reported when it starts decoding.  The
+        default observation is the mask's straggler fraction (right for
+        straggler-model runs, where the mask is exogenous);
+        ``observed_fraction`` overrides it for callers whose mask is a
+        policy DECISION rather than a measurement (delay-model runs pass a
+        latency-derived fraction — see :meth:`run`).  Returns
+        ``(θ', n_unresolved, rounds_spent, budget)``.
+        """
+        worker_mask = jnp.asarray(worker_mask, bool)
+        if worker_mask.shape != (self.n_workers,):
+            raise ValueError(f"worker_mask must be ({self.n_workers},); "
+                             f"got {worker_mask.shape}")
+        if self.budget_mode == "telemetry":
+            if observed_fraction is None:
+                observed_fraction = float(
+                    self.topology.observed_fraction(worker_mask))
+            rate = self.estimator.observe(observed_fraction)
+            code = self.scheme.code
+            budget = decode_budget(rate, code.l, code.r,
+                                   max_rounds=self.max_rounds)
+        else:
+            budget = int(self.scheme.decode_iters)
+        # broadcast θ + mask to the workers, one SPMD partial-product launch
+        z = self._worker_program(
+            self._C_sharded,
+            jax.device_put(theta, self._replicated),
+            jax.device_put(worker_mask, self._replicated))
+        # master-local decode + update on the gathered survivors
+        m = self.master_device
+        theta2, n_unres, rounds = self._master_program(
+            jax.device_put(z, m), jax.device_put(worker_mask, m),
+            jax.device_put(theta, m),
+            jax.device_put(jnp.asarray([budget], jnp.int32), m))
+        return theta2, int(n_unres), int(rounds), budget
+
+    def run(
+        self,
+        theta0: jax.Array,
+        straggler_model,
+        steps: int,
+        *,
+        key: jax.Array | None = None,
+        theta_star: jax.Array | None = None,
+        loss_fn: Callable[[jax.Array], jax.Array] | None = None,
+        delay_model: DelayModel | None = None,
+    ) -> DistributedRunResult:
+        """Drive ``steps`` master steps.
+
+        ``straggler_model`` samples per-WORKER masks (width ``W``) with the
+        same key schedule as :func:`repro.core.coded_step.run_pgd` (one
+        ``jax.random.split`` of ``key``), so a single-device reference run
+        under the lifted mask sees identical erasure realizations.  With a
+        ``delay_model``, masks instead come from per-worker latencies and a
+        telemetry-chosen wait-for-fastest threshold (the paper's Section-5
+        timing model); ``step_times`` then records the simulated wall-clock
+        of each step (the order statistic at the cutoff).
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, steps)
+        W = self.n_workers
+        code = self.scheme.code
+
+        def metric(theta):
+            if theta_star is not None:
+                return jnp.linalg.norm(theta - theta_star)
+            if loss_fn is not None:
+                return loss_fn(theta)
+            return jnp.linalg.norm(theta)
+
+        theta = jnp.asarray(theta0)
+        tbar = jnp.zeros_like(theta)
+        errors, unresolved, rounds, budgets, rates, waits, times = \
+            [], [], [], [], [], [], []
+        for t in range(steps):
+            observed = None
+            if delay_model is not None:
+                wait = pick_wait_for(self.estimator.rate, W, code.l, code.r)
+                delays = delay_model.sample_delays(keys[t], W)
+                worker_mask, cutoff = DelayModel.mask_and_time(delays, wait)
+                times.append(float(cutoff))
+                # Telemetry observation: tail latency relative to the
+                # waited-for median, NOT the mask (the mask is the cut the
+                # estimator itself chose — observing it would close a
+                # feedback loop where q̂ converges to its own decision and
+                # homogeneous fast fleets keep getting cut forever).
+                d = np.sort(np.asarray(delays))
+                med = float(np.median(d[:wait]))
+                observed = float(
+                    (np.asarray(delays) > self.straggler_factor * med)
+                    .mean())
+            else:
+                wait = W
+                worker_mask = straggler_model.sample(keys[t], W)
+                times.append(0.0)
+            rates.append(self.estimator.rate)
+            theta, n_unres, spent, budget = self.step(
+                theta, worker_mask, observed_fraction=observed)
+            tbar = (tbar * t + theta) / (t + 1.0)
+            errors.append(float(metric(theta)))
+            unresolved.append(n_unres)
+            rounds.append(spent)
+            budgets.append(budget)
+            waits.append(int(wait))
+        return DistributedRunResult(
+            theta, tbar, np.asarray(errors), np.asarray(unresolved),
+            np.asarray(rounds), np.asarray(budgets), np.asarray(rates),
+            np.asarray(waits), np.asarray(times))
+
+
+# ------------------------------------------------- production-scale AOT step
+
+
+def build_distributed_gd_step(k: int, K: int, decode_iters: int, dtype,
+                              mesh: Mesh, *, decode: str = "sparse",
+                              r: int = 6):
+    """Sharded-worker Scheme2Blocked step at production scale, for AOT
+    lower/compile analysis (:mod:`repro.launch.paper_dryrun`'s
+    ``--distributed`` variant).
+
+    Unlike :func:`repro.launch.steps.build_coded_gd_step` (which shards the
+    encoded operator as an undifferentiated tensor), this step places the
+    pipeline the way the real system runs it: the mesh carries an explicit
+    ``("workers", "data")`` layout, the worker compute is a ``shard_map``
+    over the ``"workers"`` axis (each chip holds its workers' rows of every
+    block and contributes partial sums over its ``"data"`` slice of θ, with
+    one ``psum`` over "data"), the straggler mask is PER-WORKER ``(W,)``
+    (W = the workers-axis size) lifted to symbols inside the step, and the
+    master decode runs on the gathered survivors through the shared
+    :mod:`repro.core.decoder` fixed-D loops + engine epilogue.
+
+    Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
+    """
+    from jax.sharding import NamedSharding
+    from repro.core.decoder import peel_fixed_dense, peel_fixed_sparse
+
+    N, p, nb = 2 * K, K, k // K
+    W = mesh.shape["workers"]
+    topo = WorkerTopology(W, N)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+
+    def worker_fn(C_shard, theta_shard, erased_shard):
+        # C_shard (nb, N/W, k/data); theta_shard (k/data,) — partial sums
+        # over the feature axis, one psum over "data" completes the dot.
+        z = jnp.einsum("bnk,k->nb", C_shard,
+                       theta_shard.astype(C_shard.dtype))
+        z = jax.lax.psum(z.astype(jnp.float32), "data")
+        return jnp.where(erased_shard[:, None], 0.0, z)
+
+    worker_products = shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=(P(None, "workers", "data"), P("data"), P("workers")),
+        out_specs=P("workers", None))
+
+    def epilogue(vals, erased_sym, theta, b, lr):
+        g, _ = blocked_epilogue(vals, erased_sym, b, K=K, nb=nb)
+        return theta - lr * g
+
+    common = (
+        jax.ShapeDtypeStruct((k,), jnp.float32),   # theta
+        jax.ShapeDtypeStruct((k,), jnp.float32),   # b
+        jax.ShapeDtypeStruct((W,), jnp.bool_),     # PER-WORKER mask
+        jax.ShapeDtypeStruct((), jnp.float32),     # lr
+    )
+    common_sh = (sh(), sh(), sh(), sh())
+    c_spec = jax.ShapeDtypeStruct((nb, N, k), dtype)
+    c_sh = sh(None, "workers", "data")
+
+    if decode == "dense":
+        def step_dense(C_blocks, H, theta, b, worker_mask, lr):
+            erased = topo.to_symbol_erasure(worker_mask)
+            z = worker_products(C_blocks, theta, erased)
+            vals, er = peel_fixed_dense(H, H != 0.0, z, erased, decode_iters)
+            return epilogue(vals, er, theta, b, lr)
+
+        args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
+        in_sh = (c_sh, sh("workers", None), *common_sh)
+        return jax.jit(step_dense, in_shardings=in_sh,
+                       out_shardings=sh()), args
+
+    if decode != "sparse":
+        raise ValueError(f"unknown distributed decode variant {decode!r}; "
+                         "want dense|sparse")
+
+    def step_sparse(C_blocks, H_idx, H_val, theta, b, worker_mask, lr):
+        erased = topo.to_symbol_erasure(worker_mask)
+        z = worker_products(C_blocks, theta, erased)
+        vals, er = peel_fixed_sparse(H_idx, H_val, z, erased, decode_iters)
+        return epilogue(vals, er, theta, b, lr)
+
+    args = (c_spec, jax.ShapeDtypeStruct((p, r), jnp.int32),
+            jax.ShapeDtypeStruct((p, r), jnp.float32), *common)
+    in_sh = (c_sh, sh("workers", None), sh("workers", None), *common_sh)
+    return jax.jit(step_sparse, in_shardings=in_sh, out_shardings=sh()), args

@@ -1,0 +1,135 @@
+"""Online straggler telemetry: EMA rate estimation → decode budgets.
+
+The paper's observation that "the number of decoding iterations
+automatically adjusts with the number of stragglers" is a per-step property
+of the adaptive peeling decoder.  This module closes the same loop at the
+SYSTEM level, across steps: the master observes each step's realized
+per-worker erasure fraction, keeps a bias-corrected exponential moving
+average ``q̂`` of it, and uses density evolution (Proposition 2) to turn
+``q̂`` into
+
+* a per-step decode ROUND BUDGET (:func:`decode_budget`): the smallest ``D``
+  whose density-evolution residual ``q_D`` has collapsed, plus a safety
+  slack — fed to the adaptive decoder as a TRACED operand, so budgets that
+  track the straggler climate never recompile the step;
+* a WAIT-FOR threshold (:func:`pick_wait_for`): how many fastest workers
+  the master should wait for under :class:`repro.core.straggler.DelayModel`
+  timing, cutting off no more workers than the code's erasure threshold
+  ``q*(l, r)`` (times a safety margin) can absorb, and no more than the
+  observed straggling suggests is useful.
+
+Everything here is tiny host-side arithmetic (numpy floats) — it sits in
+the driver loop between device launches, exactly where a real master's
+control plane would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.density_evolution import qd_sequence, threshold
+
+__all__ = ["StragglerRateEstimator", "rounds_to_clear", "decode_budget",
+           "pick_wait_for", "cached_threshold"]
+
+
+@functools.lru_cache(maxsize=None)
+def cached_threshold(l: int, r: int) -> float:
+    """``q*(l, r)`` memoized — the bisection is ~2000 iterations deep and
+    the driver asks every step."""
+    return threshold(l, r)
+
+
+@dataclasses.dataclass
+class StragglerRateEstimator:
+    """Bias-corrected EMA of the observed per-worker straggler fraction.
+
+    ``rate`` after ``t`` observations is ``(1-decay)·Σ decay^i x_{t-i}``
+    normalized by ``1 - decay^t`` — so early estimates are unbiased instead
+    of dragged toward the zero init, and under i.i.d. Bernoulli(q0)
+    straggling the estimate converges to ``q0`` (tested).  ``prior`` seeds
+    the very first budget decision (before any observation the estimator
+    returns it), defaulting to pessimistic-but-decodable.
+    """
+
+    decay: float = 0.8
+    prior: float = 0.3
+    _ema: float = 0.0
+    _norm: float = 0.0
+    steps: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1); got {self.decay}")
+
+    @property
+    def rate(self) -> float:
+        """Current estimate q̂ (the prior until the first observation)."""
+        if self._norm == 0.0:
+            return self.prior
+        return self._ema / self._norm
+
+    def observe(self, fraction: float) -> float:
+        """Fold in one step's realized straggler fraction; returns q̂."""
+        f = float(fraction)
+        if not 0.0 <= f <= 1.0:
+            raise ValueError(f"straggler fraction must be in [0, 1]; got {f}")
+        self._ema = self.decay * self._ema + (1.0 - self.decay) * f
+        self._norm = self.decay * self._norm + (1.0 - self.decay)
+        self.steps += 1
+        return self.rate
+
+
+def rounds_to_clear(q0: float, l: int, r: int, *, max_rounds: int = 64,
+                    tol: float = 1e-3) -> int:
+    """Smallest ``D`` with ``q_D ≤ tol`` under density evolution.
+
+    Above the ensemble threshold the recursion never collapses and the
+    answer is ``max_rounds`` (the worst-case budget).  ``q0 = 0`` costs one
+    round — the adaptive decoder's no-progress probe.
+    """
+    if q0 <= 0.0:
+        return 1
+    qs = qd_sequence(min(q0, 1.0), l, r, max_rounds)
+    below = qs <= tol
+    if not below.any():
+        return max_rounds
+    return max(1, int(below.argmax()))
+
+
+def decode_budget(q_hat: float, l: int, r: int, *, max_rounds: int = 64,
+                  slack: int = 2, headroom: float = 1.25,
+                  tol: float = 1e-3) -> int:
+    """Per-step adaptive round budget from the telemetry estimate.
+
+    Density evolution is an asymptotic (N → ∞) statement; finite codes
+    straggle behind it, so the rate is padded by ``headroom`` before the
+    recursion and ``slack`` extra rounds are added after.  Clamped to
+    ``[1, max_rounds]``; the fixed worst-case budget this replaces is
+    ``max_rounds`` itself, so the benchmark's "telemetry lowers mean decode
+    rounds" claim is measured against that ceiling.
+    """
+    D = rounds_to_clear(min(q_hat * headroom, 1.0), l, r,
+                        max_rounds=max_rounds, tol=tol)
+    return max(1, min(D + slack, max_rounds))
+
+
+def pick_wait_for(q_hat: float, w: int, l: int, r: int, *,
+                  margin: float = 0.9, headroom: float = 1.5) -> int:
+    """How many fastest workers the master should wait for.
+
+    Cutting off ``s`` workers makes the erasure fraction ``s / w``, so the
+    cut is capped at ``margin · q*(l, r)`` — the decoder must stay safely
+    inside the ensemble threshold (Remark 3's monotonicity condition) —
+    and ALSO at ``headroom · q̂``: when telemetry says workers rarely
+    straggle there is no point abandoning them, waiting costs nothing.
+    Always leaves at least one worker cut-able only if the margins allow;
+    never waits for fewer than ``K``-recoverable support, and never more
+    than ``w``.
+    """
+    if w < 1:
+        raise ValueError(f"need at least one worker; got {w}")
+    cap_threshold = margin * cached_threshold(l, r)
+    cap_observed = headroom * max(q_hat, 0.0)
+    cut = int(min(cap_threshold, cap_observed, 1.0) * w)
+    return max(1, w - cut)

@@ -1,0 +1,129 @@
+"""Worker topology: encoded-row → worker assignment and mesh placement.
+
+The paper's system is W workers, each storing a contiguous block of rows of
+the encoded moment ``C = G·M`` and returning the partial products for its
+rows each step; a straggling worker erases ALL of its rows at once.  This
+module owns the two mappings everything distributed builds on:
+
+* **row → worker**: row ``i`` belongs to worker ``i // (N/W)`` (contiguous
+  blocks — the systematic coordinates land on the first ``W·K/N`` workers,
+  matching the paper's storage layout where worker ``j`` holds ``c_j``).
+  :meth:`WorkerTopology.to_symbol_erasure` lifts a per-WORKER straggler
+  mask ``(W,)`` to the per-symbol erasure mask ``(N,)`` the decoder
+  consumes; the lift is a partition (every symbol is covered by exactly one
+  worker — property-tested), so worker-granular straggling is exactly the
+  erasure-channel abstraction the analysis is built on, just with
+  block-correlated erasures.
+
+* **worker → device**: :func:`make_worker_mesh` builds a 1-D JAX mesh with
+  a ``"workers"`` axis (layered on :mod:`repro.launch.mesh`'s conventions:
+  a function, never module-level device state).  Logical workers are
+  decoupled from devices — ``W`` logical workers shard onto ``n_devices``
+  mesh slots (each device simulates ``W / n_devices`` workers), so the same
+  :class:`repro.distributed.master.DistributedCodedGD` runs on one real CPU
+  device, the fake 8-device CI mesh
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), or a real TPU
+  slice, with bit-identical trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["WorkerTopology", "make_worker_mesh", "row_sharding",
+           "replicated_sharding"]
+
+
+def make_worker_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D device mesh with the ``"workers"`` axis.
+
+    Uses the first ``n_devices`` JAX devices (default: all).  Like
+    :func:`repro.launch.mesh.make_mesh` this is a function — importing the
+    module never touches device state, so tests/benchmarks keep seeing
+    whatever device set their process was started with.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"asked for {n_devices} devices, have {len(devs)} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "before the first jax import to fake a CPU mesh)")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), ("workers",))
+
+
+def row_sharding(mesh: Mesh) -> NamedSharding:
+    """Encoded rows (leading axis) split over the ``"workers"`` axis."""
+    return NamedSharding(mesh, P("workers"))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Master-side state (θ, b, decode tables): replicated on every device."""
+    return NamedSharding(mesh, P())
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerTopology:
+    """Assignment of the N encoded rows to W logical workers.
+
+    ``n_workers`` is the paper's ``w`` knob, independent of the device
+    count; :class:`~repro.distributed.master.DistributedCodedGD` additionally
+    requires ``n_workers`` to be divisible by the mesh size so no worker's
+    rows straddle a device shard.
+    """
+
+    n_workers: int
+    N: int
+
+    def __post_init__(self) -> None:
+        if self.n_workers < 1:
+            raise ValueError(f"need at least one worker; got {self.n_workers}")
+        if self.N % self.n_workers != 0:
+            raise ValueError(
+                f"N={self.N} encoded rows do not split evenly over "
+                f"W={self.n_workers} workers")
+
+    @property
+    def rows_per_worker(self) -> int:
+        return self.N // self.n_workers
+
+    @property
+    def worker_of_row(self) -> np.ndarray:
+        """(N,) int32 — the owning worker of every encoded row."""
+        return np.repeat(np.arange(self.n_workers, dtype=np.int32),
+                         self.rows_per_worker)
+
+    def worker_rows(self, j: int) -> slice:
+        if not 0 <= j < self.n_workers:
+            raise IndexError(f"worker {j} out of range [0, {self.n_workers})")
+        rpw = self.rows_per_worker
+        return slice(j * rpw, (j + 1) * rpw)
+
+    def to_symbol_erasure(self, worker_mask: jax.Array) -> jax.Array:
+        """Lift a per-worker straggler mask to the per-symbol erasure mask.
+
+        ``worker_mask (..., W) bool`` → ``(..., N) bool``: a straggling
+        worker erases exactly its own rows.  jit-able (pure repeat along the
+        last axis), and a partition: summing the result back per worker
+        recovers ``rows_per_worker * worker_mask`` exactly.
+        """
+        return jnp.repeat(jnp.asarray(worker_mask, bool),
+                          self.rows_per_worker, axis=-1)
+
+    def observed_fraction(self, worker_mask: jax.Array) -> jax.Array:
+        """Per-step straggler fraction the telemetry estimator consumes."""
+        return jnp.asarray(worker_mask, jnp.float32).mean(axis=-1)
+
+    def validate_mesh(self, mesh: Mesh) -> int:
+        """Check worker shards don't straddle devices; returns mesh size."""
+        n_dev = mesh.shape["workers"]
+        if self.n_workers % n_dev != 0:
+            raise ValueError(
+                f"W={self.n_workers} logical workers cannot shard onto "
+                f"{n_dev} mesh devices (need n_devices | W)")
+        return n_dev

@@ -1,0 +1,104 @@
+"""Worker side of the distributed coded pipeline.
+
+Each worker owns a contiguous shard of the encoded moment's rows (its slice
+of ``C = G·M``) and, per step, computes the partial products for exactly
+those rows — ``z_local = C_shard @ θ`` — then reports them to the master.
+A straggling worker reports nothing, which the master sees as the erasure
+of ALL of that worker's rows: straggler injection is realized here at
+per-WORKER granularity (``StragglerModel`` masks sampled at width ``W``
+and lifted through :meth:`repro.distributed.topology.WorkerTopology
+.to_symbol_erasure`), not per-symbol as the single-device simulation does.
+
+:func:`build_worker_products` returns the ``shard_map``-ped compute over
+the mesh's ``"workers"`` axis.  Inside the mapped function every device
+sees only its own row shard — the per-device working set is
+``(N / n_devices) × k``, which is what lets the encoded operator scale past
+single-device memory.  The erasure zeroing ALSO runs worker-side (a real
+straggler never sends bytes); the master re-applies its own mask when it
+decodes, so the two layers cannot disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.straggler import StragglerModel
+from repro.distributed.topology import WorkerTopology, row_sharding
+
+__all__ = ["WorkerStragglers", "local_products", "build_worker_products",
+           "shard_encoded_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerStragglers:
+    """A per-symbol :class:`~repro.core.straggler.StragglerModel`, lifted to
+    per-WORKER granularity: sample a (W,) worker mask, then expand it to the
+    (N,) symbol erasure through the topology's row assignment.
+
+    Any model satisfying the ``StragglerModel`` protocol lifts unchanged —
+    the protocol's width argument is simply the worker count instead of the
+    symbol count (Bernoulli q0 per worker, exactly-s workers, adversarial
+    fixed worker sets, ...).
+    """
+
+    model: StragglerModel
+    topology: WorkerTopology
+
+    def sample_workers(self, key: jax.Array) -> jax.Array:
+        """(W,) bool — which workers straggle this step."""
+        return self.model.sample(key, self.topology.n_workers)
+
+    def sample(self, key: jax.Array, w: int) -> jax.Array:
+        """StragglerModel protocol: (N,) symbol mask (for drop-in use by
+        ``run_pgd``-style drivers that expect per-symbol masks)."""
+        if w != self.topology.N:
+            raise ValueError(f"expected symbol width {self.topology.N}, got {w}")
+        return self.topology.to_symbol_erasure(self.sample_workers(key))
+
+
+def local_products(C_shard: jax.Array, theta: jax.Array,
+                   erased_shard: jax.Array) -> jax.Array:
+    """One worker shard's step: partial products, zeroed if straggling.
+
+    Runs INSIDE ``shard_map`` — ``C_shard`` is this device's
+    ``(rows/device, k)`` slice, ``theta`` is replicated, ``erased_shard``
+    this device's slice of the symbol erasure mask.  Row-block matvecs are
+    bitwise identical to the corresponding rows of the full ``C @ θ`` (each
+    output element is an independent dot product), which is what makes the
+    distributed trajectory reproduce the single-device one bit-for-bit.
+    """
+    z = C_shard @ theta
+    return jnp.where(erased_shard, 0.0, z)
+
+
+def build_worker_products(mesh: Mesh):
+    """The sharded worker-compute stage: ``(C, θ, erased) → z (N,)``.
+
+    ``C`` sharded ``P("workers", None)``, ``θ`` replicated, ``erased``
+    sharded ``P("workers")``; the output keeps the row sharding — the
+    master's gather happens where the decode consumes it (XLA inserts the
+    all-gather at the jit boundary's replicated consumer).
+    """
+    return shard_map(
+        local_products, mesh=mesh,
+        in_specs=(P("workers", None), P(), P("workers")),
+        out_specs=P("workers"))
+
+
+def shard_encoded_rows(C: jax.Array, mesh: Mesh,
+                       topology: WorkerTopology) -> jax.Array:
+    """Place the encoded operator with rows split over the workers axis.
+
+    Validates that worker shards do not straddle devices, then
+    ``device_put``s ``C (N, k)`` with ``P("workers", None)`` — after this
+    every device holds only its own workers' rows.
+    """
+    if C.shape[0] != topology.N:
+        raise ValueError(f"C has {C.shape[0]} rows; topology expects "
+                         f"{topology.N}")
+    topology.validate_mesh(mesh)
+    return jax.device_put(C, row_sharding(mesh))

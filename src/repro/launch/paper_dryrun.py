@@ -21,6 +21,16 @@ copies.
   python -m repro.launch.paper_dryrun --k 32768 --multi-pod
   python -m repro.launch.paper_dryrun --k 32768 --dtype bf16 --decode-iters 4
 
+``--distributed`` switches to the sharded coded-WORKER runtime's step
+(:func:`repro.distributed.master.build_distributed_gd_step`): the mesh
+becomes an explicit ``("workers", "data")`` 16x16 layout, the worker
+matvec is a ``shard_map`` over the workers axis (θ sharded over "data",
+one psum), the straggler mask is per-WORKER, and the master decode runs on
+the gathered survivors — the AOT roofline then reports the real
+master/worker collective mix instead of an undifferentiated sharded step.
+
+  python -m repro.launch.paper_dryrun --k 32768 --distributed --decode sparse
+
 Writes artifacts/dryrun/paper-coded-gd__scheme2-k<k>-D<D>-<dtype>__<mesh>.json
 """
 import argparse
@@ -31,7 +41,7 @@ from pathlib import Path
 import jax.numpy as jnp
 
 from repro.launch.analysis import analyze_compiled
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.steps import build_coded_gd_step
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -46,15 +56,35 @@ def main(argv=None):
     ap.add_argument("--decode", default="dense",
                     choices=["dense", "dense-fused", "sparse", "pallas"])
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="master/worker runtime step: explicit "
+                         "(workers, data) mesh, shard_map worker matvec, "
+                         "per-worker straggler mask (decode: dense|sparse)")
     args = ap.parse_args(argv)
 
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
-    mesh_desc = "2x16x16" if args.multi_pod else "16x16"
     dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
 
     t0 = time.time()
-    jitted, specs = build_coded_gd_step(args.k, args.K, args.decode_iters,
-                                        dtype, mesh, decode=args.decode)
+    if args.distributed:
+        if args.multi_pod:
+            raise SystemExit("--distributed is single-pod only (16x16 "
+                             "workers x data); drop --multi-pod")
+        if args.decode not in ("dense", "sparse"):
+            raise SystemExit(f"--distributed supports --decode dense|sparse "
+                             f"(the master decode is single-program; got "
+                             f"{args.decode!r})")
+        from repro.distributed.master import build_distributed_gd_step
+
+        mesh = make_mesh((16, 16), ("workers", "data"))
+        mesh_desc = "16wx16d"
+        jitted, specs = build_distributed_gd_step(
+            args.k, args.K, args.decode_iters, dtype, mesh,
+            decode=args.decode)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh_desc = "2x16x16" if args.multi_pod else "16x16"
+        jitted, specs = build_coded_gd_step(args.k, args.K, args.decode_iters,
+                                            dtype, mesh, decode=args.decode)
     lowered = jitted.lower(*specs)
     t_lower = time.time() - t0
     t0 = time.time()
@@ -66,7 +96,7 @@ def main(argv=None):
     N, p, nb = 2 * args.K, args.K, args.k // args.K
     mflops = 2 * N * args.k * nb + args.decode_iters * 2 * p * N * nb
     shape_tag = (f"scheme2-k{args.k}-D{args.decode_iters}-{args.dtype}"
-                 f"-{args.decode}")
+                 f"-{args.decode}" + ("-dist" if args.distributed else ""))
     rep = analyze_compiled(compiled, arch="paper-coded-gd", shape=shape_tag,
                            mesh_desc=mesh_desc, chips=mesh.devices.size,
                            mflops=float(mflops))

@@ -1,6 +1,7 @@
 from repro.serving import kvcache
 from repro.serving.batcher import Request, WaveBatcher
 from repro.serving.coded_queries import CodedQuery, CodedQueryBatcher
+from repro.serving.slot_lifecycle import SlotPool
 
 __all__ = ["kvcache", "Request", "WaveBatcher",
-           "CodedQuery", "CodedQueryBatcher"]
+           "CodedQuery", "CodedQueryBatcher", "SlotPool"]

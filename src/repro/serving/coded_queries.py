@@ -16,6 +16,11 @@ decode slots.  Two admission policies share the pool:
     light-straggler query converges inside its first launch and its slot is
     refilled from the FIFO queue, while a heavy query keeps its slot across
     launches — light queries never wait on a heavy query's decode rounds.
+    The slot lifecycle itself (admission, budget chunking, retirement) is
+    the shared :class:`repro.serving.slot_lifecycle.SlotPool` state
+    machine, and each query's ``priority`` hint scales its per-launch
+    chunk (priority-weighted budget scheduling: urgent queries finish in
+    fewer launches for the same total budget).
     Slot state (partial values, erasure mask, rounds spent) carries across
     launches; per-query accounting (``rounds``, ``launches``,
     ``admitted_launch`` / ``finished_launch``) makes the fairness and cost
@@ -44,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.slot_lifecycle import SlotPool
+
 __all__ = ["CodedQuery", "CodedQueryBatcher"]
 
 MODES = ("continuous", "lockstep")
@@ -56,6 +63,12 @@ class CodedQuery:
     qid: int
     theta: np.ndarray            # (k,)
     straggler_mask: np.ndarray   # (N,) bool — this query's erasure pattern
+    # Priority/deadline hint: 1.0 = normal; >1 = more urgent (deadline
+    # near).  Continuous mode grants the slot ``priority ×`` the pool's
+    # per-launch round chunk, so urgent queries burn through their decode
+    # budget in fewer launches (priority-weighted chunking — the minimal
+    # budget scheduler; total budget is unchanged, so results are too).
+    priority: float = 1.0
     gradient: np.ndarray | None = None
     unresolved: int = -1
     done: bool = False
@@ -119,7 +132,10 @@ class CodedQueryBatcher:
         else:
             self._init, self._launch = self._make_continuous_fns()
             B = n_slots
-            self._slots: list[CodedQuery | None] = [None] * B
+            # slot lifecycle (admission, budget chunking, retirement) is
+            # the SHARED state machine — serving/slot_lifecycle.SlotPool —
+            # also driven by the benchmarks' decode-stream servers.
+            self.pool = SlotPool(B, self.budget, self.rounds_per_launch)
             self._theta = np.zeros((B, self._k), np.float32)
             self._mask = np.zeros((B, self._N), bool)
             # decode state is DEVICE-RESIDENT across launches (inert slots
@@ -128,7 +144,6 @@ class CodedQueryBatcher:
             self._vals = jnp.zeros((B, self._N), jnp.float32)
             self._erased = jnp.zeros((B, self._N), bool)
             self._fresh = np.zeros((B,), bool)
-            self._used = np.zeros((B,), np.int32)
 
     # ------------------------------------------------------- jitted launches
 
@@ -185,8 +200,7 @@ class CodedQueryBatcher:
 
     @property
     def active(self) -> bool:
-        if self.mode == "continuous" and any(
-                s is not None for s in self._slots):
+        if self.mode == "continuous" and self.pool.active:
             return True
         return bool(self.queue)
 
@@ -223,24 +237,26 @@ class CodedQueryBatcher:
     # ----------------------------------------------------------- continuous
 
     def _admit(self) -> None:
-        """FIFO: fill every free slot from the head of the queue."""
-        for s in range(self.n_slots):
-            if self._slots[s] is not None or not self.queue:
-                continue
+        """FIFO: fill every free slot from the head of the queue.
+
+        A query's priority hint scales its per-launch round chunk
+        (``priority × rounds_per_launch``, at least 1): urgent queries
+        spend their budget in fewer launches, everyone's TOTAL budget is
+        the same.
+        """
+        for s in self.pool.free_slots():
+            if not self.queue:
+                break
             q = self.queue.popleft()
-            self._slots[s] = q
+            self.pool.admit(
+                s, q, chunk=round(self.rounds_per_launch * q.priority))
             self._theta[s] = q.theta
             self._mask[s] = q.straggler_mask
             self._fresh[s] = True
-            self._used[s] = 0
             q.admitted_launch = self.launches
 
     def _step_continuous(self) -> None:
-        occupied = np.array([q is not None for q in self._slots])
-        budgets = np.where(
-            occupied,
-            np.minimum(self.rounds_per_launch, self.budget - self._used),
-            0).astype(np.int32)
+        budgets = self.pool.launch_budgets()
         if self._fresh.any():   # encode newly admitted slots' worker products
             self._vals, self._erased = self._init(
                 jnp.asarray(self._theta), jnp.asarray(self._mask),
@@ -252,27 +268,18 @@ class CodedQueryBatcher:
         rounds, unres, ecnt = (np.asarray(rounds_d), np.asarray(unres_d),
                                np.asarray(ecnt_d))
         self._fresh[:] = False
-        for s, q in enumerate(self._slots):
-            if q is None:
-                continue
+        for s, q in self.pool.owners():
             q.launches += 1
             q.rounds += int(rounds[s])
-            self._used[s] += rounds[s]
-            # Early exit (rounds < budget) or full resolution == this slot
-            # is at its fixpoint.  A slot whose fixpoint lands EXACTLY on
-            # its chunk boundary is detected one launch later via a
-            # no-progress probe round — the same probe round the sequential
-            # adaptive decode charges for stall detection, so per-query
-            # rounds accounting stays parity-exact.
-            converged = (int(rounds[s]) < int(budgets[s])
-                         or int(ecnt[s]) == 0)
-            if converged or int(self._used[s]) >= self.budget:
-                q.gradient = np.asarray(g[s])   # pull the retired row only
-                q.unresolved = int(unres[s])
-                q.finished_launch = launch_idx
-                q.done = True
-                self.finished.append(q)
-                self._slots[s] = None
+        # The pool applies THE retire rule (early exit / fully resolved /
+        # budget exhausted — see SlotPool.account, incl. the chunk-boundary
+        # probe-round note); retired slots' rows are the only device pulls.
+        for s, q in self.pool.account(rounds, ecnt):
+            q.gradient = np.asarray(g[s])
+            q.unresolved = int(unres[s])
+            q.finished_launch = launch_idx
+            q.done = True
+            self.finished.append(q)
 
     # ------------------------------------------------------------------ run
 

@@ -231,3 +231,101 @@ def test_continuous_requires_engine_backed_scheme():
 
     with pytest.raises(TypeError):
         CodedQueryBatcher(BatchOnly(), mode="continuous")
+
+
+# ------------------------------------------- priority-weighted round budgets
+
+
+def test_priority_scales_per_launch_chunk():
+    """A high-priority heavy query burns its budget in fewer launches than
+    the same query at default priority — same total rounds, same answer."""
+    qs = _heavy_light_queries(2, heavy_ids={0, 1}, seed=7)
+    lo, hi = qs[0], qs[1]
+    hi.theta, hi.straggler_mask = lo.theta.copy(), lo.straggler_mask.copy()
+    hi.priority = 3.0
+    results = {}
+    for q in (lo, hi):
+        scheme = _scheme(decode_iters=12)
+        bat = CodedQueryBatcher(scheme, n_slots=2, rounds_per_launch=2)
+        bat.submit(q)
+        bat.run()
+        results[q.qid] = q
+    assert hi.done and lo.done
+    assert hi.launches < lo.launches            # 6-round chunks vs 2-round
+    assert hi.rounds == lo.rounds               # same decode trajectory
+    np.testing.assert_allclose(hi.gradient, lo.gradient, rtol=1e-6)
+    assert hi.unresolved == lo.unresolved
+
+
+def test_priority_mixed_pool_urgent_finishes_first():
+    """Two identical heavy queries in one pool: the urgent one retires in
+    an earlier launch; both still match the unbatched reference."""
+    scheme = _scheme(decode_iters=12)
+    bat = CodedQueryBatcher(scheme, n_slots=2, rounds_per_launch=2)
+    qs = _heavy_light_queries(2, heavy_ids={0, 1}, seed=8)
+    qs[1].theta = qs[0].theta.copy()
+    qs[1].straggler_mask = qs[0].straggler_mask.copy()
+    qs[1].priority = 4.0
+    for q in qs:
+        bat.submit(q)
+    bat.run()
+    assert qs[1].finished_launch < qs[0].finished_launch
+    for q in qs:
+        _assert_matches_reference(q, scheme)
+
+
+def test_priority_default_is_uniform_chunking():
+    """priority=1.0 queries behave exactly as before the scheduler."""
+    q = _queries(1, seed=9, q=0.25)[0]
+    assert q.priority == 1.0
+    scheme = _scheme()
+    bat = CodedQueryBatcher(scheme, n_slots=2, rounds_per_launch=3)
+    bat.submit(q)
+    bat.run()
+    assert bat.pool.default_chunk == 3
+    _assert_matches_reference(q, scheme)
+
+
+# ------------------------------------------------------- slot pool lifecycle
+
+
+def test_slot_pool_state_machine():
+    from repro.serving import SlotPool
+
+    pool = SlotPool(3, budget=8, rounds_per_launch=4)
+    assert pool.free_slots() == [0, 1, 2] and not pool.active
+    pool.admit(0, "a")
+    pool.admit(1, "b", chunk=2)
+    with pytest.raises(ValueError):
+        pool.admit(0, "c")                      # occupied
+    with pytest.raises(ValueError):
+        pool.admit(2, None)                     # None marks free slots
+    budgets = pool.launch_budgets()
+    assert budgets.tolist() == [4, 2, 0]
+    # "a" early-exits (3 < 4 granted), "b" uses its full 2-round chunk
+    retired = pool.account(np.array([3, 2, 0]), np.array([0, 5, 0]))
+    assert retired == [(0, "a")]
+    assert pool.owner(1) == "b" and pool.rounds_spent(1) == 2
+    # "b" keeps going: grants min(chunk, remaining budget)
+    pool.admit(2, "c", chunk=100)               # clamped by remaining budget
+    budgets = pool.launch_budgets()
+    assert budgets.tolist() == [0, 2, 8]
+    # "b" grinds through its total budget in 2-round chunks; "c" burns its
+    # whole clamped grant and retires on budget exhaustion
+    pool.account(np.array([0, 2, 8]), np.array([0, 4, 3]))
+    budgets = pool.launch_budgets()
+    assert budgets.tolist() == [0, 2, 0]        # "c" retired at budget 8
+    pool.account(np.array([0, 2, 0]), np.array([0, 3, 0]))   # used: 6 of 8
+    budgets = pool.launch_budgets()
+    assert budgets.tolist() == [0, 2, 0]
+    retired = pool.account(np.array([0, 2, 0]), np.array([0, 3, 0]))
+    assert retired == [(1, "b")] and not pool.active
+
+
+def test_slot_pool_validates():
+    from repro.serving import SlotPool
+
+    with pytest.raises(ValueError):
+        SlotPool(0, budget=4)
+    with pytest.raises(ValueError):
+        SlotPool(2, budget=4, rounds_per_launch=0)

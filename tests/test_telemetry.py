@@ -1,0 +1,184 @@
+"""Telemetry layer: EMA straggler-rate estimation, density-evolution-derived
+decode budgets and wait-for thresholds, and the topology's per-worker →
+per-symbol erasure lift (a partition)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from tests._hypothesis_compat import given, settings, st
+except ImportError:  # pragma: no cover - run from tests/ directly
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import BernoulliStragglers
+from repro.core.density_evolution import q_final, threshold
+from repro.distributed.telemetry import (
+    StragglerRateEstimator,
+    cached_threshold,
+    decode_budget,
+    pick_wait_for,
+    rounds_to_clear,
+)
+from repro.distributed.topology import WorkerTopology
+
+
+# ------------------------------------------------------------ EMA estimator
+
+
+def test_ema_converges_to_bernoulli_rate():
+    """Under i.i.d. Bernoulli(q0) straggling the estimate converges to q0
+    (within the EMA's effective-sample-size noise floor)."""
+    q0, W = 0.2, 64
+    est = StragglerRateEstimator(decay=0.95)
+    model = BernoulliStragglers(q0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 400)
+    for k in keys:
+        est.observe(float(model.sample(k, W).mean()))
+    # effective sample size ~ (1+decay)/(1-decay) ≈ 39 masks of W workers
+    assert abs(est.rate - q0) < 0.03, est.rate
+
+
+def test_ema_prior_and_bias_correction():
+    est = StragglerRateEstimator(decay=0.9, prior=0.3)
+    assert est.rate == 0.3            # no observations yet: the prior
+    est.observe(0.5)
+    # bias-corrected: ONE observation estimates exactly that observation,
+    # not decay·0 + (1-decay)·0.5 = 0.05
+    assert est.rate == pytest.approx(0.5)
+    est.observe(0.1)
+    assert 0.1 < est.rate < 0.5       # between the two observations
+    assert est.steps == 2
+
+
+def test_ema_tracks_regime_change():
+    """After a calm→storm shift the estimate crosses over within a few
+    decay time constants."""
+    est = StragglerRateEstimator(decay=0.8)
+    for _ in range(30):
+        est.observe(0.05)
+    assert est.rate == pytest.approx(0.05, abs=1e-6)
+    for _ in range(15):
+        est.observe(0.4)
+    assert est.rate > 0.3
+
+
+def test_ema_validates_inputs():
+    with pytest.raises(ValueError):
+        StragglerRateEstimator(decay=1.0)
+    est = StragglerRateEstimator()
+    with pytest.raises(ValueError):
+        est.observe(1.5)
+
+
+# ------------------------------------------- density-evolution round budgets
+
+
+def test_rounds_to_clear_matches_density_evolution():
+    """The returned D really is the first round with q_D ≤ tol."""
+    l, r, tol = 3, 6, 1e-3
+    for q0 in (0.05, 0.15, 0.3, 0.4):
+        D = rounds_to_clear(q0, l, r, max_rounds=64, tol=tol)
+        assert q_final(q0, l, r, D) <= tol
+        if D > 1:
+            assert q_final(q0, l, r, D - 1) > tol
+
+
+def test_rounds_to_clear_monotone_and_saturating():
+    l, r = 3, 6
+    Ds = [rounds_to_clear(q, l, r, max_rounds=64) for q in
+          (0.0, 0.05, 0.15, 0.3, 0.4)]
+    assert Ds == sorted(Ds)
+    # above the ensemble threshold the recursion never collapses
+    qstar = cached_threshold(l, r)
+    assert rounds_to_clear(qstar + 0.05, l, r, max_rounds=64) == 64
+
+
+def test_decode_budget_clamped_and_padded():
+    l, r = 3, 6
+    b_light = decode_budget(0.02, l, r, max_rounds=32)
+    b_heavy = decode_budget(0.9, l, r, max_rounds=32)
+    assert 1 <= b_light < b_heavy <= 32
+    assert b_heavy == 32              # undecodable rate → worst-case budget
+    # slack rounds are actually added on top of the DE answer
+    D = rounds_to_clear(0.02 * 1.25, l, r, max_rounds=32)
+    assert b_light == D + 2
+
+
+# ---------------------------------------------------- wait-for threshold
+
+
+def test_wait_for_respects_threshold_margin():
+    """The cut implied by wait_for never exceeds margin·q*(l, r)."""
+    l, r, margin = 3, 6, 0.9
+    qstar = threshold(l, r)
+    for w in (8, 40, 256):
+        for q_hat in (0.0, 0.05, 0.2, 0.5, 1.0):
+            wait = pick_wait_for(q_hat, w, l, r, margin=margin)
+            assert 1 <= wait <= w
+            cut_frac = (w - wait) / w
+            assert cut_frac <= margin * qstar + 1e-9, (w, q_hat, cut_frac)
+
+
+def test_wait_for_tracks_observed_rate():
+    """Calm telemetry → wait for (nearly) everyone; heavy telemetry →
+    cut up to the threshold-capped maximum."""
+    l, r, w = 3, 6, 40
+    assert pick_wait_for(0.0, w, l, r) == w
+    calm = pick_wait_for(0.02, w, l, r)
+    stormy = pick_wait_for(0.35, w, l, r)
+    assert calm > stormy
+    # stormy saturates at the threshold cap, not at the observed rate
+    qstar = cached_threshold(l, r)
+    assert stormy == w - int(0.9 * qstar * w)
+
+
+def test_cached_threshold_matches_direct():
+    assert cached_threshold(3, 6) == pytest.approx(threshold(3, 6))
+
+
+# ----------------------------------------- worker→symbol lift is a partition
+
+
+@settings(deadline=None, max_examples=25)
+@given(W=st.sampled_from([1, 2, 4, 8, 16]), rpw=st.integers(1, 8),
+       seed=st.integers(0, 10_000))
+def test_worker_lift_is_partition(W, rpw, seed):
+    """Every encoded symbol is covered by EXACTLY one worker: lifting a
+    one-hot worker mask yields disjoint symbol sets whose union is all N
+    symbols, and lifting any mask then pooling back per worker recovers
+    the mask exactly."""
+    N = W * rpw
+    topo = WorkerTopology(W, N)
+    # one-hot masks: disjoint covers
+    cover = np.zeros(N, int)
+    for j in range(W):
+        onehot = np.zeros(W, bool)
+        onehot[j] = True
+        sym = np.asarray(topo.to_symbol_erasure(jnp.asarray(onehot)))
+        assert sym.sum() == rpw
+        cover += sym
+    assert (cover == 1).all()         # partition: each symbol exactly once
+    # arbitrary mask round-trips through the assignment
+    rng = np.random.default_rng(seed)
+    mask = rng.random(W) < 0.4
+    sym = np.asarray(topo.to_symbol_erasure(jnp.asarray(mask)))
+    pooled = sym.reshape(W, rpw)
+    assert (pooled.all(axis=1) == mask).all()
+    assert (pooled.any(axis=1) == mask).all()
+    # and agrees with the worker_of_row table
+    assert (sym == mask[topo.worker_of_row]).all()
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        WorkerTopology(3, 8)          # 8 rows don't split over 3 workers
+    with pytest.raises(ValueError):
+        WorkerTopology(0, 8)
+    topo = WorkerTopology(4, 8)
+    assert topo.rows_per_worker == 2
+    assert topo.worker_rows(1) == slice(2, 4)
+    with pytest.raises(IndexError):
+        topo.worker_rows(4)
+    assert float(topo.observed_fraction(jnp.array([True, False, True, False]))
+                 ) == pytest.approx(0.5)
