@@ -20,19 +20,25 @@ the ratio alone, while a code change that erodes the win moves it directly:
   (deterministic for a fixed seed: PRNG masks, count-based metric) —
   together with ``quality_preservation`` (fixed/telemetry mean
   unresolved), so round savings bought by abandoning recovery fail.
+* ``speedup_vs_dense`` (``large_n``, schema v5) — the scalable decode's
+  same-run advantage over the dense reference PAST the whole-H-in-VMEM
+  regime (N up to 16384): sparse everywhere, the check-axis-tiled fused
+  kernel where compiled (TPU) — interpret-mode tiled records are skipped
+  like every interpret record.
 
 ``--sections`` selects which gates run (CI's tier-1 job gates
-batched+serving; the fake-8-device distributed job gates distributed).
-Every record present in both files is compared (batched records key on
-(mode, N, B, D); serving on (mode, N, B, budget, chunk, n_queries);
-distributed on (mode, W, N)); the run fails if any fresh ratio drops more
-than ``--tol`` (relative) below the baseline's.  Interpret-mode Pallas
-records are skipped (interpret-mode latency is not a tracked quantity).
-Absolute per-query/per-step times are printed for context but never gate.
+batched+serving+large_n; the fake-8-device distributed job gates
+distributed).  Every record present in both files is compared (batched
+records key on (mode, N, B, D); serving on (mode, N, B, budget, chunk,
+n_queries); distributed on (mode, W, N); large_n on (backend, N, D)); the
+run fails if any fresh ratio drops more than ``--tol`` (relative) below
+the baseline's.  Interpret-mode Pallas records are skipped (interpret-mode
+latency is not a tracked quantity).  Absolute per-query/per-step times are
+printed for context but never gate.
 
   python benchmarks/check_regression.py \
       --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json \
-      --sections batched,serving
+      --sections batched,serving,large_n
 """
 from __future__ import annotations
 
@@ -59,6 +65,19 @@ def _serving_records(path: Path) -> dict[tuple, dict]:
             continue  # the lockstep row is the (unit-speedup) denominator
         out[(rec["mode"], rec["N"], rec["B"], rec["budget"], rec["chunk"],
              rec["n_queries"])] = rec
+    return out
+
+
+def _large_n_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("large_n", []):
+        # dense is the (unit-speedup) denominator; interpret-mode records
+        # are correctness tripwires, not timed quantities; forced-backend
+        # runs never rewrite the JSON but guard anyway
+        if (rec["backend"] != "dense" and not rec.get("interpret_mode")
+                and rec.get("speedup_vs_dense") and not rec.get("forced_backend")):
+            out[(rec["backend"], rec["N"], rec["D"])] = rec
     return out
 
 
@@ -110,12 +129,12 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed relative drop in the gated same-run "
                          "speedup ratios (default 25%%)")
-    ap.add_argument("--sections", default="batched,serving,distributed",
+    ap.add_argument("--sections", default="batched,serving,distributed,large_n",
                     help="comma-separated gates to run "
-                         "(batched|serving|distributed)")
+                         "(batched|serving|distributed|large_n)")
     args = ap.parse_args(argv)
     sections = [s for s in args.sections.split(",") if s]
-    unknown = set(sections) - {"batched", "serving", "distributed"}
+    unknown = set(sections) - {"batched", "serving", "distributed", "large_n"}
     if unknown:
         print(f"check_regression: unknown sections {sorted(unknown)}")
         return 1
@@ -131,6 +150,12 @@ def main(argv=None) -> int:
             _gate("serving", "speedup_vs_lockstep",
                   _serving_records(args.baseline),
                   _serving_records(args.new), args.tol))
+    if "large_n" in sections:
+        results.append(
+            _gate("large_n", "speedup_vs_dense",
+                  _large_n_records(args.baseline),
+                  _large_n_records(args.new), args.tol,
+                  context_key="per_round_us"))
     if "distributed" in sections:
         results.append(
             _gate("dist-overhead", "single_vs_distributed",

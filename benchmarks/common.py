@@ -30,6 +30,47 @@ from repro.core.schemes import Karakus, Replication, Uncoded
 W = 40  # the paper's worker count
 
 
+def resolve_bench_backend(code, requested: str, *,
+                          vmem_budget_bytes: int | None = None,
+                          pallas_cpu_max_n: int = 256) -> tuple[str, str | None]:
+    """Fail a forced decode backend over to one that can actually run.
+
+    Benchmarks used to crash (or effectively hang in interpret mode) when
+    ``--backend pallas`` was forced at large N — past the resident kernel's
+    VMEM limit on TPU, or past any reasonable interpret-mode budget on CPU.
+    Returns ``(backend, message)``: the backend to run and a human-readable
+    failover explanation (``None`` when the request stands).
+
+    * on TPU, "pallas" whose :func:`repro.core.decoder.vmem_bytes_estimate`
+      exceeds the VMEM budget fails over to "pallas_tiled" (same fused
+      contract, H streamed over check tiles);
+    * off-TPU, "pallas"/"pallas_tiled" beyond ``pallas_cpu_max_n`` fails
+      over to "sparse" (interpret mode is a correctness path, not a timed
+      one — see the interpret_mode flags in the emitted records).
+    """
+    from repro.core.decoder import (_DEFAULT_VMEM_BUDGET_BYTES,
+                                    vmem_bytes_estimate)
+
+    N = code.N
+    on_tpu = jax.default_backend() == "tpu"
+    if requested in ("pallas", "pallas_tiled") and not on_tpu \
+            and N > pallas_cpu_max_n:
+        return "sparse", (
+            f"backend={requested!r} forced at N={N} off-TPU: interpret-mode "
+            f"Pallas is not timeable past N={pallas_cpu_max_n} — failing "
+            f"over to 'sparse' (use a TPU for compiled kernel numbers)")
+    if requested == "pallas":
+        budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
+        est = vmem_bytes_estimate(code)
+        if est > budget:
+            return "pallas_tiled", (
+                f"backend='pallas' forced at N={N}: resident working set "
+                f"~{est / 2**20:.0f} MiB exceeds the {budget / 2**20:.0f} MiB "
+                f"VMEM budget — failing over to 'pallas_tiled' (H streamed "
+                f"over check tiles)")
+    return requested, None
+
+
 def build_code(seed=0):
     """The paper's (40, 20) rate-1/2 LDPC code."""
     return make_regular_ldpc(20, l=3, r=6, seed=seed)

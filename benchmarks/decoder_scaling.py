@@ -27,9 +27,24 @@ Sections:
   4. decode quality (|unresolved|) is monotone in the fixed round budget D;
   5. LDPC peeling cost vs MDS/Vandermonde least-squares recovery cost — the
      paper's low-complexity-decode argument (O(edges) vs O(w·K²) flops).
+  6. LARGE-N sweep (schema v5): decode latency past the whole-H-in-VMEM
+     regime, N up to 16384 — dense vs sparse everywhere both fit, plus the
+     check-axis-TILED fused kernel (``backend="pallas_tiled"``) where it is
+     timeable (compiled on TPU at every N; off-TPU a small-N interpret-mode
+     correctness record only, flagged).  ``speedup_vs_dense`` is the
+     same-run ratio ``check_regression.py --sections large_n`` gates.
+     Codes are built PARITY-ONLY (``make_parity_only_ldpc``) — the decode
+     trajectory never needs a generator, and the systematic solve is the
+     construction bottleneck past N ≈ 4096.
+
+Forcing ``--backend pallas`` (CLI) past the VMEM limit no longer crashes:
+``benchmarks.common.resolve_bench_backend`` fails over with a clear message
+(to "pallas_tiled" on TPU, "sparse" off-TPU), and the quick CI run
+exercises that path.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
@@ -38,9 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table
+from benchmarks.common import print_table, resolve_bench_backend
 from repro.core import FixedCountStragglers, make_regular_ldpc, peel_decode, \
     peel_decode_adaptive, peel_decode_batch, peel_decode_batch_adaptive
+from repro.core.ldpc import make_parity_only_ldpc
 from repro.serving.slot_lifecycle import SlotPool
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
@@ -335,6 +351,96 @@ def run_serving_sweep(*, K=1024, B=64, n_queries=320, heavy_frac=0.15,
     return rows, records
 
 
+def run_large_n_sweep(*, Ns=(2048, 4096, 8192, 16384), D=8, q=0.25, reps=3,
+                      dense_max_n=16384, tiled_cpu_max_n=2048,
+                      forced_backend: str | None = None):
+    """Decode latency PAST the whole-H-in-VMEM regime (the tiled path's
+    reason to exist).  Per N: the dense reference (kept through
+    ``dense_max_n`` = the full sweep — its (p, N) f32 operand is ~512 MiB
+    at N = 16384, the denominator every N's gate needs), sparse (the
+    scalable CPU path, every N), and the check-axis-tiled fused kernel —
+    timed compiled on TPU at every N; off-TPU one interpret-mode record at
+    ``tiled_cpu_max_n`` only, run for trajectory parity and flagged
+    ``interpret_mode`` (skipped by the gate, like every interpret record).
+    The same-run ``speedup_vs_dense`` is what CI gates
+    (``--sections large_n``).
+
+    ``forced_backend`` exercises the VMEM-failover bugfix: the requested
+    backend is resolved through ``resolve_bench_backend`` per N and the
+    failover message (if any) is printed instead of crashing.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    rows, records = [], []
+    for K in (n // 2 for n in Ns):
+        code = make_parity_only_ldpc(K, l=3, r=6, seed=0)
+        N, p = code.N, code.p
+        r_max = code.check_idx.shape[1]
+        rng = np.random.default_rng(N)
+        # The trajectory depends only on H and the mask — any payload does
+        # (these codes are parity-only; there is no generator to encode with).
+        vals = jnp.asarray(rng.standard_normal(N), jnp.float32)
+        erased = jnp.asarray(rng.random(N) < q)
+        rx = jnp.where(erased, 0.0, vals)
+
+        backends = []
+        if forced_backend:
+            backend, msg = resolve_bench_backend(code, forced_backend)
+            if msg:
+                print(f"[large_n N={N}] {msg}")
+            backends.append(backend)
+        else:
+            if N <= dense_max_n:
+                backends.append("dense")
+            backends.append("sparse")
+            if on_tpu or N <= tiled_cpu_max_n:
+                backends.append("pallas_tiled")
+
+        t_dense = None
+        ref_erased = None
+        for backend in backends:
+            # bv=8: scalar payloads need 8 lanes, not the default 128
+            # (ignored by dense/sparse; keeps the interpret record cheap).
+            # ONE jitted decode serves both the timing (values) and the
+            # trajectory tripwire (erased) — no second compile/execute.
+            fn = jax.jit(lambda v, e, b=backend: tuple(peel_decode(
+                code, v, e, D, backend=b, bv=8)[:2]))
+            t = _median_seconds(lambda v, e: fn(v, e), rx, erased,
+                                reps=reps)
+            if backend == "dense":
+                t_dense = t
+            # trajectory spot-check: every backend must land on the same
+            # unresolved set (bit-identical masks are the tiled path's
+            # correctness claim; tests prove it exhaustively, the bench
+            # keeps a tripwire on the exact configs it times)
+            got_erased = np.asarray(fn(rx, erased)[1])
+            if ref_erased is None:
+                ref_erased = got_erased
+            elif (got_erased != ref_erased).any():
+                raise AssertionError(
+                    f"large_n N={N}: backend={backend} erasure trajectory "
+                    "diverged from the first backend's")
+            work = (2.0 * p * N * 2 * D if backend == "dense"
+                    else 2.0 * p * r_max * 2 * D)
+            interp = backend in ("pallas", "pallas_tiled") and not on_tpu
+            rec = {
+                "backend": backend, "N": N, "K": K, "p": p, "D": D,
+                "erasure_q": q, "median_s": t,
+                "per_round_us": t / D * 1e6,
+                "achieved_gflops": work / t / 1e9,
+                "speedup_vs_dense": (t_dense / t) if t_dense else None,
+                "interpret_mode": interp,
+                "forced_backend": forced_backend,
+                "jax_backend": jax.default_backend(),
+            }
+            records.append(rec)
+            rows.append([N, K, backend, f"{t * 1e6:.0f}",
+                         f"{t / D * 1e6:.1f}",
+                         (f"{rec['speedup_vs_dense']:.2f}x"
+                          if rec["speedup_vs_dense"] else "-"),
+                         "interp" if interp else ""])
+    return rows, records
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -377,7 +483,22 @@ def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     return rows
 
 
-def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
+def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
+         backend: str | None = None):
+    if backend:
+        # Forced-backend run (the VMEM-failover bugfix path): resolve the
+        # request with a clear message and run ONE size past the limit
+        # (N=2048 triggers both failovers: > interpret budget off-TPU,
+        # > VMEM budget on TPU) — proving the path, not re-measuring the
+        # sweep.  Leaves the committed JSON alone.
+        lrows, _ = run_large_n_sweep(Ns=(2048,), reps=1,
+                                     forced_backend=backend)
+        print_table(f"Large-N sweep — forced backend {backend!r} "
+                    "(failover-resolved)",
+                    ["N", "K", "backend", "decode_us", "round_us",
+                     "speedup_vs_dense", ""], lrows)
+        return lrows
+
     # 1. backend scaling (the per-PR perf trajectory)
     Ks = (64, 256, 1024) if quick else (64, 256, 512, 1024, 2048)
     brows, records = run_backend_scaling(Ks=Ks, reps=3 if quick else 5)
@@ -407,6 +528,16 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
                 ["N", "B", "mode", "launches", "launch_rounds",
                  "per_query_us", "speedup_vs_lockstep"], serve_rows)
 
+    # 6. large-N sweep — the check-axis-tiled regime.  The config is FIXED
+    # (identical in quick mode, reps included: the whole sweep is ~20 s and
+    # the gated dense/sparse ratio is noise-sensitive at reps=2) so
+    # check_regression always finds matching (backend, N, D) records.
+    lrows, large_records = run_large_n_sweep(reps=3)
+    print_table("Large-N sweep — past the whole-H-in-VMEM regime "
+                "(tiled kernel where timeable)",
+                ["N", "K", "backend", "decode_us", "round_us",
+                 "speedup_vs_dense", ""], lrows)
+
     # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
@@ -425,21 +556,24 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
     out = {
         "benchmark": "decoder_scaling",
-        "schema_version": 4,
+        # v5: adds the "large_n" section (check-axis-tiled regime, N up to
+        # 16384, same-run speedup_vs_dense gated by check_regression).
+        "schema_version": 5,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
         "batched_scaling": batch_records,
         "serving_sweep": serve_records,
+        "large_n": large_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows
         ],
         "d_monotonicity": [dict(zip(["D", "unresolved"], r)) for r in drows],
     }
-    # schema v4: the distributed sweep (benchmarks/distributed_scaling.py,
-    # run on its own fake-worker mesh process) appends its section to the
-    # same file — carry it through instead of dropping it on rewrite.
+    # since schema v4: the distributed sweep (distributed_scaling.py, run
+    # on its own fake-worker mesh process) appends its section to the same
+    # file — carry it through instead of dropping it on rewrite.
     try:
         prev = json.loads(Path(json_path).read_text())
         if "distributed_scaling" in prev:
@@ -452,4 +586,12 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["dense", "sparse", "pallas", "pallas_tiled"],
+                    help="FORCE one decode backend through the large-N "
+                         "sweep (failover-resolved past the VMEM limit "
+                         "instead of crashing); skips the JSON rewrite")
+    a = ap.parse_args()
+    main(quick=a.quick, backend=a.backend)

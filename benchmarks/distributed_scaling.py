@@ -31,8 +31,12 @@ Sections:
      (``benchmarks.decoder_scaling.serve_continuous`` driving
      ``serving.slot_lifecycle.SlotPool``) — the multi-tenant master story.
 
-Results are APPENDED to ``BENCH_decoder_scaling.json`` (schema v4) under
+Results are APPENDED to ``BENCH_decoder_scaling.json`` under
 ``"distributed_scaling"``; the rest of the file is left untouched.
+
+Forcing ``--backend pallas`` past the VMEM limit no longer crashes the
+sweep: the master decode backend is resolved through
+``benchmarks.common.resolve_bench_backend`` with a printed failover.
 """
 from __future__ import annotations
 
@@ -44,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table
+from benchmarks.common import print_table, resolve_bench_backend
 from benchmarks.decoder_scaling import serve_continuous
 from repro.core import (
     BernoulliStragglers,
@@ -67,6 +71,12 @@ BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
 def _build(K, *, decode_iters, backend="sparse", budget_mode="fixed",
            n_workers=8, seed=0, max_rounds=None, decay=0.8):
     code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    # A forced backend the master cannot actually decode with at this N
+    # (e.g. --backend pallas past the VMEM limit) fails over with a clear
+    # message instead of crashing the sweep.
+    backend, msg = resolve_bench_backend(code, backend)
+    if msg:
+        print(f"[distributed K={K}] {msg}")
     prob = make_linear_problem(m=2 * K, k=K, seed=seed)
     scheme = Scheme2.build(code, second_moment(prob.X, prob.y), lr=prob.lr,
                            decode_iters=decode_iters, decode_backend=backend)
@@ -84,12 +94,13 @@ def _build(K, *, decode_iters, backend="sparse", budget_mode="fixed",
 
 
 def run_distributed_overhead(*, K=512, Ws=(2, 4, 8), q=0.125,
-                             steps_per_rep=10, reps=3):
+                             steps_per_rep=10, reps=3, backend="sparse"):
     """Per-step cost: master/worker DistributedCodedGD vs single-device
     Scheme2, same problem/key — returns (table_rows, json_records)."""
     rows, records = [], []
     for W in Ws:
-        code, scheme, topo, dist = _build(K, decode_iters=8, n_workers=W)
+        code, scheme, topo, dist = _build(K, decode_iters=8, n_workers=W,
+                                          backend=backend)
         stragglers = WorkerStragglers(BernoulliStragglers(q), topo)
         keys = jax.random.split(jax.random.PRNGKey(0), steps_per_rep)
         masks = [stragglers.sample_workers(k) for k in keys]
@@ -230,8 +241,19 @@ def run_master_stream(*, K=512, W=8, n_runs=6, steps=20, budget=32,
     return [row], [record]
 
 
-def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
+def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
+         backend: str | None = None):
     n_dev = jax.device_count()
+    if backend:
+        # Forced-backend run (VMEM-failover path): only the overhead sweep,
+        # smallest worker count, no JSON rewrite.
+        orows, _ = run_distributed_overhead(reps=1, steps_per_rep=4,
+                                            Ws=(2,), backend=backend)
+        print_table(f"Distributed overhead — forced backend {backend!r} "
+                    "(failover-resolved)",
+                    ["W", "devices", "N", "dist_step_us", "single_step_us",
+                     "single/dist"], orows)
+        return orows
     orows, orecs = run_distributed_overhead(
         reps=2 if quick else 4,
         steps_per_rep=6 if quick else 12)
@@ -258,7 +280,9 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
         out = json.loads(path.read_text())
     except (FileNotFoundError, json.JSONDecodeError):
         out = {"benchmark": "decoder_scaling"}
-    out["schema_version"] = 4
+    # keep the file's schema at the decoder sweep's version (v5 adds the
+    # large_n section there; this append predates neither)
+    out["schema_version"] = max(5, int(out.get("schema_version", 5)))
     out["distributed_scaling"] = records
     path.write_text(json.dumps(out, indent=2))
     print(f"\nappended distributed_scaling ({len(records)} records) "
@@ -267,4 +291,14 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["dense", "sparse", "pallas", "pallas_tiled"],
+                    help="FORCE the master decode backend (failover-resolved "
+                         "past the VMEM limit instead of crashing); skips "
+                         "the JSON rewrite")
+    a = ap.parse_args()
+    main(quick=a.quick, backend=a.backend)

@@ -43,12 +43,26 @@ backend    what runs
            while_loop PER SLOT with a traced per-slot round budget) are
            each ONE launch.  Runs in interpret mode off-TPU (correct but
            not fast on CPU).
+"pallas_tiled"
+           the same four one-launch contracts with ``H`` STREAMED over
+           CHECK tiles from HBM (``bp`` rows at a time, double-buffered
+           DMA) while the value carry lives in VMEM — problem size is
+           bounded by HBM, not whole-H-in-VMEM, so the fused decode serves
+           N ∈ {4096, 8192, 16384, ...}.  Identical erasure trajectories
+           (every tile's proposal is computed against the round-start
+           state; ascending tiles keep the lowest-index-check tie-break);
+           values match "pallas" up to f32 summation order (XLA may block
+           a tile's row-sum reduction differently than the whole-H one).
+           Tile knobs: ``bp`` (check-tile height; default sized from the
+           VMEM budget via :func:`pick_tile_bp`) and ``bv`` (payload tile).
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
-           large codes off-TPU; "pallas" on TPU when the kernel's whole
-           working set fits comfortably in VMEM (N ≤ 512), else "sparse".
-           The same rule applies on the batch axis (the batched kernel's
-           per-step working set matches the single-pattern kernel's), and
-           to the batched-adaptive decode.
+           large codes off-TPU; on TPU, "pallas" when
+           :func:`vmem_bytes_estimate` says the resident kernel's
+           per-grid-step working set fits the VMEM budget
+           (``vmem_budget_bytes``, default 8 MiB of the ~16 MiB/core), and
+           "pallas_tiled" otherwise.  The same rule applies on the batch
+           axis (the batched kernel's per-step working set matches the
+           single-pattern kernel's), and to the batched-adaptive decode.
 =========  ==================================================================
 
 All backends follow bit-identical erasure trajectories (solvability is an
@@ -97,20 +111,73 @@ __all__ = [
     "peel_decode_batch_adaptive",
     "erased_after",
     "resolve_backend",
+    "vmem_bytes_estimate",
+    "pick_tile_bp",
 ]
 
-BACKENDS = ("auto", "dense", "sparse", "pallas")
+BACKENDS = ("auto", "dense", "sparse", "pallas", "pallas_tiled")
 
 # "auto" picks the sparse neighbor-table round once the dense round's O(p·N)
 # work clearly loses to O(p·r_max) gathers; below this the dense matmul's
 # better vectorization wins on CPU.
 _AUTO_SPARSE_MIN_N = 256
-# Largest N "auto" routes to the fused kernel on TPU.  The kernel's live
-# VMEM working set is several (p, N) buffers (H plus mask/iota/one-hot
-# temporaries), not just the H tile, so stay well inside the ~16 MiB/core
-# budget: N = 512 → p·N f32 ≈ 0.5 MiB per buffer.  Larger codes use the
-# sparse round until the kernel tiles H over the check axis (ROADMAP).
-_AUTO_PALLAS_MAX_N = 512
+# VMEM budget the "auto" dispatch sizes the fused kernels against: half of
+# the ~16 MiB/core, leaving headroom for the pipeline's own double
+# buffering.  Overridable per call/engine via ``vmem_budget_bytes``.
+_DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def _kernel_shape(code) -> tuple[int, int]:
+    """(p, N) of an LDPCCode, an (H, Hb) tuple, or a raw (p, N) int pair."""
+    if isinstance(code, LDPCCode):
+        return code.p, code.N
+    a, b = code
+    if isinstance(a, (int, np.integer)):
+        return int(a), int(b)
+    return a.shape[0], a.shape[1]
+
+
+def vmem_bytes_estimate(code, dtype=jnp.float32, batch: int = 1, *,
+                        bv: int = 128) -> int:
+    """Estimated per-grid-step VMEM working set of the RESIDENT fused kernel.
+
+    ``code`` may be an :class:`LDPCCode`, an ``(H, Hb)`` tuple, or a raw
+    ``(p, N)`` shape pair.  The resident kernel keeps several ``(p, N)``
+    buffers live per round (H itself plus its boolean mask, the column/row
+    iotas, and the resolution one-hot) alongside the ``(N, bv)`` payload
+    carry and the ``(N, 1)`` masks; the estimate counts them at the
+    kernel's f32 compute width (``dtype`` below f32 still computes in f32).
+    The batch axis shares H and streams one slot's payload per grid step,
+    so ``batch`` does not scale the per-step set — the argument is accepted
+    (and validated) so call sites can pass their batch size symmetrically.
+
+    ``backend="auto"`` compares this against ``vmem_budget_bytes`` to pick
+    resident-"pallas" vs "pallas_tiled"; benchmarks use it to fail over
+    with a clear message instead of crashing past the VMEM limit.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1; got {batch}")
+    p, N = _kernel_shape(code)
+    esize = max(jnp.dtype(dtype).itemsize, 4)
+    Npad = N + (-N) % 128
+    ppad = p + (-p) % 8
+    h_like = 5 * ppad * Npad * esize        # H, Hb, col/row iota, one-hot
+    payload = 3 * Npad * bv * esize         # carry + known + scattered
+    masks = 3 * Npad * esize                # erasure mask + resolved flags
+    return h_like + payload + masks
+
+
+def pick_tile_bp(code, *, vmem_budget_bytes: int | None = None) -> int:
+    """Check-tile height for the tiled kernels: the tallest 8-aligned tile
+    whose double-buffered ``(2, bp, N)`` stream stays within ~half of the
+    VMEM budget (the other half holds the value carry and round
+    temporaries).  Clamped to [8, p]."""
+    budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
+    p, N = _kernel_shape(code)
+    Npad = N + (-N) % 128
+    bp = (budget // 2) // (2 * Npad * 4)
+    bp -= bp % 8
+    return int(max(8, min(bp, p + (-p) % 8)))
 
 
 class DecodeResult(NamedTuple):
@@ -127,13 +194,17 @@ def _expand(values: jax.Array) -> tuple[jax.Array, bool]:
     return values, False
 
 
-def resolve_backend(backend: str, code, *, adaptive: bool = False) -> str:
+def resolve_backend(backend: str, code, *, adaptive: bool = False,
+                    vmem_budget_bytes: int | None = None) -> str:
     """Resolve the ``backend=`` knob to a concrete decode implementation.
 
     See the module docstring for the matrix.  Raises on unknown names and on
     sparse/pallas requests for raw ``(H, Hb)`` tuples (no neighbor table).
     Since the adaptive decode gained its own fused kernel (in-kernel
-    while_loop), ``adaptive`` no longer downgrades "pallas".
+    while_loop), ``adaptive`` no longer downgrades "pallas".  On TPU,
+    ``"auto"`` dispatches on :func:`vmem_bytes_estimate` against
+    ``vmem_budget_bytes`` (not a hardcoded N threshold): resident "pallas"
+    while the whole working set fits, "pallas_tiled" beyond it.
     """
     del adaptive  # kept for call-site compatibility; all modes have kernels
     if backend not in BACKENDS:
@@ -142,12 +213,13 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False) -> str:
     if backend == "auto":
         if not is_code:
             return "dense"
-        N = code.N
         if jax.default_backend() == "tpu":
-            backend = "pallas" if N <= _AUTO_PALLAS_MAX_N else "sparse"
+            budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
+            backend = ("pallas" if vmem_bytes_estimate(code) <= budget
+                       else "pallas_tiled")
         else:
-            backend = "sparse" if N >= _AUTO_SPARSE_MIN_N else "dense"
-    if backend in ("sparse", "pallas") and not is_code:
+            backend = "sparse" if code.N >= _AUTO_SPARSE_MIN_N else "dense"
+    if backend in ("sparse", "pallas", "pallas_tiled") and not is_code:
         raise ValueError(
             f"backend={backend!r} needs an LDPCCode (neighbor table); "
             "raw (H, Hb) tuples only support backend='dense'"
@@ -260,6 +332,14 @@ def peel_fixed_sparse(check_idx, check_coeff, values, erased, iters: int):
 # ----------------------------------------------------------------- dispatch
 
 
+def _tile_knobs(code, bp, bv, vmem_budget_bytes):
+    """Concrete (bp, bv) for the tiled kernels: ``bp`` sized from the VMEM
+    budget unless given, ``bv`` defaulting to the kernels' 128 lanes."""
+    if bp is None:
+        bp = pick_tile_bp(code, vmem_budget_bytes=vmem_budget_bytes)
+    return int(bp), int(bv) if bv is not None else 128
+
+
 def peel_decode(
     code: LDPCCode | tuple[jax.Array, jax.Array],
     values: jax.Array,
@@ -267,15 +347,22 @@ def peel_decode(
     iters: int,
     *,
     backend: str = "auto",
+    bp: int | None = None,
+    bv: int | None = None,
+    vmem_budget_bytes: int | None = None,
 ) -> DecodeResult:
     """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode).
 
     ``backend`` selects the implementation — see the module docstring for
     the full matrix.  The default ``"auto"`` keeps small/tuple inputs on the
     dense reference and routes large codes to the sparse neighbor-table
-    round (or, on TPU, the fused one-kernel Pallas decode).
+    round (or, on TPU, the fused one-kernel Pallas decode — resident H
+    within ``vmem_budget_bytes``, check-axis tiled beyond it).  ``bp`` /
+    ``bv`` are the tiled kernels' check/payload tile knobs (``bp`` defaults
+    to :func:`pick_tile_bp`'s budget-sized tile).
     """
-    backend = resolve_backend(backend, code)
+    backend = resolve_backend(backend, code,
+                              vmem_budget_bytes=vmem_budget_bytes)
     v, squeeze = _expand(jnp.asarray(values))
     e = jnp.asarray(erased, bool)
     iters = int(iters)
@@ -287,6 +374,12 @@ def peel_decode(
 
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e = peel_decode_pallas(H, v, e, iters)
+    elif backend == "pallas_tiled":
+        from repro.kernels.ldpc_peel import peel_decode_tiled_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e = peel_decode_tiled_pallas(H, v, e, iters, bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = peel_fixed_dense(H, Hb, v, e, iters)
@@ -393,6 +486,9 @@ def peel_decode_batch(
     iters: int,
     *,
     backend: str = "auto",
+    bp: int | None = None,
+    bv: int | None = None,
+    vmem_budget_bytes: int | None = None,
 ) -> DecodeResult:
     """Decode ``B`` INDEPENDENT erasure patterns in one launch.
 
@@ -405,13 +501,16 @@ def peel_decode_batch(
     * "dense" / "sparse": the fixed-D loop is ``vmap``-ed over the pattern
       axis with the code operands broadcast;
     * "pallas": ``peel_decode_batch_pallas`` — ONE ``pallas_call`` whose
-      grid runs over the batch with the H tile resident in VMEM and shared.
+      grid runs over the batch with the H tile resident in VMEM and shared;
+    * "pallas_tiled": ``peel_decode_batch_tiled_pallas`` — one launch, H
+      streamed over check tiles per slot (beyond the VMEM cap).
 
     This is the serving primitive: many concurrent coded matvec/gradient
     queries, each with its own straggler mask, one decode launch
     (see :mod:`repro.serving.coded_queries`).
     """
-    backend = resolve_backend(backend, code)
+    backend = resolve_backend(backend, code,
+                              vmem_budget_bytes=vmem_budget_bytes)
     v = jnp.asarray(values)
     if v.ndim not in (2, 3):
         raise ValueError(f"batched values must be (B, N) or (B, N, V); "
@@ -431,6 +530,12 @@ def peel_decode_batch(
 
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e = peel_decode_batch_pallas(H, v, e, iters)
+    elif backend == "pallas_tiled":
+        from repro.kernels.ldpc_peel import peel_decode_batch_tiled_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e = peel_decode_batch_tiled_pallas(H, v, e, iters, bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = _peel_fixed_dense_batch(H, Hb, v, e, iters)
@@ -483,6 +588,9 @@ def peel_decode_adaptive(
     max_iters: int | None = None,
     *,
     backend: str = "auto",
+    bp: int | None = None,
+    bv: int | None = None,
+    vmem_budget_bytes: int | None = None,
 ) -> DecodeResult:
     """Decode until fixpoint (no check resolves) or ``max_iters`` rounds.
 
@@ -490,9 +598,11 @@ def peel_decode_adaptive(
     with few erasures the loop exits after 1-2 rounds.  ``backend="pallas"``
     runs the early-exit loop INSIDE the fused kernel (one launch, in-kernel
     while_loop on the unresolved count) — same trajectory and round count as
-    the dense/sparse while_loops.
+    the dense/sparse while_loops; ``"pallas_tiled"`` additionally stops the
+    H streaming at the early exit.
     """
-    backend = resolve_backend(backend, code, adaptive=True)
+    backend = resolve_backend(backend, code, adaptive=True,
+                              vmem_budget_bytes=vmem_budget_bytes)
     if max_iters is None:
         max_iters = int(code.N if isinstance(code, LDPCCode) else code[0].shape[1])
     v, squeeze = _expand(jnp.asarray(values))
@@ -505,6 +615,13 @@ def peel_decode_adaptive(
 
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e, d = peel_decode_adaptive_pallas(H, v, e, int(max_iters))
+    elif backend == "pallas_tiled":
+        from repro.kernels.ldpc_peel import peel_decode_adaptive_tiled_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e, d = peel_decode_adaptive_tiled_pallas(H, v, e, int(max_iters),
+                                                    bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))
@@ -605,6 +722,9 @@ def peel_decode_batch_adaptive(
     *,
     backend: str = "auto",
     budgets: jax.Array | None = None,
+    bp: int | None = None,
+    bv: int | None = None,
+    vmem_budget_bytes: int | None = None,
 ) -> DecodeResult:
     """Decode ``B`` independent patterns with PER-SLOT early exit, one launch.
 
@@ -626,7 +746,8 @@ def peel_decode_batch_adaptive(
     serving (:mod:`repro.serving.coded_queries`): in-flight slots carry
     their remaining budgets across chunked launches.
     """
-    backend = resolve_backend(backend, code, adaptive=True)
+    backend = resolve_backend(backend, code, adaptive=True,
+                              vmem_budget_bytes=vmem_budget_bytes)
     v = jnp.asarray(values)
     if v.ndim not in (2, 3):
         raise ValueError(f"batched values must be (B, N) or (B, N, V); "
@@ -654,6 +775,14 @@ def peel_decode_batch_adaptive(
 
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e, d = peel_decode_batch_adaptive_pallas(H, v, e, budgets)
+    elif backend == "pallas_tiled":
+        from repro.kernels.ldpc_peel import (
+            peel_decode_batch_adaptive_tiled_pallas)
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        H = jnp.asarray(code.H, _float_dtype(v.dtype))
+        v, e, d = peel_decode_batch_adaptive_tiled_pallas(H, v, e, budgets,
+                                                          bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive_dense_batch(H, Hb, v, e, budgets)

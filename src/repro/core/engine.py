@@ -42,6 +42,7 @@ are orthogonal; the engine exposes both.
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -52,11 +53,15 @@ from repro.core.decoder import (
     peel_decode_adaptive,
     peel_decode_batch,
     peel_decode_batch_adaptive,
+    pick_tile_bp,
     resolve_backend,
+    vmem_bytes_estimate,
 )
 from repro.core.ldpc import LDPCCode
 
 __all__ = ["CodedComputeEngine", "blocked_epilogue"]
+
+logger = logging.getLogger(__name__)
 
 
 def blocked_epilogue(values: jax.Array, erased: jax.Array, b: jax.Array,
@@ -94,13 +99,47 @@ class CodedComputeEngine:
 
     code: LDPCCode
     decode_iters: int = 10
-    backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
+    backend: str = "auto"  # dense | sparse | pallas | pallas_tiled | auto
     adaptive: bool = False
+    # Tile plumbing for the check-axis-tiled fused kernels: bp (check-tile
+    # height; None = sized from the VMEM budget) and bv (payload tile), plus
+    # the VMEM budget "auto" dispatches on (None = decoder default, 8 MiB).
+    bp: int | None = None
+    bv: int | None = None
+    vmem_budget_bytes: int | None = None
 
     def __post_init__(self) -> None:
         # Fail fast on unknown/unsupported backend names (same matrix as
-        # decoder.resolve_backend) instead of at first decode.
-        resolve_backend(self.backend, self.code, adaptive=self.adaptive)
+        # decoder.resolve_backend) instead of at first decode, and record
+        # the resolved dispatch where operators can see it.
+        resolve_backend(self.backend, self.code, adaptive=self.adaptive,
+                        vmem_budget_bytes=self.vmem_budget_bytes)
+        if logger.isEnabledFor(logging.DEBUG):
+            logger.debug("CodedComputeEngine: %s", self.debug_info())
+
+    def debug_info(self) -> dict:
+        """The engine's decode dispatch, resolved: requested vs chosen
+        backend, the VMEM working-set estimate the choice was made on, and
+        the concrete tile knobs the tiled kernels would run with."""
+        resolved = resolve_backend(self.backend, self.code,
+                                   adaptive=self.adaptive,
+                                   vmem_budget_bytes=self.vmem_budget_bytes)
+        return {
+            "backend": self.backend,
+            "resolved_backend": resolved,
+            "vmem_bytes_estimate": vmem_bytes_estimate(self.code),
+            "vmem_budget_bytes": self.vmem_budget_bytes,
+            "bp": (self.bp if self.bp is not None else pick_tile_bp(
+                self.code, vmem_budget_bytes=self.vmem_budget_bytes)),
+            "bv": self.bv if self.bv is not None else 128,
+            "N": self.code.N,
+            "decode_iters": self.decode_iters,
+            "adaptive": self.adaptive,
+        }
+
+    def _tile_kw(self) -> dict:
+        return {"bp": self.bp, "bv": self.bv,
+                "vmem_budget_bytes": self.vmem_budget_bytes}
 
     # -------------------------------------------------------------- stages
 
@@ -134,9 +173,10 @@ class CodedComputeEngine:
             # matching the pre-engine Scheme2 semantics.
             return peel_decode_adaptive(self.code, values, erased,
                                         self.decode_iters,
-                                        backend=self.backend)
+                                        backend=self.backend,
+                                        **self._tile_kw())
         return peel_decode(self.code, values, erased, self.decode_iters,
-                           backend=self.backend)
+                           backend=self.backend, **self._tile_kw())
 
     def decode_batch(self, values: jax.Array, erased: jax.Array, *,
                      adaptive: bool | None = None,
@@ -157,14 +197,14 @@ class CodedComputeEngine:
         if use_adaptive:
             return peel_decode_batch_adaptive(
                 self.code, values, erased, self.decode_iters,
-                backend=self.backend, budgets=budgets)
+                backend=self.backend, budgets=budgets, **self._tile_kw())
         if budgets is not None:
             raise ValueError(
                 "budgets= requires the adaptive batched decode (engine "
                 "adaptive=True or decode_batch(adaptive=True)); the fixed-D "
                 "path would silently ignore the per-slot round budgets")
         return peel_decode_batch(self.code, values, erased, self.decode_iters,
-                                 backend=self.backend)
+                                 backend=self.backend, **self._tile_kw())
 
     def systematic(self, dec: DecodeResult) -> tuple[jax.Array, jax.Array]:
         """Epilogue: zero-filled systematic part + its unresolved mask.

@@ -34,7 +34,8 @@ from typing import Literal
 
 import numpy as np
 
-__all__ = ["LDPCCode", "make_regular_ldpc", "make_ldgm"]
+__all__ = ["LDPCCode", "make_regular_ldpc", "make_ldgm",
+           "make_parity_only_ldpc"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +153,11 @@ class LDPCCode:
 
     def encode(self, message: np.ndarray) -> np.ndarray:
         """Encode a (K, ...) message block into an (N, ...) codeword block."""
+        if self.G.size == 0:
+            raise ValueError(
+                "this code was built parity-only (make_parity_only_ldpc): "
+                "it carries H for decode-structure work but no generator — "
+                "use make_regular_ldpc when you need to encode")
         return self.G @ message
 
     def check(self, codeword: np.ndarray, atol: float = 1e-4) -> bool:
@@ -299,6 +305,43 @@ def make_regular_ldpc(
         assert np.allclose(code.H @ code.G, 0.0, atol=1e-6 * np.abs(H).max() * K)
         return code
     raise RuntimeError(f"no well-conditioned H2 found in {max_seed_tries} tries")
+
+
+def make_parity_only_ldpc(
+    K: int,
+    *,
+    l: int = 3,
+    r: int = 6,
+    seed: int = 0,
+    values: Literal["gaussian", "pm1"] = "gaussian",
+) -> LDPCCode:
+    """(l, r)-regular parity structure WITHOUT the systematic generator.
+
+    :func:`make_regular_ldpc`'s generator solve (rank-revealing column
+    pivoting + the dense ``H2^{-1} H1`` block) is O(p²·N) and dominates
+    construction past N ≈ 4096 — but the peeling DECODE trajectory depends
+    only on ``H`` and the erasure mask, never on the payload being a
+    codeword.  Large-N decoder benchmarks and tests (the check-axis-tiled
+    kernels, the sharded master decode) therefore use this constructor:
+    the same configuration-model ``H`` (f32 to halve the footprint at
+    N = 16384), neighbor/column tables as usual, and an EMPTY generator —
+    :meth:`LDPCCode.encode` raises with a pointer back to
+    :func:`make_regular_ldpc`.
+    """
+    if l >= r:
+        raise ValueError(f"need l < r for positive rate, got l={l}, r={r}")
+    if (K * l) % (r - l) != 0:
+        raise ValueError(f"K*l must be divisible by (r-l); K={K}, l={l}, r={r}")
+    p = K * l // (r - l)
+    N = K + p
+    rng = np.random.default_rng(seed)
+    adj = _configuration_model(p, N, l, r, rng)
+    w = rng.standard_normal(adj.shape, dtype=np.float32)
+    if values == "pm1":
+        w = np.sign(w) + (w == 0.0)
+    H = np.where(adj, w, 0.0).astype(np.float32)
+    return LDPCCode(H=H, G=np.zeros((N, 0), np.float32), N=N, K=K, l=l, r=r,
+                    kind="ldpc-parity-only", seed=seed)
 
 
 def make_ldgm(

@@ -12,6 +12,11 @@ Layers (each its own module):
   shared :class:`repro.core.engine.CodedComputeEngine` backends, the
   :class:`~repro.distributed.master.DistributedCodedGD` driver (bit-identical
   to single-device ``Scheme2``), and the production-scale AOT step;
+* :mod:`repro.distributed.sharded_decode` — the master decode itself sharded
+  over the mesh (``master_decode="sharded"``): check tiles partitioned over
+  the ``"workers"`` axis, per-round all-gather merge, bit-identical to the
+  single-device sparse decode (overwrite semantics shard without changing
+  f32 summation order);
 * :mod:`repro.distributed.telemetry` — online EMA straggler-rate estimation
   feeding density evolution to pick wait-for thresholds and per-step
   adaptive decode budgets.
@@ -20,6 +25,10 @@ from repro.distributed.master import (
     DistributedCodedGD,
     DistributedRunResult,
     build_distributed_gd_step,
+)
+from repro.distributed.sharded_decode import (
+    build_sharded_decode,
+    shard_check_tables,
 )
 from repro.distributed.telemetry import (
     StragglerRateEstimator,
@@ -40,6 +49,7 @@ from repro.distributed.worker import (
 
 __all__ = [
     "DistributedCodedGD", "DistributedRunResult", "build_distributed_gd_step",
+    "build_sharded_decode", "shard_check_tables",
     "StragglerRateEstimator", "decode_budget", "pick_wait_for",
     "rounds_to_clear",
     "WorkerTopology", "make_worker_mesh", "row_sharding",

@@ -35,6 +35,16 @@ under a per-step round budget chosen by the online straggler-rate estimator
 (:mod:`repro.distributed.telemetry`).  The budget is a TRACED operand of
 the one compiled master program (via the engine's batched-adaptive decode
 at B=1), so a drifting straggler climate never recompiles.
+
+``master_decode="sharded"`` replaces step 2's single-device decode with
+:mod:`repro.distributed.sharded_decode`: the check-side neighbor table is
+partitioned over the ``"workers"`` mesh axis and the per-shard round
+results are all-gathered and merged ONCE per round — the peeling update is
+per-variable overwrite semantics, not an f32 contraction, so the sharded
+decode stays bit-identical to the single-device one (the objection above
+applies to AUTO-partitioned dense decodes, not to an explicit check-axis
+shard).  Telemetry budgets flow into the sharded program through the same
+traced ``(1,)`` operand.
 """
 from __future__ import annotations
 
@@ -49,8 +59,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.coded_step import Scheme2
+from repro.core.decoder import DecodeResult
 from repro.core.engine import blocked_epilogue
 from repro.core.straggler import DelayModel
+from repro.distributed.sharded_decode import (
+    build_sharded_decode,
+    shard_check_tables,
+)
 from repro.distributed.telemetry import (
     StragglerRateEstimator,
     decode_budget,
@@ -67,6 +82,7 @@ __all__ = ["DistributedRunResult", "DistributedCodedGD",
            "build_distributed_gd_step"]
 
 BUDGET_MODES = ("fixed", "telemetry")
+MASTER_DECODES = ("single", "sharded")
 
 
 class DistributedRunResult(NamedTuple):
@@ -96,6 +112,12 @@ class DistributedCodedGD:
     topology: WorkerTopology
     mesh: Mesh | None = None
     budget_mode: str = "fixed"
+    # "single": decode as one single-device program on the master (the
+    # default — any engine backend).  "sharded": the decode itself runs
+    # over the workers mesh with check tiles partitioned across devices
+    # (repro.distributed.sharded_decode) — for N past one device; stays
+    # bit-identical to the single-device sparse decode.
+    master_decode: str = "single"
     estimator: StragglerRateEstimator | None = None
     max_rounds: int | None = None     # telemetry worst-case budget ceiling
     # Delay-model runs: a worker counts as STRAGGLING when its latency
@@ -110,6 +132,9 @@ class DistributedCodedGD:
         if self.budget_mode not in BUDGET_MODES:
             raise ValueError(f"unknown budget_mode {self.budget_mode!r}; "
                              f"want one of {BUDGET_MODES}")
+        if self.master_decode not in MASTER_DECODES:
+            raise ValueError(f"unknown master_decode {self.master_decode!r}; "
+                             f"want one of {MASTER_DECODES}")
         if self.topology.N != self.scheme.w:
             raise ValueError(
                 f"topology covers N={self.topology.N} rows but the scheme's "
@@ -125,6 +150,10 @@ class DistributedCodedGD:
             jnp.asarray(self.scheme.C), self.mesh, self.topology)
         self._replicated = replicated_sharding(self.mesh)
         self.master_device = self.mesh.devices.flat[0]
+        if self.master_decode == "sharded":
+            # Check tiles partitioned over the workers axis, once at build.
+            self._sharded_tables = shard_check_tables(self.scheme.code,
+                                                      self.mesh)
         self._worker_program, self._master_program = self._build_programs()
 
     # ------------------------------------------------------------ step build
@@ -147,6 +176,34 @@ class DistributedCodedGD:
             return worker_products(C_sh, theta, erased)
 
         worker_jit = jax.jit(worker_program, out_shardings=self._replicated)
+
+        if self.master_decode == "sharded":
+            # Sharded master program: the decode runs over the SAME mesh,
+            # check tiles partitioned across devices, values replicated; the
+            # scheme's epilogue/update stays replicated elementwise math.
+            # Both budget modes flow through the traced (1,) budget operand
+            # (the fixed program bakes its round count in statically and
+            # ignores it, mirroring the single-device fixed program).
+            eng_iters = int(eng.decode_iters)
+            decode_fn = build_sharded_decode(
+                self.mesh, iters=eng_iters,
+                adaptive=self.budget_mode == "telemetry")
+            fixed_mode = self.budget_mode == "fixed"
+
+            def master_program(idx_sh, coeff_sh, z, worker_mask, theta,
+                               budget):
+                erased = topo.to_symbol_erasure(worker_mask)
+                z = eng.erase(z, erased)      # idempotent, mirrors recover()
+                vals, e2, rounds = decode_fn(idx_sh, coeff_sh, z[:, None],
+                                             erased, budget)
+                dec = DecodeResult(vals[:, 0], e2, rounds)
+                c_hat, unresolved = eng.systematic(dec)
+                g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+                theta2 = scheme.projection(theta - scheme.lr * g)
+                return theta2, n_unres, (jnp.int32(eng_iters) if fixed_mode
+                                         else rounds)
+
+            return worker_jit, jax.jit(master_program)
 
         # Master program: a SINGLE-DEVICE launch (inputs committed to the
         # master device pin it there) — decode of the gathered survivors
@@ -212,6 +269,16 @@ class DistributedCodedGD:
             self._C_sharded,
             jax.device_put(theta, self._replicated),
             jax.device_put(worker_mask, self._replicated))
+        if self.master_decode == "sharded":
+            # decode over the mesh: check tiles stay sharded, operands
+            # replicated, one all-gather merge per round
+            rep = self._replicated
+            idx_sh, coeff_sh = self._sharded_tables
+            theta2, n_unres, rounds = self._master_program(
+                idx_sh, coeff_sh, jax.device_put(z, rep),
+                jax.device_put(worker_mask, rep), jax.device_put(theta, rep),
+                jax.device_put(jnp.asarray([budget], jnp.int32), rep))
+            return theta2, int(n_unres), int(rounds), budget
         # master-local decode + update on the gathered survivors
         m = self.master_device
         theta2, n_unres, rounds = self._master_program(

@@ -35,16 +35,25 @@ from repro.distributed.worker import WorkerStragglers
 
 def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
                  q0: float = 0.25, backend: str = "sparse",
-                 seed: int = 0) -> int:
+                 master_decode: str = "single", seed: int = 0) -> int:
     """Returns the number of steps checked; raises AssertionError on the
-    first diverging iterate."""
+    first diverging iterate.
+
+    ``master_decode="sharded"`` swaps the master's decode for the
+    check-tile-sharded one (:mod:`repro.distributed.sharded_decode`) while
+    the single-device reference keeps decoding through the engine — the
+    assertion then proves the SHARDED decode itself is bit-identical to the
+    single-device decode (use ``backend="sparse"``: the sharded rounds are
+    the sparse neighbor-table rounds, shard-partitioned).
+    """
     code = make_regular_ldpc(K, l=3, r=6, seed=seed)
     prob = make_linear_problem(m=4 * K, k=K, seed=seed)
     mom = second_moment(prob.X, prob.y)
     scheme = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
                            decode_backend=backend)
     topo = WorkerTopology(n_workers, code.N)
-    dist = DistributedCodedGD(scheme, topo, make_worker_mesh())
+    dist = DistributedCodedGD(scheme, topo, make_worker_mesh(),
+                              master_decode=master_decode)
     stragglers = WorkerStragglers(BernoulliStragglers(q0), topo)
 
     key = jax.random.PRNGKey(seed)
@@ -66,8 +75,9 @@ def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
         if not (ref == got).all():
             bad = int(np.argmax(ref != got))
             raise AssertionError(
-                f"backend={backend}: iterates diverge at step {t}, "
-                f"coordinate {bad}: {ref[bad]!r} != {got[bad]!r}")
+                f"backend={backend} master_decode={master_decode}: iterates "
+                f"diverge at step {t}, coordinate {bad}: "
+                f"{ref[bad]!r} != {got[bad]!r}")
     return steps
 
 
@@ -79,12 +89,25 @@ def main(argv=None) -> int:
     ap.add_argument("--q0", type=float, default=0.25)
     ap.add_argument("--backends", default="dense,sparse,pallas",
                     help="comma-separated decode backends to check")
+    ap.add_argument("--master-decode", default="single",
+                    choices=["single", "sharded"],
+                    help="sharded = the master decode itself runs over the "
+                         "mesh (check tiles partitioned; reference stays "
+                         "the single-device sparse decode)")
     args = ap.parse_args(argv)
     n_dev = jax.device_count()
-    for backend in args.backends.split(","):
+    if args.master_decode == "sharded":
+        # The sharded rounds ARE the sparse neighbor-table rounds, so the
+        # bit-parity reference is the sparse single-device decode.
+        backends = ["sparse"]
+    else:
+        backends = args.backends.split(",")
+    for backend in backends:
         steps = check_parity(K=args.K, n_workers=args.workers,
-                             steps=args.steps, q0=args.q0, backend=backend)
-        print(f"parity OK: backend={backend} W={args.workers} "
+                             steps=args.steps, q0=args.q0, backend=backend,
+                             master_decode=args.master_decode)
+        print(f"parity OK: backend={backend} "
+              f"master_decode={args.master_decode} W={args.workers} "
               f"devices={n_dev} steps={steps} (bit-identical iterates)")
     return 0
 

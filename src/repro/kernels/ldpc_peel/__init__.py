@@ -4,31 +4,50 @@
 one kernel launch (see ops.py / kernel.py for the backend matrix and
 interpret-mode behaviour off-TPU).  ``peel_decode_batch_pallas`` extends it
 with a first-class batch axis over independent erasure patterns (grid over
-the batch, H resident in VMEM and shared), and
-``peel_decode_adaptive_pallas`` runs the early-exit decode as one launch via
-an in-kernel while_loop, and ``peel_decode_batch_adaptive_pallas`` combines
-the two axes: per-slot adaptive early exit (with per-slot round budgets)
-across a batch of independent erasure patterns, still one launch.
-``peel_round_pallas`` keeps the single-round check-pass path for
-experimentation and tests.
+the batch, H resident in VMEM and shared), ``peel_decode_adaptive_pallas``
+runs the early-exit decode as one launch via an in-kernel while_loop, and
+``peel_decode_batch_adaptive_pallas`` combines the two axes: per-slot
+adaptive early exit (with per-slot round budgets) across a batch of
+independent erasure patterns, still one launch.
+
+The ``peel_decode*_tiled_pallas`` family carries the same four contracts
+past the whole-H-in-VMEM limit: H stays in HBM and is streamed over CHECK
+tiles (``bp`` rows at a time, double-buffered DMA) while the value carry
+lives in VMEM — one launch, same erasure trajectories, problem size bounded
+by HBM instead of one core's VMEM.  ``peel_round_pallas`` keeps the
+single-round check-pass path for experimentation and tests.
 """
 from repro.kernels.ldpc_peel.kernel import (
     check_pass,
     decode_fused,
     decode_fused_adaptive,
+    decode_fused_adaptive_tiled,
     decode_fused_batch,
     decode_fused_batch_adaptive,
+    decode_fused_batch_adaptive_tiled,
+    decode_fused_batch_tiled,
+    decode_fused_tiled,
 )
 from repro.kernels.ldpc_peel.ops import (
     peel_decode_adaptive_pallas,
+    peel_decode_adaptive_tiled_pallas,
     peel_decode_batch_adaptive_pallas,
+    peel_decode_batch_adaptive_tiled_pallas,
     peel_decode_batch_pallas,
+    peel_decode_batch_tiled_pallas,
     peel_decode_pallas,
+    peel_decode_tiled_pallas,
     peel_round_pallas,
 )
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_batch_pallas", "peel_decode_adaptive_pallas",
            "peel_decode_batch_adaptive_pallas",
+           "peel_decode_tiled_pallas", "peel_decode_batch_tiled_pallas",
+           "peel_decode_adaptive_tiled_pallas",
+           "peel_decode_batch_adaptive_tiled_pallas",
            "check_pass", "decode_fused", "decode_fused_batch",
-           "decode_fused_adaptive", "decode_fused_batch_adaptive"]
+           "decode_fused_adaptive", "decode_fused_batch_adaptive",
+           "decode_fused_tiled", "decode_fused_batch_tiled",
+           "decode_fused_adaptive_tiled",
+           "decode_fused_batch_adaptive_tiled"]

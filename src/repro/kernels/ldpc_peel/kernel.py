@@ -1,56 +1,64 @@
 """LDPC peeling-decoder Pallas TPU kernels.
 
-Four kernels live here:
+Kernel families (all built from ONE shared flooding-round implementation —
+see :func:`_check_tile_proposal` / :func:`_resident_round` /
+:func:`_streamed_round` and the two loop drivers :func:`_fixed_loop` /
+:func:`_adaptive_loop`):
 
 * :func:`check_pass` — the fused check-node pass of ONE flooding round
   (kept as the building block for the per-round path and its tests);
-* :func:`decode_fused` — the whole fixed-``D`` decode in ONE ``pallas_call``:
-  the ``(p, N)`` H tile is loaded into VMEM once and stays resident across a
-  ``fori_loop`` over rounds, with the variable-node scatter epilogue fused
-  in-kernel.  This removes the per-round kernel relaunch, re-padding, and
-  HBM round-trips of the old ``ops.peel_decode_pallas`` (D launches → 1);
-* :func:`decode_fused_batch` — ``B`` INDEPENDENT erasure patterns decoded in
-  one launch: grid ``(B, V/bv)`` with the same H block mapped at every grid
-  step, so H is loaded into VMEM once and stays resident across the whole
-  batch while per-query payload/mask tiles stream through.  This is the
-  kernel behind ``CodedComputeEngine.decode_batch`` (serving many concurrent
-  coded queries);
-* :func:`decode_fused_adaptive` — the early-exit decode as one launch: an
-  in-kernel ``lax.while_loop`` on the unresolved count replicates
-  ``peel_decode_adaptive``'s exact stopping rule (progress made AND
-  erasures remain AND round budget left), emitting the rounds-used count;
-* :func:`decode_fused_batch_adaptive` — per-slot adaptive decode of ``B``
-  independent erasure patterns in one launch: the grid runs over the slots
-  (H resident/shared in VMEM as in :func:`decode_fused_batch`) and each
-  grid step runs its OWN in-kernel ``while_loop`` whose predicate combines
-  that slot's convergence state with a PER-SLOT round budget streamed in as
-  a ``(1, 1)`` int32 block — a light-straggler slot exits after 1-2 rounds
-  while a heavy one keeps peeling, and the per-slot rounds-used vector
-  comes back out.  This is the kernel behind
-  ``CodedComputeEngine.decode_batch(adaptive=True)`` and the serving
-  layer's continuous-admission slot server.
+* resident-H fused decodes — the whole decode in ONE ``pallas_call`` with
+  the ``(p, N)`` H tile loaded into VMEM once and kept resident:
+  :func:`decode_fused` (fixed-``D``), :func:`decode_fused_batch` (``B``
+  independent erasure patterns, grid over the batch, H shared),
+  :func:`decode_fused_adaptive` (early-exit in-kernel ``while_loop``), and
+  :func:`decode_fused_batch_adaptive` (per-slot ``while_loop`` with a
+  TRACED per-slot round budget).  These are the fast path while the
+  kernel's whole working set fits in VMEM (see
+  ``core/decoder.vmem_bytes_estimate``).
+* check-axis-TILED fused decodes — the same four variants with H living in
+  HBM (``memory_space=ANY``) and streamed tile-by-tile over the CHECK axis
+  through a double-buffered VMEM scratch (``(2, bp, N)`` slots + DMA
+  semaphores), while the ``(N, bv)`` value carry stays in VMEM as the loop
+  carry: :func:`decode_fused_tiled`, :func:`decode_fused_batch_tiled`,
+  :func:`decode_fused_adaptive_tiled`,
+  :func:`decode_fused_batch_adaptive_tiled`.  This removes the
+  whole-H-in-VMEM cap (N ≲ 2048 f32) — problem size is bounded by HBM, not
+  one core's VMEM; the VMEM cost is ``2·bp·N`` stream slots plus the value
+  carry, independent of ``p``.
 
 The in-kernel "scatter" is expressed MXU-style: the per-check resolution
-one-hot ``(p, N)`` is transposed into a matmul that accumulates each
+one-hot ``(bp, N)`` is transposed into a matmul that accumulates each
 resolved coordinate's new value — TPUs have no efficient in-kernel scatter,
-but a ``(N, p) @ (p, V)`` dot is native.  Checks that resolve the same
+but a ``(N, bp) @ (bp, BV)`` dot is native.  Checks that resolve the same
 coordinate in the same round write consistent values (they are parity checks
 of one codeword); the kernel deterministically keeps the lowest-index
-check's value.
+check's value.  The tiled round preserves that rule exactly: tiles are
+processed in ascending check order and a coordinate takes the FIRST tile's
+resolution (within a tile, the lowest row — so the merge winner is the
+globally lowest check row, the same check the resident merge picks), and
+every tile's proposal is computed against the ROUND-START state, so the
+tiled schedule is still flooding, not layered.  Erasure trajectories are
+therefore bit-identical across resident/tiled; values agree to f32
+summation order (XLA may block a tile-shaped row-sum reduction differently
+than the whole-H one).
 
 TPU notes:
   * matmul dims padded to multiples of 128 (MXU), f32 accumulation;
   * pos is computed with broadcasted_iota + max (no 1-D iota on TPU);
   * 1-D per-check outputs are materialized as (BP, 1) tiles (TPU wants >=2D);
-  * check_pass grid = (p/BP, V/BV): the H tile is re-used across the V
-    (payload) axis, value tiles stream through VMEM;
-  * decode_fused grid = (V/BV,): H stays whole in VMEM — with several
-    (p, N)-shaped temporaries live per round, the "auto" backend only
-    routes N ≤ 512 codes here (see core/decoder.py) — and each
-    grid step runs all D rounds for its payload slice.  The erasure
-    trajectory depends only on H and the initial mask, so every slice
-    recomputes the identical trajectory and the shared erasure output is
-    written consistently by each step.
+  * resident grids re-map the same H block at every step, so H is fetched
+    once and stays resident; the erasure trajectory depends only on H and
+    the initial mask, so grid steps sharing a pattern recompute the
+    identical trajectory and rewrite shared outputs consistently
+    (benign — the grid is sequential on TPU);
+  * tiled kernels stream H with ``pltpu.make_async_copy``: tile ``j+1``'s
+    DMA is started before waiting on tile ``j`` (double buffering).  The
+    cross-ROUND prefetch (starting tile 0 of round ``t+1`` during the last
+    tile of round ``t``) and ``bp``/``bv`` tuning on real TPUs are the
+    recorded follow-ons (ROADMAP);
+  * off-TPU everything runs in interpret mode (correct but not fast),
+    including the DMA pipeline.
 """
 from __future__ import annotations
 
@@ -59,10 +67,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive", "decode_fused_batch_adaptive",
+           "decode_fused_tiled", "decode_fused_batch_tiled",
+           "decode_fused_adaptive_tiled", "decode_fused_batch_adaptive_tiled",
            "detect_interpret"]
+
+_HIGH = jax.lax.Precision.HIGHEST
 
 
 def detect_interpret(interpret: bool | None) -> bool:
@@ -78,9 +91,9 @@ def _check_kernel(H_ref, vals_ref, erased_ref, sums_ref, cnt_ref, pos_ref,
     e = erased_ref[...][:, 0]  # (N,) f32: 1.0 = erased
     Hb = (H != 0.0).astype(jnp.float32)
 
-    cnt = jax.lax.dot(Hb, e[:, None], precision=jax.lax.Precision.HIGHEST)  # (BP,1)
+    cnt = jax.lax.dot(Hb, e[:, None], precision=_HIGH)  # (BP,1)
     known = vals_ref[...] * (1.0 - e)[:, None]  # (N, BV)
-    sums = jax.lax.dot(H, known, precision=jax.lax.Precision.HIGHEST)  # (BP,BV)
+    sums = jax.lax.dot(H, known, precision=_HIGH)  # (BP,BV)
 
     # erased-neighbour index per row: max over iota masked to erased edges
     idx = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)
@@ -132,51 +145,131 @@ def check_pass(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
     )(H, values, erased_f)
 
 
-# ------------------------------------------------------------ fused decode --
+# ------------------------------------------------- shared flooding round --
 
 
-def _flood_round(H):
-    """Build the in-kernel flooding-round function for a resident H tile.
+def _check_tile_proposal(H, known, e):
+    """One check tile's resolution proposal against the ROUND-START state.
 
-    Shared by the fixed-D, batched, and adaptive fused kernels so all three
-    follow the identical erasure trajectory (same solvability decisions,
-    same resolved neighbour, same lowest-index-check tie-break).
+    ``H (bp, N)`` is a tile of check rows; ``known (N, BV) = vals·(1-e)``
+    and ``e (N, 1)`` are the round-start known values / erasure mask.
+    Returns ``(resolved (N, 1) ∈ {0, 1}, scattered (N, BV))``: which
+    coordinates THIS tile resolves and the values it writes, with the
+    lowest row in the tile winning intra-tile ties.  This is the ONE
+    implementation of the flooding-round check/variable math — every fused
+    kernel (resident or tiled, fixed or adaptive, batched or not) builds
+    its round from it, so all variants follow the identical erasure
+    trajectory (same solvability decisions, same resolved neighbour, same
+    lowest-index-check tie-break).
     """
     Hb = (H != 0.0).astype(jnp.float32)
-    col = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)  # (p, N)
-    row = jax.lax.broadcasted_iota(jnp.int32, H.shape, 0)  # (p, N)
-    HIGH = jax.lax.Precision.HIGHEST
+    col = jax.lax.broadcasted_iota(jnp.int32, H.shape, 1)  # (bp, N)
+    row = jax.lax.broadcasted_iota(jnp.int32, H.shape, 0)  # (bp, N)
+    cnt = jax.lax.dot(Hb, e, precision=_HIGH)  # (bp, 1)
+    solvable = cnt[:, 0] == 1.0  # (bp,)
+    sums = jax.lax.dot(H, known, precision=_HIGH)  # (bp, BV)
+    emask = (Hb * e[:, 0][None, :]) > 0.0
+    pos = jnp.max(jnp.where(emask, col, -1), axis=1)  # (bp,)
+    onehot = (col == pos[:, None]) & solvable[:, None]  # (bp, N) bool
+    coeff = jnp.sum(H * onehot.astype(jnp.float32), axis=1)  # (bp,)
+    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
+    # Several checks may resolve the same coordinate; keep the
+    # lowest-index check's (consistent) value deterministically.
+    winner_row = jnp.min(jnp.where(onehot, row, H.shape[0]), axis=0)  # (N,)
+    winner = (onehot & (row == winner_row[None, :])).astype(jnp.float32)
+    resolved = jnp.max(winner, axis=0)[:, None]  # (N, 1) ∈ {0, 1}
+    scattered = jax.lax.dot(winner.T, new_val, precision=_HIGH)  # (N, BV)
+    return resolved, scattered
 
+
+def _apply_round(vals, e, resolved, scattered):
+    vals = jnp.where(resolved > 0.0, scattered, vals)
+    e = jnp.where(resolved > 0.0, 0.0, e)
+    return vals, e
+
+
+def _resident_round(H):
+    """Round function for a whole-H-in-VMEM tile (the resident kernels)."""
     def round_body(vals, e):
-        # vals (N, BV) f32, e (N, 1) f32 (1.0 = erased)
-        cnt = jax.lax.dot(Hb, e, precision=HIGH)  # (p, 1)
-        solvable = cnt[:, 0] == 1.0  # (p,)
         known = vals * (1.0 - e)
-        sums = jax.lax.dot(H, known, precision=HIGH)  # (p, BV)
-        emask = (Hb * e[:, 0][None, :]) > 0.0
-        pos = jnp.max(jnp.where(emask, col, -1), axis=1)  # (p,)
-        onehot = ((col == pos[:, None]) & solvable[:, None])  # (p, N) bool
-        coeff = jnp.sum(H * onehot.astype(jnp.float32), axis=1)  # (p,)
-        new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[:, None]
-        # Several checks may resolve the same coordinate; keep the
-        # lowest-index check's (consistent) value deterministically.
-        winner_row = jnp.min(jnp.where(onehot, row, H.shape[0]), axis=0)  # (N,)
-        winner = (onehot & (row == winner_row[None, :])).astype(jnp.float32)
-        resolved = jnp.max(winner, axis=0)[:, None]  # (N, 1) ∈ {0, 1}
-        scattered = jax.lax.dot(winner.T, new_val, precision=HIGH)  # (N, BV)
-        vals = jnp.where(resolved > 0.0, scattered, vals)
-        e = jnp.where(resolved > 0.0, 0.0, e)
-        return vals, e
+        return _apply_round(vals, e, *_check_tile_proposal(H, known, e))
 
     return round_body
 
 
+def _streamed_round(h_hbm, h_scratch, sem, *, bp: int):
+    """Round function streaming H over check tiles from HBM.
+
+    ``h_hbm`` is the full ``(p, N)`` ref left in HBM (``memory_space=ANY``,
+    ``p % bp == 0``); ``h_scratch (2, bp, N)`` and ``sem (2,)`` are the
+    double-buffered VMEM stream slots.  Tile ``j+1``'s DMA is started
+    before waiting on tile ``j``.  Every tile's proposal is computed
+    against the round-start ``(vals, e)`` and the proposals are merged
+    first-tile-wins (tiles ascend the check axis, so the winner is the
+    globally lowest check row — bit-identical to the resident merge).
+    """
+    n_tiles = h_hbm.shape[0] // bp
+
+    def get_dma(slot, j):
+        return pltpu.make_async_copy(
+            h_hbm.at[pl.ds(j * bp, bp), :], h_scratch.at[slot], sem.at[slot])
+
+    def round_body(vals, e):
+        known = vals * (1.0 - e)
+        get_dma(0, 0).start()
+
+        def tile_step(j, carry):
+            resolved, scattered = carry
+            slot = j % 2
+
+            @pl.when(j + 1 < n_tiles)
+            def _():
+                get_dma((j + 1) % 2, j + 1).start()
+
+            get_dma(slot, j).wait()
+            t_res, t_scat = _check_tile_proposal(h_scratch[slot], known, e)
+            take = (t_res > 0.0) & (resolved <= 0.0)
+            return (jnp.maximum(resolved, t_res),
+                    jnp.where(take, t_scat, scattered))
+
+        resolved, scattered = jax.lax.fori_loop(
+            0, n_tiles, tile_step, (jnp.zeros_like(e), jnp.zeros_like(vals)))
+        return _apply_round(vals, e, resolved, scattered)
+
+    return round_body
+
+
+def _fixed_loop(round_body, vals, e, iters: int):
+    """Exactly ``iters`` flooding rounds (the paper's fixed-D decode)."""
+    return jax.lax.fori_loop(0, iters, lambda _, c: round_body(*c), (vals, e))
+
+
+def _adaptive_loop(round_body, vals, e, budget):
+    """Early-exit rounds: stop when a round makes no progress, nothing is
+    erased, or ``budget`` rounds have run (``budget`` may be traced — the
+    per-slot round budgets of the batched-adaptive kernels never
+    recompile).  Returns ``(vals, e, rounds_used)``."""
+    def cond(carry):
+        _, e_, d, progressed = carry
+        return (d < budget) & progressed & (jnp.max(e_) > 0.0)
+
+    def body(carry):
+        vals_, e_, d, _ = carry
+        vals2, e2 = round_body(vals_, e_)
+        return vals2, e2, d + 1, jnp.any(e2 != e_)
+
+    vals, e, d, _ = jax.lax.while_loop(
+        cond, body, (vals, e, jnp.int32(0), jnp.bool_(True)))
+    return vals, e, d
+
+
+# ------------------------------------------------------------ fused decode --
+
+
 def _decode_kernel(H_ref, vals_ref, erased_ref, out_vals_ref, out_erased_ref,
                    *, iters: int):
-    round_body = _flood_round(H_ref[...])  # H resident across all rounds
-    vals, e = jax.lax.fori_loop(
-        0, iters, lambda _, c: round_body(*c), (vals_ref[...], erased_ref[...])
-    )
+    round_body = _resident_round(H_ref[...])  # H resident across all rounds
+    vals, e = _fixed_loop(round_body, vals_ref[...], erased_ref[...], iters)
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
 
@@ -224,11 +317,8 @@ def decode_fused(H: jax.Array, values: jax.Array, erased_f: jax.Array, *,
 
 def _decode_batch_kernel(H_ref, vals_ref, erased_ref, out_vals_ref,
                          out_erased_ref, *, iters: int):
-    round_body = _flood_round(H_ref[...])  # H shared across the whole batch
-    vals, e = jax.lax.fori_loop(
-        0, iters, lambda _, c: round_body(*c),
-        (vals_ref[0], erased_ref[0])  # drop the leading (1,) batch-block dim
-    )
+    round_body = _resident_round(H_ref[...])  # H shared across the whole batch
+    vals, e = _fixed_loop(round_body, vals_ref[0], erased_ref[0], iters)
     out_vals_ref[0] = vals
     out_erased_ref[0] = e
 
@@ -282,21 +372,9 @@ def decode_fused_batch(H: jax.Array, values: jax.Array, erased_f: jax.Array,
 
 def _decode_adaptive_kernel(H_ref, vals_ref, erased_ref, out_vals_ref,
                             out_erased_ref, out_rounds_ref, *, max_iters: int):
-    round_body = _flood_round(H_ref[...])
-
-    def cond(carry):
-        _, e, d, progressed = carry
-        return (d < max_iters) & progressed & (jnp.max(e) > 0.0)
-
-    def body(carry):
-        vals, e, d, _ = carry
-        vals2, e2 = round_body(vals, e)
-        return vals2, e2, d + 1, jnp.any(e2 != e)
-
-    vals, e, d, _ = jax.lax.while_loop(
-        cond, body,
-        (vals_ref[...], erased_ref[...], jnp.int32(0), jnp.bool_(True)),
-    )
+    round_body = _resident_round(H_ref[...])
+    vals, e, d = _adaptive_loop(round_body, vals_ref[...], erased_ref[...],
+                                max_iters)
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
     out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
@@ -349,22 +427,9 @@ def decode_fused_adaptive(H: jax.Array, values: jax.Array,
 def _decode_batch_adaptive_kernel(H_ref, vals_ref, erased_ref, budget_ref,
                                   out_vals_ref, out_erased_ref,
                                   out_rounds_ref):
-    round_body = _flood_round(H_ref[...])  # H shared across the whole batch
-    budget = budget_ref[0, 0]  # THIS slot's round budget
-
-    def cond(carry):
-        _, e, d, progressed = carry
-        return (d < budget) & progressed & (jnp.max(e) > 0.0)
-
-    def body(carry):
-        vals, e, d, _ = carry
-        vals2, e2 = round_body(vals, e)
-        return vals2, e2, d + 1, jnp.any(e2 != e)
-
-    vals, e, d, _ = jax.lax.while_loop(
-        cond, body,
-        (vals_ref[0], erased_ref[0], jnp.int32(0), jnp.bool_(True)),
-    )
+    round_body = _resident_round(H_ref[...])  # H shared across the whole batch
+    vals, e, d = _adaptive_loop(round_body, vals_ref[0], erased_ref[0],
+                                budget_ref[0, 0])  # THIS slot's round budget
     out_vals_ref[0] = vals
     out_erased_ref[0] = e
     out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
@@ -418,5 +483,234 @@ def decode_fused_batch_adaptive(H: jax.Array, values: jax.Array,
             jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
+        interpret=interpret,
+    )(H, values, erased_f, budgets)
+
+
+# ---------------------------------------------- check-axis-tiled decodes --
+#
+# Same contracts as the resident kernels, with H left in HBM (p % bp == 0
+# enforced by ops.py) and streamed through the double-buffered scratch.
+# One scratch/semaphore signature shared by all four.
+
+
+def _tiled_scratch(bp: int, N: int):
+    return [pltpu.VMEM((2, bp, N), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,))]
+
+
+def _check_tiled_operands(p: int, N: int, V: int, bp: int, bv: int) -> None:
+    """The tile loops FLOOR-divide (``p // bp``, ``V // bv``), so unpadded
+    operands would silently drop trailing check rows / payload columns —
+    fail loudly instead (the ops.py wrappers pad before calling)."""
+    if p % bp or N % 128 or V % bv:
+        raise ValueError(
+            "tiled decode operands must be pre-padded (ops.py wrappers do "
+            f"this): need p % bp == 0, N % 128 == 0, V % bv == 0; got "
+            f"p={p} bp={bp}, N={N}, V={V} bv={bv}")
+
+
+def _decode_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
+                         out_erased_ref, h_scratch, sem, *, iters: int,
+                         bp: int):
+    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    vals, e = _fixed_loop(round_body, vals_ref[...], erased_ref[...], iters)
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "bp", "bv", "interpret"))
+def decode_fused_tiled(H: jax.Array, values: jax.Array, erased_f: jax.Array,
+                       *, iters: int, bp: int = 128, bv: int = 128,
+                       interpret: bool | None = None):
+    """Fixed-``iters`` decode with H STREAMED over check tiles.
+
+    Inputs (already padded by ops.py): H (p, N) f32 with p % bp == 0 and
+    N % 128 == 0; values (N, V) f32 with V % bv == 0; erased_f (N, 1) f32.
+    Same trajectory and output contract as :func:`decode_fused`; the VMEM
+    working set is ``2·bp·N`` stream slots + the ``(N, bv)`` carry instead
+    of the whole ``(p, N)`` H — this is the variant ``backend="auto"``
+    routes to when ``core/decoder.vmem_bytes_estimate`` says the resident
+    kernel will not fit.
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    V = values.shape[1]
+    _check_tiled_operands(p, N, V, bp, bv)
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_tiled_kernel, iters=iters, bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # H: stays in HBM
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        scratch_shapes=_tiled_scratch(bp, N),
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+def _decode_batch_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
+                               out_erased_ref, h_scratch, sem, *, iters: int,
+                               bp: int):
+    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    vals, e = _fixed_loop(round_body, vals_ref[0], erased_ref[0], iters)
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "bp", "bv", "interpret"))
+def decode_fused_batch_tiled(H: jax.Array, values: jax.Array,
+                             erased_f: jax.Array, *, iters: int,
+                             bp: int = 128, bv: int = 128,
+                             interpret: bool | None = None):
+    """``B`` independent patterns with H streamed over check tiles.
+
+    Same contract as :func:`decode_fused_batch` (values (B, N, V), erased_f
+    (B, N, 1), both padded); the grid runs over ``(B, V // bv)`` and every
+    grid step re-streams the H tiles from HBM while its slot's payload/mask
+    tiles live in VMEM.  (On the batch axis the resident kernel amortizes
+    the H fetch across slots; the tiled kernel instead bounds VMEM by
+    ``2·bp·N`` — the trade recorded in the README matrix.)
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    B, _, V = values.shape
+    _check_tiled_operands(p, N, V, bp, bv)
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        functools.partial(_decode_batch_tiled_kernel, iters=iters, bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # H: stays in HBM
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+        ],
+        scratch_shapes=_tiled_scratch(bp, N),
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+def _decode_adaptive_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
+                                  out_erased_ref, out_rounds_ref, h_scratch,
+                                  sem, *, max_iters: int, bp: int):
+    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    vals, e, d = _adaptive_loop(round_body, vals_ref[...], erased_ref[...],
+                                max_iters)
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iters", "bp", "bv", "interpret"))
+def decode_fused_adaptive_tiled(H: jax.Array, values: jax.Array,
+                                erased_f: jax.Array, *, max_iters: int,
+                                bp: int = 128, bv: int = 128,
+                                interpret: bool | None = None):
+    """Early-exit decode with H streamed over check tiles.
+
+    Same stopping rule, trajectory, and output contract as
+    :func:`decode_fused_adaptive` (values (N, V), erased (N, 1),
+    rounds (1, 1)); the in-kernel ``while_loop`` wraps the streamed round,
+    so an early exit also stops the H streaming — decode bandwidth tracks
+    the realized straggler load, not the worst case.
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    V = values.shape[1]
+    _check_tiled_operands(p, N, V, bp, bv)
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_adaptive_tiled_kernel, max_iters=max_iters,
+                          bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # H: stays in HBM
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=_tiled_scratch(bp, N),
+        interpret=interpret,
+    )(H, values, erased_f)
+
+
+def _decode_batch_adaptive_tiled_kernel(H_hbm, vals_ref, erased_ref,
+                                        budget_ref, out_vals_ref,
+                                        out_erased_ref, out_rounds_ref,
+                                        h_scratch, sem, *, bp: int):
+    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    vals, e, d = _adaptive_loop(round_body, vals_ref[0], erased_ref[0],
+                                budget_ref[0, 0])  # THIS slot's round budget
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bv", "interpret"))
+def decode_fused_batch_adaptive_tiled(H: jax.Array, values: jax.Array,
+                                      erased_f: jax.Array,
+                                      budgets: jax.Array, *, bp: int = 128,
+                                      bv: int = 128,
+                                      interpret: bool | None = None):
+    """Per-slot adaptive decode of ``B`` patterns with H streamed per slot.
+
+    Same contract as :func:`decode_fused_batch_adaptive` (budgets (B, 1)
+    int32 stays a TRACED operand — varying per-slot budgets never
+    recompile); each grid step runs its own streamed ``while_loop``, so a
+    light slot stops both its compute AND its H streaming after 1-2 rounds.
+    """
+    interpret = detect_interpret(interpret)
+    p, N = H.shape
+    B, _, V = values.shape
+    _check_tiled_operands(p, N, V, bp, bv)
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        functools.partial(_decode_batch_adaptive_tiled_kernel, bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # H: stays in HBM
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),      # slot budget
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        scratch_shapes=_tiled_scratch(bp, N),
         interpret=interpret,
     )(H, values, erased_f, budgets)

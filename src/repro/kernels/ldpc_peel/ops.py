@@ -18,6 +18,14 @@
   in-kernel ``while_loop`` and (traced) round budget; the kernel side of
   ``CodedComputeEngine.decode_batch(adaptive=True)`` and the serving
   layer's continuous-admission launches.
+* the ``peel_decode*_tiled_pallas`` family — the same four contracts backed
+  by the CHECK-AXIS-TILED kernels: H stays in HBM and is streamed
+  tile-by-tile (``bp`` check rows at a time, double-buffered) while the
+  value carry lives in VMEM, so problem size is no longer bounded by
+  whole-H-in-VMEM.  The wrappers pad ``p`` up to a multiple of the
+  effective ``bp`` (ragged tile edges become all-zero check rows: never
+  counted, never solvable, never written), clamping ``bp`` down for small
+  codes so a single-tile stream still works.
 
 ``interpret`` defaults to ``None`` = backend-detected: compiled on TPU,
 interpret mode elsewhere (CPU CI runs the same kernel code path, slowly but
@@ -35,14 +43,21 @@ from repro.kernels.ldpc_peel.kernel import (
     check_pass,
     decode_fused,
     decode_fused_adaptive,
+    decode_fused_adaptive_tiled,
     decode_fused_batch,
     decode_fused_batch_adaptive,
+    decode_fused_batch_adaptive_tiled,
+    decode_fused_batch_tiled,
+    decode_fused_tiled,
     detect_interpret,
 )
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_batch_pallas", "peel_decode_adaptive_pallas",
-           "peel_decode_batch_adaptive_pallas"]
+           "peel_decode_batch_adaptive_pallas",
+           "peel_decode_tiled_pallas", "peel_decode_batch_tiled_pallas",
+           "peel_decode_adaptive_tiled_pallas",
+           "peel_decode_batch_adaptive_tiled_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -220,3 +235,155 @@ def peel_decode_batch_adaptive_pallas(H, values, erased, budgets, *,
     return _peel_decode_batch_adaptive_impl(
         H, values, erased, jnp.asarray(budgets),
         interpret=detect_interpret(interpret), bv=bv)
+
+
+# ------------------------------------------------ check-axis-tiled family --
+
+
+def _effective_bp(p: int, bp: int) -> int:
+    """Clamp the check-tile height to the (8-aligned) padded check count so
+    small codes stream as a single tile instead of over-padding."""
+    p8 = p + (-p) % 8
+    return max(8, min(bp - bp % 8 if bp >= 8 else 8, p8))
+
+
+def _pad_operands_tiled(H, vals, erased_f, bv, bp):
+    """Pad ONCE for a whole tiled decode: N → multiple of 128 (lanes),
+    p → multiple of ``bp`` (every streamed tile is full — ragged check-tile
+    edges become all-zero rows: never counted, never solvable, never
+    written), V → multiple of bv (payload tile)."""
+    Hp = pad_axis_to(pad_axis_to(H.astype(jnp.float32), bp, 0), 128, 1)
+    vp = pad_axis_to(pad_axis_to(vals.astype(jnp.float32), 128, -2), bv, -1)
+    ep = pad_axis_to(erased_f, 128, -2)
+    return Hp, vp, ep
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret", "bp", "bv"))
+def _peel_decode_tiled_impl(H, values, erased, *, iters: int, interpret: bool,
+                            bp: int = 128, bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+
+    bp_eff = _effective_bp(H.shape[0], bp)
+    Hp, vp, ep = _pad_operands_tiled(H, vals,
+                                     erased.astype(jnp.float32)[:, None],
+                                     bv, bp_eff)
+    out_v, out_e = decode_fused_tiled(Hp, vp, ep, iters=iters, bp=bp_eff,
+                                      bv=min(bv, vp.shape[1]),
+                                      interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_tiled_pallas(H, values, erased, iters: int, *,
+                             interpret: bool | None = None, bp: int = 128,
+                             bv: int = 128):
+    """Fixed-D decode in ONE launch with H streamed over check tiles.
+
+    Same contract as :func:`peel_decode_pallas` (H (p, N) f32; values (N,)
+    or (N, V); erased (N,) bool), same erasure trajectory; ``bp`` sets the
+    streamed tile height (clamped/8-aligned, p padded up to a multiple).
+    """
+    return _peel_decode_tiled_impl(H, values, erased, iters=int(iters),
+                                   interpret=detect_interpret(interpret),
+                                   bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret", "bp", "bv"))
+def _peel_decode_batch_tiled_impl(H, values, erased, *, iters: int,
+                                  interpret: bool, bp: int = 128,
+                                  bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    bp_eff = _effective_bp(H.shape[0], bp)
+    Hp, vp, ep = _pad_operands_tiled(
+        H, vals, erased.astype(jnp.float32)[:, :, None], bv, bp_eff)
+    out_v, out_e = decode_fused_batch_tiled(Hp, vp, ep, iters=iters,
+                                            bp=bp_eff,
+                                            bv=min(bv, vp.shape[2]),
+                                            interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_batch_tiled_pallas(H, values, erased, iters: int, *,
+                                   interpret: bool | None = None,
+                                   bp: int = 128, bv: int = 128):
+    """Fixed-D decode of B independent patterns, H streamed over check
+    tiles.  Same contract as :func:`peel_decode_batch_pallas`."""
+    return _peel_decode_batch_tiled_impl(
+        H, values, erased, iters=int(iters),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "interpret", "bp", "bv"))
+def _peel_decode_adaptive_tiled_impl(H, values, erased, *, max_iters: int,
+                                     interpret: bool, bp: int = 128,
+                                     bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+
+    bp_eff = _effective_bp(H.shape[0], bp)
+    Hp, vp, ep = _pad_operands_tiled(H, vals,
+                                     erased.astype(jnp.float32)[:, None],
+                                     bv, bp_eff)
+    out_v, out_e, rounds = decode_fused_adaptive_tiled(
+        Hp, vp, ep, max_iters=max_iters, bp=bp_eff,
+        bv=min(bv, vp.shape[1]), interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased, rounds[0, 0]
+
+
+def peel_decode_adaptive_tiled_pallas(H, values, erased, max_iters: int, *,
+                                      interpret: bool | None = None,
+                                      bp: int = 128, bv: int = 128):
+    """Early-exit decode in ONE launch, H streamed over check tiles.  Same
+    stopping rule and contract as :func:`peel_decode_adaptive_pallas`."""
+    return _peel_decode_adaptive_tiled_impl(
+        H, values, erased, max_iters=int(max_iters),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
+def _peel_decode_batch_adaptive_tiled_impl(H, values, erased, budgets, *,
+                                           interpret: bool, bp: int = 128,
+                                           bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    bp_eff = _effective_bp(H.shape[0], bp)
+    Hp, vp, ep = _pad_operands_tiled(
+        H, vals, erased.astype(jnp.float32)[:, :, None], bv, bp_eff)
+    out_v, out_e, rounds = decode_fused_batch_adaptive_tiled(
+        Hp, vp, ep, budgets.astype(jnp.int32)[:, None], bp=bp_eff,
+        bv=min(bv, vp.shape[2]), interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased, rounds[:, 0]
+
+
+def peel_decode_batch_adaptive_tiled_pallas(H, values, erased, budgets, *,
+                                            interpret: bool | None = None,
+                                            bp: int = 128, bv: int = 128):
+    """Per-slot adaptive decode of B independent patterns in ONE launch,
+    H streamed over check tiles per slot.  Same contract as
+    :func:`peel_decode_batch_adaptive_pallas` (budgets stay traced)."""
+    return _peel_decode_batch_adaptive_tiled_impl(
+        H, values, erased, jnp.asarray(budgets),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)

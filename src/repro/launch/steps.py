@@ -115,7 +115,9 @@ def build_step(cfg: ArchConfig, mesh, shape_name: str, *,
 
 
 def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
-                        mesh, *, decode: str = "dense", r: int = 6):
+                        mesh, *, decode: str = "dense", r: int = 6,
+                        bp: int | None = None,
+                        vmem_budget_bytes: int | None = None):
     """Functional Scheme2Blocked step at scale, with explicit shardings.
 
     Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
@@ -136,15 +138,20 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
       sparse      — H stored as (p, r) neighbour indices + edge values
                     (the Tanner graph IS r-regular): decode rounds become
                     gathers/scatters, no dense (p, N) traffic at all.
-      pallas      — the fused one-kernel decode
-                    (:func:`repro.kernels.ldpc_peel.peel_decode_pallas`):
-                    the whole fixed-D loop inside a single kernel with H
-                    resident in VMEM.  H is REPLICATED per chip (the
-                    kernel's VMEM-residency model shards the payload axis,
-                    not H), so its roofline trades collective traffic for
-                    per-chip H bandwidth; off-TPU the kernel lowers via
-                    interpret mode, so compile works everywhere but the
-                    HLO op mix is the emulated kernel, not Mosaic.
+      pallas      — the fused one-kernel decode: the whole fixed-D loop
+                    inside a single kernel.  The variant is chosen by the
+                    VMEM estimate (``repro.core.decoder.vmem_bytes_estimate``
+                    against ``vmem_budget_bytes``): H resident in VMEM
+                    (:func:`repro.kernels.ldpc_peel.peel_decode_pallas`)
+                    while the working set fits, else the check-axis-TILED
+                    kernel (``peel_decode_tiled_pallas``: H stays in HBM
+                    and streams ``bp`` check rows at a time), which is what
+                    production-size N lowers to.  H is REPLICATED per chip
+                    either way (the kernel shards the payload axis, not H),
+                    so its roofline trades collective traffic for per-chip
+                    H bandwidth; off-TPU the kernel lowers via interpret
+                    mode, so compile works everywhere but the HLO op mix is
+                    the emulated kernel, not Mosaic.
 
     Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
     """
@@ -201,16 +208,29 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
                        out_shardings=sh()), args
 
     if decode == "pallas":
-        from repro.kernels.ldpc_peel import peel_decode_pallas
+        from repro.core.decoder import pick_tile_bp, vmem_bytes_estimate
+        from repro.core.decoder import _DEFAULT_VMEM_BUDGET_BYTES
+        from repro.kernels.ldpc_peel import (peel_decode_pallas,
+                                             peel_decode_tiled_pallas)
+
+        budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
+        tiled = vmem_bytes_estimate((p, N), bv=8) > budget
+        if tiled and bp is None:
+            bp = pick_tile_bp((p, N), vmem_budget_bytes=budget)
 
         def step_pallas(C_blocks, H, theta, b, mask, lr):
             z = worker_products(C_blocks, theta, mask)
-            vals, erased = peel_decode_pallas(H, z, mask, decode_iters,
-                                              bv=8)  # nb is small; pad to 8
+            if tiled:   # production N: H streamed over check tiles from HBM
+                vals, erased = peel_decode_tiled_pallas(
+                    H, z, mask, decode_iters, bp=bp, bv=8)
+            else:       # small N: whole H resident in VMEM
+                vals, erased = peel_decode_pallas(H, z, mask, decode_iters,
+                                                  bv=8)  # nb small; pad to 8
             return update(vals, erased, theta, b, lr)
 
         args = (c_spec, jax.ShapeDtypeStruct((p, N), jnp.float32), *common)
-        # H replicated: the fused kernel keeps the whole H tile in VMEM.
+        # H replicated either way: resident keeps it whole in VMEM, tiled
+        # streams per-chip tiles out of the replicated HBM copy.
         in_sh = (sh(None, "model", dspec), sh(), *common_sh)
         return jax.jit(step_pallas, in_shardings=in_sh,
                        out_shardings=sh()), args

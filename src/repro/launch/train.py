@@ -45,7 +45,7 @@ def main(argv=None):
     ap.add_argument("--straggler-q0", type=float, default=0.0)
     ap.add_argument("--decode-iters", type=int, default=8)
     ap.add_argument("--decode-backend", default="auto",
-                    choices=["auto", "dense", "sparse", "pallas"],
+                    choices=["auto", "dense", "sparse", "pallas", "pallas_tiled"],
                     help="LDPC decode implementation (see core/decoder.py)")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="checkpoints")

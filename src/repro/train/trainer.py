@@ -45,7 +45,7 @@ class TrainerConfig:
     redundancy: float = 0.5
     row_weight: int = 4
     decode_iters: int = 8
-    decode_backend: str = "auto"  # dense | sparse | pallas | auto (decoder.py)
+    decode_backend: str = "auto"  # dense|sparse|pallas|pallas_tiled|auto (decoder.py)
     straggler_q0: float = 0.0
 
 

@@ -260,7 +260,7 @@ def test_resolve_backend_matrix():
     if on_cpu:
         assert resolve_backend("auto", code) == "dense"
         assert resolve_backend("auto", big) == "sparse"
-    for b in ("dense", "sparse", "pallas"):
+    for b in ("dense", "sparse", "pallas", "pallas_tiled"):
         assert resolve_backend(b, code) == b
     # since the fused adaptive kernel landed, adaptive keeps pallas
     assert resolve_backend("pallas", code, adaptive=True) == "pallas"
@@ -271,6 +271,12 @@ def test_resolve_backend_matrix():
         resolve_backend("sparse", tup)
     with pytest.raises(ValueError):
         resolve_backend("nope", code)
+    # the VMEM estimate the TPU "auto" dispatch uses: the old N<=512
+    # resident cutoff falls out of the default 8 MiB budget at rate 1/2
+    from repro.core.decoder import (_DEFAULT_VMEM_BUDGET_BYTES,
+                                    vmem_bytes_estimate)
+    assert vmem_bytes_estimate(big) <= _DEFAULT_VMEM_BUDGET_BYTES
+    assert vmem_bytes_estimate((1024, 2048)) > _DEFAULT_VMEM_BUDGET_BYTES
 
 
 def test_tuple_code_still_decodes_dense():
