@@ -25,9 +25,17 @@ the ratio alone, while a code change that erodes the win moves it directly:
   regime (N up to 16384): sparse everywhere, the check-axis-tiled fused
   kernel where compiled (TPU) — interpret-mode tiled records are skipped
   like every interpret record.
+* ``traffic_ratio_vs_tiled`` (``seeded``, schema v6) — the seeded kernel's
+  modeled per-decode operand HBM traffic advantage over the check-axis
+  tiled one (tiled streams H every round; seeded regenerates it
+  in-register).  Besides the relative-drop gate, the ratio carries a HARD
+  floor: ≥ 10× at N = 16384, the PR's headline memory-wall claim.  The
+  timed seeded record also trips if its same-run
+  ``wallclock_ratio_vs_tiled`` exceeds 1.2 (the regeneration must not buy
+  bandwidth with compute the kernel cannot afford).
 
 ``--sections`` selects which gates run (CI's tier-1 job gates
-batched+serving+large_n; the fake-8-device distributed job gates
+batched+serving+large_n+seeded; the fake-8-device distributed job gates
 distributed).  Every record present in both files is compared (batched
 records key on (mode, N, B, D); serving on (mode, N, B, budget, chunk,
 n_queries); distributed on (mode, W, N); large_n on (backend, N, D)); the
@@ -38,7 +46,7 @@ printed for context but never gate.
 
   python benchmarks/check_regression.py \
       --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json \
-      --sections batched,serving,large_n
+      --sections batched,serving,large_n,seeded
 """
 from __future__ import annotations
 
@@ -79,6 +87,47 @@ def _large_n_records(path: Path) -> dict[tuple, dict]:
                 and rec.get("speedup_vs_dense") and not rec.get("forced_backend")):
             out[(rec["backend"], rec["N"], rec["D"])] = rec
     return out
+
+
+def _seeded_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("seeded", []):
+        # lower-only feasibility records have no ratio to gate
+        if "traffic_ratio_vs_tiled" in rec:
+            out[(rec["N"], rec["D"])] = rec
+    return out
+
+
+def _seeded_floors(new: dict[tuple, dict], *, floor_n: int = 16384,
+                   floor_ratio: float = 10.0,
+                   max_wallclock_ratio: float = 1.2) -> bool:
+    """Absolute gates on the FRESH seeded records (baseline-independent):
+    the ≥10× traffic floor at N=16384 and the ≤1.2× same-run wall-clock
+    ceiling on the timed record.  Returns True iff any floor failed."""
+    failed = False
+    floor_recs = [r for (n, _), r in new.items() if n == floor_n]
+    if not floor_recs:
+        print(f"check_regression [seeded]: no N={floor_n} record to hold "
+              "to the traffic floor")
+        failed = True
+    for rec in floor_recs:
+        ratio = rec["traffic_ratio_vs_tiled"]
+        ok = ratio >= floor_ratio
+        print(f"  (N={floor_n}, D={rec['D']}): traffic_ratio_vs_tiled "
+              f"{ratio:.0f}x (floor {floor_ratio:.0f}x)  "
+              f"{'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+    for key, rec in sorted(new.items()):
+        if not rec.get("timed"):
+            continue
+        wr = rec["wallclock_ratio_vs_tiled"]
+        ok = wr <= max_wallclock_ratio
+        print(f"  {key}: wallclock_ratio_vs_tiled {wr:.2f}x (ceiling "
+              f"{max_wallclock_ratio:.1f}x)  "
+              f"{'OK' if ok else 'CEILING FAILED'}")
+        failed |= not ok
+    return failed
 
 
 def _distributed_records(path: Path, mode: str) -> dict[tuple, dict]:
@@ -129,12 +178,14 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed relative drop in the gated same-run "
                          "speedup ratios (default 25%%)")
-    ap.add_argument("--sections", default="batched,serving,distributed,large_n",
+    ap.add_argument("--sections",
+                    default="batched,serving,distributed,large_n,seeded",
                     help="comma-separated gates to run "
-                         "(batched|serving|distributed|large_n)")
+                         "(batched|serving|distributed|large_n|seeded)")
     args = ap.parse_args(argv)
     sections = [s for s in args.sections.split(",") if s]
-    unknown = set(sections) - {"batched", "serving", "distributed", "large_n"}
+    unknown = set(sections) - {"batched", "serving", "distributed", "large_n",
+                               "seeded"}
     if unknown:
         print(f"check_regression: unknown sections {sorted(unknown)}")
         return 1
@@ -156,6 +207,13 @@ def main(argv=None) -> int:
                   _large_n_records(args.baseline),
                   _large_n_records(args.new), args.tol,
                   context_key="per_round_us"))
+    if "seeded" in sections:
+        new_seeded = _seeded_records(args.new)
+        results.append(
+            _gate("seeded", "traffic_ratio_vs_tiled",
+                  _seeded_records(args.baseline), new_seeded, args.tol,
+                  context_key="modeled_seeded_bytes"))
+        results.append(_seeded_floors(new_seeded))
     if "distributed" in sections:
         results.append(
             _gate("dist-overhead", "single_vs_distributed",

@@ -46,15 +46,33 @@ def resolve_bench_backend(code, requested: str, *,
       contract, H streamed over check tiles);
     * off-TPU, "pallas"/"pallas_tiled" beyond ``pallas_cpu_max_n`` fails
       over to "sparse" (interpret mode is a correctness path, not a timed
-      one — see the interpret_mode flags in the emitted records).
+      one — see the interpret_mode flags in the emitted records);
+    * "pallas_seeded" forced on a code that does not carry a seeded
+      structure (anything but ``make_seeded_ldpc`` / ``SeededLDPC``) fails
+      over to "pallas_tiled" on TPU / "sparse" off-TPU — the in-kernel H
+      regeneration needs the layered-permutation ensemble's seed.
     """
     from repro.core.decoder import (_DEFAULT_VMEM_BUDGET_BYTES,
                                     vmem_bytes_estimate)
+    from repro.core.ldpc import is_seeded
 
     N = code.N
     on_tpu = jax.default_backend() == "tpu"
-    if requested in ("pallas", "pallas_tiled") and not on_tpu \
-            and N > pallas_cpu_max_n:
+    if requested == "pallas_seeded" and not (
+            is_seeded(code) and getattr(code, "kind", "") != "ldgm-seeded"):
+        fallback = "pallas_tiled" if on_tpu else "sparse"
+        return fallback, (
+            f"backend='pallas_seeded' forced at N={N} on a code without a "
+            f"seeded parity structure (kind="
+            f"{getattr(code, 'kind', type(code).__name__)!r}): the "
+            f"in-kernel H regeneration needs a make_seeded_ldpc/SeededLDPC "
+            f"code — failing over to {fallback!r}")
+    if requested in ("pallas", "pallas_tiled", "pallas_seeded") \
+            and not on_tpu and N > pallas_cpu_max_n:
+        if requested == "pallas_seeded" and not hasattr(code, "H"):
+            # structure-only SeededLDPC: there is no materialized H for
+            # sparse to fall back on — the seeded kernel IS the decode.
+            return requested, None
         return "sparse", (
             f"backend={requested!r} forced at N={N} off-TPU: interpret-mode "
             f"Pallas is not timeable past N={pallas_cpu_max_n} — failing "

@@ -37,10 +37,24 @@ Sections:
      trajectory never needs a generator, and the systematic solve is the
      construction bottleneck past N ≈ 4096.
 
+  7. SEEDED sweep (schema v6): the seed-regenerated kernel
+     (``backend="pallas_seeded"``) vs the check-axis-tiled one.  Per N up
+     to 32768: the MODELED per-decode operand HBM traffic of both (tiled
+     streams the whole padded (p, N) f32 H from HBM every round; seeded
+     regenerates each tile in-register and streams only the payload) and
+     the same-run ``traffic_ratio_vs_tiled`` that
+     ``check_regression.py --sections seeded`` gates (≥10× at N=16384).
+     At N=2048 both kernels are also TIMED (interpret mode off-TPU, a
+     same-run ``wallclock_ratio_vs_tiled``) with a bit-identical-values
+     trajectory tripwire; one lower-only record proves the seeded kernel
+     lowers at N=262144, where even materializing H (128 GiB f32) is
+     infeasible — there is nothing to compare against there.
+
 Forcing ``--backend pallas`` (CLI) past the VMEM limit no longer crashes:
 ``benchmarks.common.resolve_bench_backend`` fails over with a clear message
 (to "pallas_tiled" on TPU, "sparse" off-TPU), and the quick CI run
-exercises that path.
+exercises that path; ``--backend pallas_seeded`` on the sweep's unseeded
+codes fails over the same way (the seed is a property of the CODE).
 """
 from __future__ import annotations
 
@@ -441,6 +455,117 @@ def run_large_n_sweep(*, Ns=(2048, 4096, 8192, 16384), D=8, q=0.25, reps=3,
     return rows, records
 
 
+def _decode_operand_bytes(N: int, D: int, *, bp: int, bv: int,
+                          seeded: bool) -> float:
+    """Modeled per-decode operand HBM traffic (bytes) of the fused kernels.
+
+    Both kernels hold the payload in VMEM across all D rounds (one grid
+    pass over the V axis): payload traffic is the one-time load + store of
+    the padded ``(n_pad, bv)`` values and ``(n_pad, 1)`` erasure columns.
+    The TILED kernel additionally DMAs the whole padded ``(p_pad, n_pad)``
+    f32 parity-check matrix from HBM EVERY round (check tiles of height
+    ``bp``); the SEEDED kernel regenerates those tiles in-register from
+    ``(seed, row)`` — zero H bytes.  This is the memory wall the seeded
+    construction removes, and the quantity the regression gate tracks.
+    """
+    p = N // 2                       # the sweep's rate-1/2 shapes
+    n_pad = N + (-N) % 128
+    p_pad = p + (-p) % bp
+    payload = 2 * 4.0 * (n_pad * bv + n_pad)     # in + out, values + erased
+    h_stream = 0.0 if seeded else float(D) * p_pad * n_pad * 4.0
+    return payload + h_stream
+
+
+def run_seeded_sweep(*, Ns=(2048, 4096, 8192, 16384, 32768), D=8, q=0.25,
+                     reps=3, timed_n=2048, lower_only_n=262144, bv=8):
+    """Seeded vs tiled fused decode: modeled operand traffic at every N,
+    wall-clock + trajectory tripwire where timeable, and a lower-only
+    feasibility record at an N where H cannot be materialized at all.
+
+    Returns (table_rows, json_records).  ``traffic_ratio_vs_tiled`` (tiled
+    bytes / seeded bytes, same model both sides) is gated by
+    ``check_regression.py --sections seeded`` — including the hard ≥10×
+    floor at N=16384.  The timed record at ``timed_n`` runs BOTH kernels on
+    one seeded code (``make_seeded_ldpc`` materializes H exactly so the
+    tiled reference exists) and asserts bit-identical values and erasure
+    trajectories — the seeded kernel's summation is tile-shaped like the
+    tiled one's, so even the f32 values must match bit for bit.
+    """
+    from repro.core.ldpc import make_seeded_ldpc, seeded_structure
+
+    on_tpu = jax.default_backend() == "tpu"
+    bp = 128
+    rows, records = [], []
+    for N in Ns:
+        tiled_b = _decode_operand_bytes(N, D, bp=bp, bv=bv, seeded=False)
+        seeded_b = _decode_operand_bytes(N, D, bp=bp, bv=bv, seeded=True)
+        rec = {
+            "N": N, "D": D, "bp": bp, "bv": bv, "erasure_q": q,
+            "modeled_tiled_bytes": tiled_b,
+            "modeled_seeded_bytes": seeded_b,
+            "traffic_ratio_vs_tiled": tiled_b / seeded_b,
+            "timed": False,
+            "jax_backend": jax.default_backend(),
+        }
+        timed = N == timed_n and (on_tpu or N <= 2048)
+        if timed:
+            code = make_seeded_ldpc(N // 2, l=4, r=8, seed=0)
+            assert code.N == N, (code.N, N)
+            rng = np.random.default_rng(N)
+            vals = jnp.asarray(rng.standard_normal(N), jnp.float32)
+            erased = jnp.asarray(rng.random(N) < q)
+            rx = jnp.where(erased, 0.0, vals)
+            ts, outs = {}, {}
+            for backend in ("pallas_tiled", "pallas_seeded"):
+                fn = jax.jit(lambda v, e, b=backend: tuple(peel_decode(
+                    code, v, e, D, backend=b, bp=bp, bv=bv)[:2]))
+                ts[backend] = _median_seconds(lambda v, e: fn(v, e), rx,
+                                              erased, reps=reps)
+                outs[backend] = tuple(np.asarray(x) for x in fn(rx, erased))
+            # tripwire: same tile-shaped summation → bit-identical VALUES,
+            # not just the same erasure trajectory
+            if (outs["pallas_seeded"][0] != outs["pallas_tiled"][0]).any() \
+                    or (outs["pallas_seeded"][1]
+                        != outs["pallas_tiled"][1]).any():
+                raise AssertionError(
+                    f"seeded N={N}: decode diverged from pallas_tiled on "
+                    "the same code (values or erasure trajectory)")
+            rec.update({
+                "timed": True,
+                "median_s_tiled": ts["pallas_tiled"],
+                "median_s_seeded": ts["pallas_seeded"],
+                "wallclock_ratio_vs_tiled":
+                    ts["pallas_seeded"] / ts["pallas_tiled"],
+                "interpret_mode": not on_tpu,
+            })
+        records.append(rec)
+        rows.append([N, f"{tiled_b / 2**20:.1f}", f"{seeded_b / 2**20:.3f}",
+                     f"{rec['traffic_ratio_vs_tiled']:.0f}x",
+                     (f"{rec['wallclock_ratio_vs_tiled']:.2f}x"
+                      if timed else "-"),
+                     "interp" if timed and not on_tpu else ""])
+
+    # Feasibility: the seeded kernel LOWERS at an N where the (p, N) f32 H
+    # is 128 GiB — no materialized backend can even be constructed there.
+    spec = seeded_structure(lower_only_n // 2, lower_only_n, 8, 0)
+    from repro.kernels.ldpc_peel import peel_decode_seeded_pallas
+    fn = jax.jit(lambda v, e: peel_decode_seeded_pallas(
+        spec, v, e, D, bp=512, bv=bv))
+    lowered = fn.lower(
+        jax.ShapeDtypeStruct((lower_only_n,), jnp.float32),
+        jax.ShapeDtypeStruct((lower_only_n,), jnp.bool_))
+    del lowered
+    h_bytes = (lower_only_n // 2) * lower_only_n * 4.0
+    records.append({
+        "N": lower_only_n, "D": D, "mode": "lower-only", "lower_ok": True,
+        "h_bytes_if_materialized": h_bytes,
+        "jax_backend": jax.default_backend(),
+    })
+    rows.append([lower_only_n, f"(H would be {h_bytes / 2**30:.0f} GiB)",
+                 "seed-only", "-", "lowered OK", ""])
+    return rows, records
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -538,6 +663,16 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
                 ["N", "K", "backend", "decode_us", "round_us",
                  "speedup_vs_dense", ""], lrows)
 
+    # 7. seeded sweep — in-kernel H regeneration vs streamed H.  Config is
+    # FIXED in quick mode (the sweep is modeled arithmetic + one timed N +
+    # one lower-only record, ~seconds total) so check_regression always
+    # finds matching (N, D) records.
+    srows, seeded_records = run_seeded_sweep(reps=3)
+    print_table("Seeded sweep — modeled operand HBM traffic and wall-clock, "
+                "seeded vs check-axis-tiled",
+                ["N", "tiled_MiB", "seeded_MiB", "traffic_ratio",
+                 "wallclock_ratio", ""], srows)
+
     # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
@@ -556,15 +691,17 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
 
     out = {
         "benchmark": "decoder_scaling",
-        # v5: adds the "large_n" section (check-axis-tiled regime, N up to
-        # 16384, same-run speedup_vs_dense gated by check_regression).
-        "schema_version": 5,
+        # v6: adds the "seeded" section (in-kernel H regeneration: modeled
+        # operand-traffic ratio vs the tiled kernel, gated ≥10× at N=16384,
+        # plus the timed + lower-only feasibility records).
+        "schema_version": 6,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
         "batched_scaling": batch_records,
         "serving_sweep": serve_records,
         "large_n": large_records,
+        "seeded": seeded_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows
@@ -589,9 +726,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--backend", default=None,
-                    choices=["dense", "sparse", "pallas", "pallas_tiled"],
+                    choices=["dense", "sparse", "pallas", "pallas_tiled",
+                             "pallas_seeded"],
                     help="FORCE one decode backend through the large-N "
-                         "sweep (failover-resolved past the VMEM limit "
-                         "instead of crashing); skips the JSON rewrite")
+                         "sweep (failover-resolved past the VMEM limit — "
+                         "or past a missing seed — instead of crashing); "
+                         "skips the JSON rewrite")
     a = ap.parse_args()
     main(quick=a.quick, backend=a.backend)

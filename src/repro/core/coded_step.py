@@ -32,7 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import density_evolution
-from repro.core.encoding import Moments, encode_moment, encode_moment_blocks
+from repro.core.encoding import (Moments, encode_moment,
+                                 encode_moment_blocks, gather_encode,
+                                 generator_gather_tables)
 from repro.core.engine import CodedComputeEngine, blocked_epilogue
 from repro.core.ldpc import LDPCCode
 from repro.optim import projections
@@ -61,10 +63,26 @@ class Scheme2:
     projection: Callable[[jax.Array], jax.Array] = projections.identity
     debias: bool = False
     q0_for_debias: float = 0.1
+    # Seeded on-the-fly encode: ``C`` holds the RAW (k, k) moment matrix M
+    # and every step computes the codeword as a generator gather over
+    # ``y = M θ`` — the (N, k) encoded matrix is never materialized, and the
+    # per-row gather+sum is the SAME one the sharded workers run
+    # (bit-identical products to the distributed runtime).
+    seeded_encode: bool = False
 
     @classmethod
     def build(cls, code: LDPCCode, moments: Moments, *, lr: float, **kw) -> "Scheme2":
         return cls(code=code, C=encode_moment(code, moments.M), b=moments.b, lr=lr, **kw)
+
+    @classmethod
+    def build_seeded(cls, code: LDPCCode, moments: Moments, *, lr: float,
+                     **kw) -> "Scheme2":
+        """Scheme 2 over a seeded LDGM code with on-the-fly encode: stores
+        ``M`` itself ((k, k) — the preprocessing output) instead of the
+        ``(N, k)`` encoded ``C``, and regenerates each worker's generator
+        row from the seed at every step (``z = gather(M θ)``)."""
+        return cls(code=code, C=jnp.asarray(moments.M), b=moments.b, lr=lr,
+                   seeded_encode=True, **kw)
 
     @property
     def w(self) -> int:
@@ -103,7 +121,11 @@ class Scheme2:
 
     def gradient(self, theta: jax.Array, straggler_mask: jax.Array):
         """Return (approx gradient, |U_t|)."""
-        z = self.C @ theta  # (N,) worker inner products (codeword of C)
+        if self.seeded_encode:
+            idx, coeff = generator_gather_tables(self.code)
+            z = gather_encode(idx, coeff, self.C @ theta)  # gather(M θ)
+        else:
+            z = self.C @ theta  # (N,) worker inner products (codeword of C)
         erased = self.worker_mask_to_erasure(straggler_mask)
         c_hat, unresolved = self.engine.recover(z, erased)
         return self.finish_gradient(c_hat, unresolved)
@@ -120,7 +142,11 @@ class Scheme2:
         fixpoint (per-slot adaptive batch decode) instead of running the
         whole batch for the worst-case ``decode_iters`` budget.
         """
-        Z = theta_B @ self.C.T  # (B, N)
+        if self.seeded_encode:
+            idx, coeff = generator_gather_tables(self.code)
+            Z = gather_encode(idx, coeff, (theta_B @ self.C.T).T).T  # (B, N)
+        else:
+            Z = theta_B @ self.C.T  # (B, N)
         erased_B = jax.vmap(self.worker_mask_to_erasure)(straggler_mask_B)
         c_hat, unresolved = self.engine.recover_batch(Z, erased_B)
         return self.finish_gradient(c_hat, unresolved)

@@ -55,15 +55,39 @@ backend    what runs
            a tile's row-sum reduction differently than the whole-H one).
            Tile knobs: ``bp`` (check-tile height; default sized from the
            VMEM budget via :func:`pick_tile_bp`) and ``bv`` (payload tile).
+"pallas_seeded"
+           the same four one-launch contracts with NO ``H`` operand at all:
+           each ``bp×N`` check tile is REGENERATED in-register from the
+           code's counter-based seed inside the flooding round
+           (:func:`repro.kernels.ldpc_peel.seeded_h_tile`).  Requires a
+           seeded parity-only code — ``make_seeded_ldpc`` (materialized,
+           ``kind="ldpc-seeded"``) or the structure-only
+           :class:`repro.core.ldpc.SeededLDPC`, which never builds H at
+           any size.  Erasure trajectories are bit-identical to every
+           other backend on the same code and VALUES are bit-identical to
+           "pallas_tiled" (same tile-shaped summation); H costs zero bytes
+           of HBM storage and operand traffic.
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
-           large codes off-TPU; on TPU, "pallas" when
+           large codes off-TPU; on TPU, "pallas_seeded" whenever the code
+           carries a regenerable seed, else "pallas" when
            :func:`vmem_bytes_estimate` says the resident kernel's
            per-grid-step working set fits the VMEM budget
            (``vmem_budget_bytes``, default 8 MiB of the ~16 MiB/core), and
-           "pallas_tiled" otherwise.  The same rule applies on the batch
-           axis (the batched kernel's per-step working set matches the
-           single-pattern kernel's), and to the batched-adaptive decode.
+           "pallas_tiled" otherwise.  A structure-only
+           :class:`~repro.core.ldpc.SeededLDPC` resolves to
+           "pallas_seeded" on EVERY platform (it is the only backend that
+           can run without H; off-TPU it runs in interpret mode).  The
+           same rule applies on the batch axis (the batched kernel's
+           per-step working set matches the single-pattern kernel's), and
+           to the batched-adaptive decode.
 =========  ==================================================================
+
+Memory cost per backend (H-side, f32): "dense"/"sparse"/"pallas" hold the
+materialized ``(p, N)`` H (or its neighbor table) resident — HBM storage
+AND per-round operand traffic scale as ``p·N``; "pallas_tiled" still
+STORES ``p·N`` in HBM but holds only ``2·bp·N`` in VMEM, streaming the
+rest; "pallas_seeded" stores a few ints (the seed/spec) and moves ZERO H
+bytes — storage and traffic are both O(1) in the code size.
 
 All backends follow bit-identical erasure trajectories (solvability is an
 exact count of erased neighbours, and every backend resolves the same
@@ -96,7 +120,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ldpc import LDPCCode
+from repro.core.ldpc import LDPCCode, SeededLDPC, seeded_structure_of
 
 __all__ = [
     "DecodeResult",
@@ -115,7 +139,8 @@ __all__ = [
     "pick_tile_bp",
 ]
 
-BACKENDS = ("auto", "dense", "sparse", "pallas", "pallas_tiled")
+BACKENDS = ("auto", "dense", "sparse", "pallas", "pallas_tiled",
+            "pallas_seeded")
 
 # "auto" picks the sparse neighbor-table round once the dense round's O(p·N)
 # work clearly loses to O(p·r_max) gathers; below this the dense matmul's
@@ -128,8 +153,9 @@ _DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20
 
 
 def _kernel_shape(code) -> tuple[int, int]:
-    """(p, N) of an LDPCCode, an (H, Hb) tuple, or a raw (p, N) int pair."""
-    if isinstance(code, LDPCCode):
+    """(p, N) of an LDPCCode / SeededLDPC, an (H, Hb) tuple, or a raw
+    (p, N) int pair."""
+    if isinstance(code, (LDPCCode, SeededLDPC)):
         return code.p, code.N
     a, b = code
     if isinstance(a, (int, np.integer)):
@@ -210,15 +236,35 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False,
     if backend not in BACKENDS:
         raise ValueError(f"unknown decode backend {backend!r}; want one of {BACKENDS}")
     is_code = isinstance(code, LDPCCode)
+    seeded_h = isinstance(code, SeededLDPC) or (
+        is_code and code.kind == "ldpc-seeded")
     if backend == "auto":
+        if isinstance(code, SeededLDPC):
+            # Structure-only: no H exists at any size — the seeded kernel
+            # is the only backend that can run it (interpret off-TPU).
+            return "pallas_seeded"
         if not is_code:
             return "dense"
         if jax.default_backend() == "tpu":
-            budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
-            backend = ("pallas" if vmem_bytes_estimate(code) <= budget
-                       else "pallas_tiled")
+            if seeded_h:
+                backend = "pallas_seeded"
+            else:
+                budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
+                backend = ("pallas" if vmem_bytes_estimate(code) <= budget
+                           else "pallas_tiled")
         else:
             backend = "sparse" if code.N >= _AUTO_SPARSE_MIN_N else "dense"
+    if backend == "pallas_seeded" and not seeded_h:
+        kind = code.kind if is_code else type(code).__name__
+        raise ValueError(
+            "backend='pallas_seeded' needs a seeded parity-only code "
+            "(make_seeded_ldpc / SeededLDPC) whose H is regenerable from "
+            f"its seed; got {kind!r}")
+    if isinstance(code, SeededLDPC) and backend != "pallas_seeded":
+        raise ValueError(
+            f"backend={backend!r} needs a materialized H, but a SeededLDPC "
+            "is structure-only; use backend='pallas_seeded'/'auto' or build "
+            "the code with make_seeded_ldpc")
     if backend in ("sparse", "pallas", "pallas_tiled") and not is_code:
         raise ValueError(
             f"backend={backend!r} needs an LDPCCode (neighbor table); "
@@ -340,6 +386,14 @@ def _tile_knobs(code, bp, bv, vmem_budget_bytes):
     return int(bp), int(bv) if bv is not None else 128
 
 
+def _seeded_spec(code):
+    """The hashable :class:`~repro.core.ldpc.SeededStructure` for a seeded
+    code — materialized (``kind="ldpc-seeded"``) or structure-only."""
+    if isinstance(code, SeededLDPC):
+        return code.structure
+    return seeded_structure_of(code)
+
+
 def peel_decode(
     code: LDPCCode | tuple[jax.Array, jax.Array],
     values: jax.Array,
@@ -380,6 +434,12 @@ def peel_decode(
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e = peel_decode_tiled_pallas(H, v, e, iters, bp=bp_, bv=bv_)
+    elif backend == "pallas_seeded":
+        from repro.kernels.ldpc_peel import peel_decode_seeded_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        v, e = peel_decode_seeded_pallas(_seeded_spec(code), v, e, iters,
+                                         bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = peel_fixed_dense(H, Hb, v, e, iters)
@@ -536,6 +596,12 @@ def peel_decode_batch(
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e = peel_decode_batch_tiled_pallas(H, v, e, iters, bp=bp_, bv=bv_)
+    elif backend == "pallas_seeded":
+        from repro.kernels.ldpc_peel import peel_decode_batch_seeded_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        v, e = peel_decode_batch_seeded_pallas(_seeded_spec(code), v, e,
+                                               iters, bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = _peel_fixed_dense_batch(H, Hb, v, e, iters)
@@ -604,7 +670,8 @@ def peel_decode_adaptive(
     backend = resolve_backend(backend, code, adaptive=True,
                               vmem_budget_bytes=vmem_budget_bytes)
     if max_iters is None:
-        max_iters = int(code.N if isinstance(code, LDPCCode) else code[0].shape[1])
+        max_iters = int(code.N if isinstance(code, (LDPCCode, SeededLDPC))
+                        else code[0].shape[1])
     v, squeeze = _expand(jnp.asarray(values))
     e = jnp.asarray(erased, bool)
     if backend == "sparse":
@@ -622,6 +689,12 @@ def peel_decode_adaptive(
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e, d = peel_decode_adaptive_tiled_pallas(H, v, e, int(max_iters),
                                                     bp=bp_, bv=bv_)
+    elif backend == "pallas_seeded":
+        from repro.kernels.ldpc_peel import peel_decode_adaptive_seeded_pallas
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        v, e, d = peel_decode_adaptive_seeded_pallas(
+            _seeded_spec(code), v, e, int(max_iters), bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))
@@ -758,7 +831,8 @@ def peel_decode_batch_adaptive(
     e = jnp.asarray(erased, bool)
     B = v.shape[0]
     if max_iters is None:
-        max_iters = int(code.N if isinstance(code, LDPCCode) else code[0].shape[1])
+        max_iters = int(code.N if isinstance(code, (LDPCCode, SeededLDPC))
+                        else code[0].shape[1])
     if budgets is None:
         budgets = jnp.full((B,), int(max_iters), jnp.int32)
     else:
@@ -783,6 +857,13 @@ def peel_decode_batch_adaptive(
         H = jnp.asarray(code.H, _float_dtype(v.dtype))
         v, e, d = peel_decode_batch_adaptive_tiled_pallas(H, v, e, budgets,
                                                           bp=bp_, bv=bv_)
+    elif backend == "pallas_seeded":
+        from repro.kernels.ldpc_peel import (
+            peel_decode_batch_adaptive_seeded_pallas)
+
+        bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        v, e, d = peel_decode_batch_adaptive_seeded_pallas(
+            _seeded_spec(code), v, e, budgets, bp=bp_, bv=bv_)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive_dense_batch(H, Hb, v, e, budgets)

@@ -14,6 +14,15 @@ squared loss is ``∇L(θ) = M θ - b`` with ``M = X^T X`` and ``b = X^T y``.
 
 Encoding cost is one (N x K) @ (K x k) matmul — the Pallas ``block_matmul``
 kernel covers this at scale; here the jnp path is the reference.
+
+SEEDED encode: for a seeded LDGM code (:func:`repro.core.ldpc.make_seeded_ldgm`)
+the generator rows are recomputable from ``(seed, row)`` in O(row_weight), so
+``C = G @ M`` reduces to per-row gathers over M (:func:`encode_moment_seeded`)
+and the per-step codeword ``C θ`` to a gather over ``y = M θ``
+(:func:`gather_encode`) — no generator or encoding-matrix rows are ever
+materialized.  The same gather tables drive the sharded worker encode
+(``distributed/worker.local_products_seeded``), so single-device and
+distributed products are bit-identical.
 """
 from __future__ import annotations
 
@@ -22,9 +31,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ldpc import LDPCCode
+from repro.core.ldpc import LDPCCode, seeded_generator_rows
 
-__all__ = ["Moments", "second_moment", "encode_moment", "encode_moment_blocks"]
+__all__ = ["Moments", "second_moment", "encode_moment",
+           "encode_moment_blocks", "encode_moment_seeded", "gather_encode",
+           "generator_gather_tables"]
 
 
 class Moments(NamedTuple):
@@ -63,3 +74,50 @@ def encode_moment_blocks(code: LDPCCode, M: jax.Array) -> jax.Array:
     G = jnp.asarray(code.G, M.dtype)
     blocks = M.reshape(nb, code.K, k)
     return jnp.einsum("nk,bkj->bnj", G, blocks)
+
+
+def generator_gather_tables(code: LDPCCode) -> tuple[jax.Array, jax.Array]:
+    """Full-generator gather tables of a seeded LDGM code, as jnp arrays.
+
+    ``(idx (N, row_weight) int32, coeff (N, row_weight) f32)`` with
+    ``G[i] = Σ_s coeff[i, s]·e_{idx[i, s]}`` — the whole generator in
+    ``O(N·row_weight)`` ints instead of an ``(N, K)`` dense matrix.
+    """
+    idx, coeff = seeded_generator_rows(code, 0, code.N)
+    return jnp.asarray(idx), jnp.asarray(coeff)
+
+
+def gather_encode(idx: jax.Array, coeff: jax.Array,
+                  y: jax.Array) -> jax.Array:
+    """THE seeded per-row encode: ``z[i] = Σ_s coeff[i, s] · y[idx[i, s]]``.
+
+    ``y`` is ``(K,)`` or ``(K, V)``; returns ``(n,)`` / ``(n, V)`` for
+    tables of ``n`` rows.  Zero-weight pad slots gather row ``idx=0`` with
+    coefficient 0 — exact zeros, no sentinel row needed.  Single-device
+    encodes and each sharded worker's fused encode-matvec run this same
+    gather+sum over their row ranges, so their products are bit-identical.
+    """
+    yj = jnp.asarray(y)
+    g = yj[idx]                               # (n, rw) or (n, rw, V)
+    c = coeff.astype(yj.dtype)
+    if yj.ndim == 2:
+        c = c[..., None]
+    return (g * c).sum(axis=1)
+
+
+def encode_moment_seeded(code: LDPCCode, M: jax.Array) -> jax.Array:
+    """Scheme 2 encode ``C = G @ M`` via the seeded generator gathers.
+
+    Same shape contract as :func:`encode_moment` (``(N, k)``, requires
+    ``code.K == k``) but the generator is never materialized: each codeword
+    row is a ``row_weight``-term gather+sum over rows of ``M`` —
+    ``O(N·row_weight·k)`` work and ``O(N·row_weight)`` structure ints
+    instead of an ``(N, K)`` dense ``G``.  Requires a
+    :func:`repro.core.ldpc.make_seeded_ldgm` code.
+    """
+    M = jnp.asarray(M)
+    if code.K != M.shape[0]:
+        raise ValueError(f"code dimension K={code.K} != k={M.shape[0]}; "
+                         "use encode_moment_blocks for K | k")
+    idx, coeff = generator_gather_tables(code)
+    return gather_encode(idx, coeff, M)

@@ -14,8 +14,12 @@ encode   ``symbols = G @ payload`` — systematic codeword(s) of the payload
          encode for coded aggregation).
 erase    zero the straggled coordinates (workers that did not report).
 decode   the peeling decode via :mod:`repro.core.decoder`'s backend matrix
-         (dense / sparse neighbor-table / fused Pallas kernel), fixed-D or
-         adaptive early-exit.
+         (dense / sparse neighbor-table / fused Pallas kernel — resident,
+         check-axis tiled, or seed-regenerated "pallas_seeded"), fixed-D
+         or adaptive early-exit.  The engine's ``code`` may be a
+         structure-only :class:`repro.core.ldpc.SeededLDPC`: decode stages
+         work unchanged (the seeded kernel needs no H), only ``encode``
+         needs a materialized generator.
 epilogue zero-fill the unresolved systematic coordinates (paper Scheme 2:
          both ``ĉ`` and ``b̂`` zeroed on the unresolved set keeps the
          gradient estimate an unbiased (1-q_D)-scaled gradient — Lemma 1).
@@ -99,7 +103,8 @@ class CodedComputeEngine:
 
     code: LDPCCode
     decode_iters: int = 10
-    backend: str = "auto"  # dense | sparse | pallas | pallas_tiled | auto
+    # dense | sparse | pallas | pallas_tiled | pallas_seeded | auto
+    backend: str = "auto"
     adaptive: bool = False
     # Tile plumbing for the check-axis-tiled fused kernels: bp (check-tile
     # height; None = sized from the VMEM budget) and bv (payload tile), plus

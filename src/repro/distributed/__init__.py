@@ -7,11 +7,17 @@ Layers (each its own module):
   → worker assignment, per-worker → per-symbol erasure lifting;
 * :mod:`repro.distributed.worker` — per-worker shard ownership and local
   partial-product compute (``shard_map`` over the ``"workers"`` axis), with
-  straggler injection at per-WORKER granularity;
+  straggler injection at per-WORKER granularity; the SEEDED variant fuses
+  encode into the matvec so workers hold only generator gather tables
+  (regenerable from the seed), never encoding-matrix rows;
 * :mod:`repro.distributed.master` — survivor gather, decode through the
   shared :class:`repro.core.engine.CodedComputeEngine` backends, the
   :class:`~repro.distributed.master.DistributedCodedGD` driver (bit-identical
-  to single-device ``Scheme2``), and the production-scale AOT step;
+  to single-device ``Scheme2``; ``worker_encode="seeded"`` swaps the
+  sharded encoded operator for seeded on-the-fly worker encode), the
+  :class:`~repro.distributed.master.DistributedCodedAggregator` serving the
+  additive-loss ``grad_agg`` path over the same worker launch, and the
+  production-scale AOT step;
 * :mod:`repro.distributed.sharded_decode` — the master decode itself sharded
   over the mesh (``master_decode="sharded"``): check tiles partitioned over
   the ``"workers"`` axis, per-round all-gather merge, bit-identical to the
@@ -22,6 +28,7 @@ Layers (each its own module):
   adaptive decode budgets.
 """
 from repro.distributed.master import (
+    DistributedCodedAggregator,
     DistributedCodedGD,
     DistributedRunResult,
     build_distributed_gd_step,
@@ -43,15 +50,19 @@ from repro.distributed.topology import (
 )
 from repro.distributed.worker import (
     WorkerStragglers,
+    build_seeded_worker_products,
     build_worker_products,
     shard_encoded_rows,
+    shard_generator_tables,
 )
 
 __all__ = [
     "DistributedCodedGD", "DistributedRunResult", "build_distributed_gd_step",
+    "DistributedCodedAggregator",
     "build_sharded_decode", "shard_check_tables",
     "StragglerRateEstimator", "decode_budget", "pick_wait_for",
     "rounds_to_clear",
     "WorkerTopology", "make_worker_mesh", "row_sharding",
     "WorkerStragglers", "build_worker_products", "shard_encoded_rows",
+    "build_seeded_worker_products", "shard_generator_tables",
 ]

@@ -76,13 +76,19 @@ from repro.distributed.topology import (
     make_worker_mesh,
     replicated_sharding,
 )
-from repro.distributed.worker import build_worker_products, shard_encoded_rows
+from repro.distributed.worker import (
+    build_seeded_worker_products,
+    build_worker_products,
+    shard_encoded_rows,
+    shard_generator_tables,
+)
 
 __all__ = ["DistributedRunResult", "DistributedCodedGD",
-           "build_distributed_gd_step"]
+           "DistributedCodedAggregator", "build_distributed_gd_step"]
 
 BUDGET_MODES = ("fixed", "telemetry")
 MASTER_DECODES = ("single", "sharded")
+WORKER_ENCODES = ("materialized", "seeded")
 
 
 class DistributedRunResult(NamedTuple):
@@ -118,6 +124,13 @@ class DistributedCodedGD:
     # (repro.distributed.sharded_decode) — for N past one device; stays
     # bit-identical to the single-device sparse decode.
     master_decode: str = "single"
+    # "materialized": workers hold their rows of the encoded C (the default
+    # — scheme.C is the (N, k) encoded operator, row-sharded over the mesh).
+    # "seeded": workers hold ONLY their slice of the seeded generator gather
+    # tables and fuse encode into the matvec (z = gather(M θ) per row);
+    # requires a Scheme2.build_seeded scheme (scheme.C is then the raw M).
+    # Products — hence trajectories — are bit-identical across the two.
+    worker_encode: str = "materialized"
     estimator: StragglerRateEstimator | None = None
     max_rounds: int | None = None     # telemetry worst-case budget ceiling
     # Delay-model runs: a worker counts as STRAGGLING when its latency
@@ -135,6 +148,14 @@ class DistributedCodedGD:
         if self.master_decode not in MASTER_DECODES:
             raise ValueError(f"unknown master_decode {self.master_decode!r}; "
                              f"want one of {MASTER_DECODES}")
+        if self.worker_encode not in WORKER_ENCODES:
+            raise ValueError(f"unknown worker_encode {self.worker_encode!r}; "
+                             f"want one of {WORKER_ENCODES}")
+        if self.worker_encode == "seeded" and not self.scheme.seeded_encode:
+            raise ValueError(
+                "worker_encode='seeded' needs a Scheme2.build_seeded scheme "
+                "(seeded_encode=True, C holding the raw moment matrix M); "
+                "this scheme stores a materialized encoded operator")
         if self.topology.N != self.scheme.w:
             raise ValueError(
                 f"topology covers N={self.topology.N} rows but the scheme's "
@@ -146,9 +167,18 @@ class DistributedCodedGD:
             self.estimator = StragglerRateEstimator()
         if self.max_rounds is None:
             self.max_rounds = int(self.scheme.decode_iters)
-        self._C_sharded = shard_encoded_rows(
-            jnp.asarray(self.scheme.C), self.mesh, self.topology)
         self._replicated = replicated_sharding(self.mesh)
+        if self.worker_encode == "seeded":
+            # Workers never hold encoding-matrix rows: their slice of the
+            # generator gather tables is sharded; the raw moment matrix M
+            # (scheme.C under seeded_encode) is replicated problem data.
+            self._tables_sharded = shard_generator_tables(
+                self.scheme.code, self.mesh, self.topology)
+            self._M_replicated = jax.device_put(
+                jnp.asarray(self.scheme.C), self._replicated)
+        else:
+            self._C_sharded = shard_encoded_rows(
+                jnp.asarray(self.scheme.C), self.mesh, self.topology)
         self.master_device = self.mesh.devices.flat[0]
         if self.master_decode == "sharded":
             # Check tiles partitioned over the workers axis, once at build.
@@ -165,15 +195,23 @@ class DistributedCodedGD:
     def _build_programs(self):
         scheme, topo = self.scheme, self.topology
         eng = scheme.engine
-        worker_products = build_worker_products(self.mesh)
 
         # Worker program: ONE SPMD launch over the workers axis.  θ and the
         # per-worker mask come in replicated (the master's broadcast), each
         # device computes/erases only its own rows, and the replicated
         # output is the master's gather of survivor rows.
-        def worker_program(C_sh, theta, worker_mask):
-            erased = topo.to_symbol_erasure(worker_mask)  # partition lift
-            return worker_products(C_sh, theta, erased)
+        if self.worker_encode == "seeded":
+            seeded_products = build_seeded_worker_products(self.mesh)
+
+            def worker_program(idx_sh, coeff_sh, M, theta, worker_mask):
+                erased = topo.to_symbol_erasure(worker_mask)  # partition lift
+                return seeded_products(idx_sh, coeff_sh, M, theta, erased)
+        else:
+            worker_products = build_worker_products(self.mesh)
+
+            def worker_program(C_sh, theta, worker_mask):
+                erased = topo.to_symbol_erasure(worker_mask)  # partition lift
+                return worker_products(C_sh, theta, erased)
 
         worker_jit = jax.jit(worker_program, out_shardings=self._replicated)
 
@@ -265,10 +303,14 @@ class DistributedCodedGD:
         else:
             budget = int(self.scheme.decode_iters)
         # broadcast θ + mask to the workers, one SPMD partial-product launch
-        z = self._worker_program(
-            self._C_sharded,
-            jax.device_put(theta, self._replicated),
-            jax.device_put(worker_mask, self._replicated))
+        theta_rep = jax.device_put(theta, self._replicated)
+        mask_rep = jax.device_put(worker_mask, self._replicated)
+        if self.worker_encode == "seeded":
+            idx_sh, coeff_sh = self._tables_sharded
+            z = self._worker_program(idx_sh, coeff_sh, self._M_replicated,
+                                     theta_rep, mask_rep)
+        else:
+            z = self._worker_program(self._C_sharded, theta_rep, mask_rep)
         if self.master_decode == "sharded":
             # decode over the mesh: check tiles stay sharded, operands
             # replicated, one all-gather merge per round
@@ -360,6 +402,93 @@ class DistributedCodedGD:
             theta, tbar, np.asarray(errors), np.asarray(unresolved),
             np.asarray(rounds), np.asarray(budgets), np.asarray(rates),
             np.asarray(waits), np.asarray(times))
+
+
+# ------------------------------------------ distributed coded aggregation
+
+
+@dataclasses.dataclass
+class DistributedCodedAggregator:
+    """The beyond-paper additive-loss path served by the worker runtime.
+
+    :class:`repro.core.grad_agg.CodedAggregator` run as the SAME two device
+    programs as :class:`DistributedCodedGD`: the generator rows are sharded
+    over the ``"workers"`` mesh axis and each device computes its rows of
+    ``G @ partials`` — a 2-D-payload :func:`repro.distributed.worker
+    .build_worker_products` launch (each systematic symbol is a flattened
+    ``(dim,)`` partial gradient) — then the master peels the survivor
+    symbols and sums the recovered shards.  Row-block matmuls are bitwise
+    identical to the full ``G @ partials`` and the decode runs as a
+    single-device program on the master, so ``aggregate`` is BIT-IDENTICAL
+    to the single-device :meth:`CodedAggregator.aggregate` under the lifted
+    mask (asserted by ``repro.distributed.selfcheck --grad-agg`` on the
+    fake 8-device mesh).
+    """
+
+    agg: "CodedAggregator"
+    topology: WorkerTopology
+    mesh: Mesh | None = None
+
+    def __post_init__(self) -> None:
+        from repro.core.grad_agg import CodedAggregator
+        if not isinstance(self.agg, CodedAggregator):
+            raise TypeError(f"agg must be a CodedAggregator; "
+                            f"got {type(self.agg).__name__}")
+        if self.topology.N != self.agg.n_workers:
+            raise ValueError(
+                f"topology covers N={self.topology.N} rows but the "
+                f"aggregator's code has N={self.agg.n_workers}")
+        if self.mesh is None:
+            self.mesh = make_worker_mesh()
+        self.topology.validate_mesh(self.mesh)
+        self._G_sharded = shard_encoded_rows(
+            jnp.asarray(self.agg.code.G, jnp.float32), self.mesh,
+            self.topology)
+        self._replicated = replicated_sharding(self.mesh)
+        self.master_device = self.mesh.devices.flat[0]
+
+        topo, agg = self.topology, self.agg
+        worker_products = build_worker_products(self.mesh)
+        eng = agg.engine
+
+        def worker_program(G_sh, partials, worker_mask):
+            erased = topo.to_symbol_erasure(worker_mask)
+            return worker_products(G_sh, partials, erased)
+
+        def master_program(z, worker_mask):
+            erased = topo.to_symbol_erasure(worker_mask)
+            recovered, unresolved = eng.recover(z, erased)
+            total = recovered.sum(axis=0) * agg.debias_scale
+            return total, unresolved.sum()
+
+        self._worker_program = jax.jit(worker_program,
+                                       out_shardings=self._replicated)
+        self._master_program = jax.jit(master_program)
+
+    @property
+    def n_workers(self) -> int:
+        return self.topology.n_workers
+
+    def aggregate(self, partials: jax.Array, worker_mask: jax.Array
+                  ) -> tuple[jax.Array, int]:
+        """Coded sum of ``partials (K, dim)`` under a ``(W,)`` worker mask.
+
+        One SPMD worker launch (sharded generator rows, 2-D payload), one
+        master decode launch.  Returns ``(Σ_i ĝ_i (dim,), n_unresolved)``.
+        """
+        partials = jnp.asarray(partials)
+        worker_mask = jnp.asarray(worker_mask, bool)
+        if worker_mask.shape != (self.n_workers,):
+            raise ValueError(f"worker_mask must be ({self.n_workers},); "
+                             f"got {worker_mask.shape}")
+        z = self._worker_program(
+            self._G_sharded,
+            jax.device_put(partials, self._replicated),
+            jax.device_put(worker_mask, self._replicated))
+        m = self.master_device
+        total, n_unres = self._master_program(
+            jax.device_put(z, m), jax.device_put(worker_mask, m))
+        return total, int(n_unres)
 
 
 # ------------------------------------------------- production-scale AOT step

@@ -12,6 +12,15 @@ for every requested decode backend.
 Exit code 0 and a one-line "parity OK" per backend on success; an assertion
 with the first diverging step otherwise.  The CI fake-8-device job and
 ``tests/test_distributed.py``'s subprocess test both run this module.
+
+``--worker-encode seeded`` swaps both sides to the seeded-LDGM pipeline
+(``Scheme2.build_seeded`` vs ``DistributedCodedGD(worker_encode="seeded")``):
+workers hold only their slice of the generator gather tables and fuse the
+encode into the matvec — parity then proves the on-the-fly worker encode is
+bit-identical to the single-device seeded gather.  ``--grad-agg`` checks the
+additive-loss path instead: :class:`repro.distributed.master
+.DistributedCodedAggregator` vs the single-device
+:class:`repro.core.grad_agg.CodedAggregator` under the lifted worker masks.
 """
 from __future__ import annotations
 
@@ -23,19 +32,25 @@ import numpy as np
 
 from repro.core import (
     BernoulliStragglers,
+    CodedAggregator,
     Scheme2,
     make_regular_ldpc,
     second_moment,
 )
+from repro.core.ldpc import make_seeded_ldgm
 from repro.data import make_linear_problem
-from repro.distributed.master import DistributedCodedGD
+from repro.distributed.master import (
+    DistributedCodedAggregator,
+    DistributedCodedGD,
+)
 from repro.distributed.topology import WorkerTopology, make_worker_mesh
 from repro.distributed.worker import WorkerStragglers
 
 
 def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
                  q0: float = 0.25, backend: str = "sparse",
-                 master_decode: str = "single", seed: int = 0) -> int:
+                 master_decode: str = "single",
+                 worker_encode: str = "materialized", seed: int = 0) -> int:
     """Returns the number of steps checked; raises AssertionError on the
     first diverging iterate.
 
@@ -45,15 +60,29 @@ def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
     assertion then proves the SHARDED decode itself is bit-identical to the
     single-device decode (use ``backend="sparse"``: the sharded rounds are
     the sparse neighbor-table rounds, shard-partitioned).
+
+    ``worker_encode="seeded"`` runs the seeded-LDGM pipeline on BOTH sides:
+    the reference is the single-device ``Scheme2.build_seeded`` (per-row
+    generator gather over ``y = M θ``), the distributed side shards the
+    gather tables over the mesh — parity proves the fused worker-side
+    encode-matvec is bit-identical to the single-device one.
     """
-    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    if worker_encode == "seeded":
+        # Seeded layered-permutation P needs K % rw == 0 and
+        # p % (K // rw) == 0; (K, K//2, rw=8) satisfies both for K % 16 == 0.
+        code = make_seeded_ldgm(K, K // 2, row_weight=8, seed=seed)
+    else:
+        code = make_regular_ldpc(K, l=3, r=6, seed=seed)
     prob = make_linear_problem(m=4 * K, k=K, seed=seed)
     mom = second_moment(prob.X, prob.y)
-    scheme = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
-                           decode_backend=backend)
+    build = (Scheme2.build_seeded if worker_encode == "seeded"
+             else Scheme2.build)
+    scheme = build(code, mom, lr=prob.lr, decode_iters=8,
+                   decode_backend=backend)
     topo = WorkerTopology(n_workers, code.N)
     dist = DistributedCodedGD(scheme, topo, make_worker_mesh(),
-                              master_decode=master_decode)
+                              master_decode=master_decode,
+                              worker_encode=worker_encode)
     stragglers = WorkerStragglers(BernoulliStragglers(q0), topo)
 
     key = jax.random.PRNGKey(seed)
@@ -75,9 +104,44 @@ def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
         if not (ref == got).all():
             bad = int(np.argmax(ref != got))
             raise AssertionError(
-                f"backend={backend} master_decode={master_decode}: iterates "
-                f"diverge at step {t}, coordinate {bad}: "
-                f"{ref[bad]!r} != {got[bad]!r}")
+                f"backend={backend} master_decode={master_decode} "
+                f"worker_encode={worker_encode}: iterates diverge at step "
+                f"{t}, coordinate {bad}: {ref[bad]!r} != {got[bad]!r}")
+    return steps
+
+
+def check_grad_agg_parity(*, n_shards: int = 64, dim: int = 17,
+                          n_workers: int = 8, steps: int = 4,
+                          q0: float = 0.25, backend: str = "sparse",
+                          seed: int = 0) -> int:
+    """Additive-loss path parity: :class:`DistributedCodedAggregator` (2-D
+    payload worker launch + master decode) vs the single-device
+    :class:`CodedAggregator` under the lifted worker mask, bit for bit.
+    Returns the number of masks checked."""
+    agg = CodedAggregator.build(n_shards=n_shards, redundancy=0.5,
+                                row_weight=4, seed=seed,
+                                decode_backend=backend)
+    topo = WorkerTopology(n_workers, agg.n_workers)
+    dagg = DistributedCodedAggregator(agg, topo, make_worker_mesh())
+    model = BernoulliStragglers(q0)
+    key = jax.random.PRNGKey(seed)
+    partials = jax.random.normal(key, (n_shards, dim))
+    ref_agg = jax.jit(agg.aggregate)
+    for t in range(steps):
+        worker_mask = model.sample(jax.random.fold_in(key, t), n_workers)
+        total_d, unres_d = dagg.aggregate(partials, worker_mask)
+        total_s, unres_s = ref_agg(partials,
+                                   topo.to_symbol_erasure(worker_mask))
+        ref, got = np.asarray(total_s), np.asarray(total_d)
+        if not (ref == got).all():
+            bad = int(np.argmax(ref != got))
+            raise AssertionError(
+                f"grad-agg backend={backend}: sums diverge at mask {t}, "
+                f"coordinate {bad}: {ref[bad]!r} != {got[bad]!r}")
+        if int(unres_s) != int(unres_d):
+            raise AssertionError(
+                f"grad-agg backend={backend}: unresolved counts diverge at "
+                f"mask {t}: {int(unres_s)} != {int(unres_d)}")
     return steps
 
 
@@ -94,8 +158,26 @@ def main(argv=None) -> int:
                     help="sharded = the master decode itself runs over the "
                          "mesh (check tiles partitioned; reference stays "
                          "the single-device sparse decode)")
+    ap.add_argument("--worker-encode", default="materialized",
+                    choices=["materialized", "seeded"],
+                    help="seeded = workers hold only generator gather "
+                         "tables and fuse encode into the matvec "
+                         "(reference is the single-device seeded scheme)")
+    ap.add_argument("--grad-agg", action="store_true",
+                    help="check the additive-loss DistributedCodedAggregator "
+                         "against the single-device CodedAggregator instead "
+                         "of the moment-encoded GD step")
     args = ap.parse_args(argv)
     n_dev = jax.device_count()
+    if args.grad_agg:
+        for backend in args.backends.split(","):
+            steps = check_grad_agg_parity(n_shards=args.K,
+                                          n_workers=args.workers,
+                                          steps=args.steps, q0=args.q0,
+                                          backend=backend)
+            print(f"parity OK: grad-agg backend={backend} W={args.workers} "
+                  f"devices={n_dev} masks={steps} (bit-identical sums)")
+        return 0
     if args.master_decode == "sharded":
         # The sharded rounds ARE the sparse neighbor-table rounds, so the
         # bit-parity reference is the sparse single-device decode.
@@ -105,9 +187,11 @@ def main(argv=None) -> int:
     for backend in backends:
         steps = check_parity(K=args.K, n_workers=args.workers,
                              steps=args.steps, q0=args.q0, backend=backend,
-                             master_decode=args.master_decode)
+                             master_decode=args.master_decode,
+                             worker_encode=args.worker_encode)
         print(f"parity OK: backend={backend} "
-              f"master_decode={args.master_decode} W={args.workers} "
+              f"master_decode={args.master_decode} "
+              f"worker_encode={args.worker_encode} W={args.workers} "
               f"devices={n_dev} steps={steps} (bit-identical iterates)")
     return 0
 

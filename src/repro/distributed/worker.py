@@ -16,6 +16,23 @@ sees only its own row shard — the per-device working set is
 single-device memory.  The erasure zeroing ALSO runs worker-side (a real
 straggler never sends bytes); the master re-applies its own mask when it
 decodes, so the two layers cannot disagree.
+
+SEEDED workers (:func:`local_products_seeded` /
+:func:`build_seeded_worker_products`): for a seeded LDGM code the worker
+never holds its rows of the encoding matrix AT ALL — it keeps only its
+``(rows/device, row_weight)`` slice of the generator gather tables
+(regenerable from ``(seed, row)``; :func:`shard_generator_tables`) and
+fuses encode into the matvec: ``y = M θ`` (replicated — the same bits on
+every device), then ``z_local = Σ_s coeff·y[idx]`` over its rows.  This is
+the SAME per-row gather+sum the single-device seeded
+``Scheme2.build_seeded`` runs, so distributed products are bit-identical
+to the single-device ones; the per-device structure footprint drops from
+``(N/W)·k`` floats to ``(N/W)·row_weight`` table entries.
+
+The worker payload may be 2-D: ``theta (k, dim)`` (coded gradient
+AGGREGATION, where each systematic symbol is a flattened partial gradient)
+produces ``z (rows, dim)`` — the same row-sharded program serves
+:class:`repro.distributed.master.DistributedCodedAggregator`.
 """
 from __future__ import annotations
 
@@ -26,11 +43,14 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.encoding import gather_encode
+from repro.core.ldpc import LDPCCode, seeded_generator_rows
 from repro.core.straggler import StragglerModel
 from repro.distributed.topology import WorkerTopology, row_sharding
 
 __all__ = ["WorkerStragglers", "local_products", "build_worker_products",
-           "shard_encoded_rows"]
+           "shard_encoded_rows", "local_products_seeded",
+           "build_seeded_worker_products", "shard_generator_tables"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,23 +90,84 @@ def local_products(C_shard: jax.Array, theta: jax.Array,
     bitwise identical to the corresponding rows of the full ``C @ θ`` (each
     output element is an independent dot product), which is what makes the
     distributed trajectory reproduce the single-device one bit-for-bit.
+
+    ``theta`` may also be a 2-D ``(k, dim)`` payload (coded gradient
+    aggregation) — ``z`` is then ``(rows, dim)`` with the erasure mask
+    broadcast over the payload axis.
     """
     z = C_shard @ theta
-    return jnp.where(erased_shard, 0.0, z)
+    m = erased_shard
+    while m.ndim < z.ndim:
+        m = m[..., None]
+    return jnp.where(m, 0.0, z)
 
 
 def build_worker_products(mesh: Mesh):
-    """The sharded worker-compute stage: ``(C, θ, erased) → z (N,)``.
+    """The sharded worker-compute stage: ``(C, θ, erased) → z (N, ...)``.
 
-    ``C`` sharded ``P("workers", None)``, ``θ`` replicated, ``erased``
-    sharded ``P("workers")``; the output keeps the row sharding — the
-    master's gather happens where the decode consumes it (XLA inserts the
-    all-gather at the jit boundary's replicated consumer).
+    ``C`` sharded ``P("workers", None)``, ``θ`` replicated (``(k,)`` or a
+    ``(k, dim)`` payload block), ``erased`` sharded ``P("workers")``; the
+    output keeps the row sharding — the master's gather happens where the
+    decode consumes it (XLA inserts the all-gather at the jit boundary's
+    replicated consumer).
     """
     return shard_map(
         local_products, mesh=mesh,
         in_specs=(P("workers", None), P(), P("workers")),
         out_specs=P("workers"))
+
+
+def local_products_seeded(idx_shard: jax.Array, coeff_shard: jax.Array,
+                          M: jax.Array, theta: jax.Array,
+                          erased_shard: jax.Array) -> jax.Array:
+    """One worker shard's step with the encode FUSED into the matvec.
+
+    Runs INSIDE ``shard_map``.  ``idx_shard``/``coeff_shard`` are this
+    device's ``(rows/device, row_weight)`` generator gather tables —
+    everything it ever stores about the code; ``M (k, k)`` and ``theta``
+    are replicated.  Each device computes ``y = M θ`` locally (replicated
+    math: identical bits everywhere, no communication) and gathers its
+    rows of the codeword — the exact gather+sum
+    :func:`repro.core.encoding.gather_encode` runs on a single device, so
+    products are bit-identical to ``Scheme2.build_seeded``'s.
+    """
+    y = M @ theta
+    z = gather_encode(idx_shard, coeff_shard, y)
+    m = erased_shard
+    while m.ndim < z.ndim:
+        m = m[..., None]
+    return jnp.where(m, 0.0, z)
+
+
+def build_seeded_worker_products(mesh: Mesh):
+    """The seeded sharded worker stage: ``(idx, coeff, M, θ, erased) → z``.
+
+    Gather tables row-sharded ``P("workers", None)``; ``M``/``θ``
+    replicated; ``erased`` sharded ``P("workers")``; output row-sharded
+    like :func:`build_worker_products`'s.
+    """
+    return shard_map(
+        local_products_seeded, mesh=mesh,
+        in_specs=(P("workers", None), P("workers", None), P(), P(),
+                  P("workers")),
+        out_specs=P("workers"))
+
+
+def shard_generator_tables(code: LDPCCode, mesh: Mesh,
+                           topology: WorkerTopology
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Place a seeded code's generator gather tables row-sharded.
+
+    ``(idx (N, row_weight) int32, coeff (N, row_weight) f32)`` with rows
+    split over the workers axis — after this every device holds only its
+    own workers' table rows (a real deployment would regenerate them from
+    ``(seed, row)`` on arrival; here the host builds them once and shards).
+    """
+    topology.validate_mesh(mesh)
+    idx, coeff = seeded_generator_rows(code, 0, code.N)
+    sharding = row_sharding(mesh)
+    return (jax.device_put(jnp.asarray(idx), sharding),
+            jax.device_put(jnp.asarray(coeff), sharding))
 
 
 def shard_encoded_rows(C: jax.Array, mesh: Mesh,

@@ -16,6 +16,13 @@ tiles (``bp`` rows at a time, double-buffered DMA) while the value carry
 lives in VMEM — one launch, same erasure trajectories, problem size bounded
 by HBM instead of one core's VMEM.  ``peel_round_pallas`` keeps the
 single-round check-pass path for experimentation and tests.
+
+The ``peel_decode*_seeded_pallas`` family goes one step further: NO H
+operand at all.  The caller passes a hashable
+``repro.core.ldpc.SeededStructure`` and each ``bp x N`` check tile is
+regenerated in-register from the seed inside the flooding round
+(``seeded_h_tile``), so H costs zero bytes of HBM storage and traffic —
+same erasure trajectories, values bit-identical to the tiled path.
 """
 from repro.kernels.ldpc_peel.kernel import (
     check_pass,
@@ -27,15 +34,24 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_fused_batch_adaptive_tiled,
     decode_fused_batch_tiled,
     decode_fused_tiled,
+    decode_seeded,
+    decode_seeded_adaptive,
+    decode_seeded_batch,
+    decode_seeded_batch_adaptive,
+    seeded_h_tile,
 )
 from repro.kernels.ldpc_peel.ops import (
     peel_decode_adaptive_pallas,
+    peel_decode_adaptive_seeded_pallas,
     peel_decode_adaptive_tiled_pallas,
     peel_decode_batch_adaptive_pallas,
+    peel_decode_batch_adaptive_seeded_pallas,
     peel_decode_batch_adaptive_tiled_pallas,
     peel_decode_batch_pallas,
+    peel_decode_batch_seeded_pallas,
     peel_decode_batch_tiled_pallas,
     peel_decode_pallas,
+    peel_decode_seeded_pallas,
     peel_decode_tiled_pallas,
     peel_round_pallas,
 )
@@ -46,8 +62,14 @@ __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_tiled_pallas", "peel_decode_batch_tiled_pallas",
            "peel_decode_adaptive_tiled_pallas",
            "peel_decode_batch_adaptive_tiled_pallas",
+           "peel_decode_seeded_pallas", "peel_decode_batch_seeded_pallas",
+           "peel_decode_adaptive_seeded_pallas",
+           "peel_decode_batch_adaptive_seeded_pallas",
            "check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive", "decode_fused_batch_adaptive",
            "decode_fused_tiled", "decode_fused_batch_tiled",
            "decode_fused_adaptive_tiled",
-           "decode_fused_batch_adaptive_tiled"]
+           "decode_fused_batch_adaptive_tiled",
+           "decode_seeded", "decode_seeded_batch",
+           "decode_seeded_adaptive", "decode_seeded_batch_adaptive",
+           "seeded_h_tile"]

@@ -53,12 +53,24 @@ TPU notes:
     identical trajectory and rewrite shared outputs consistently
     (benign — the grid is sequential on TPU);
   * tiled kernels stream H with ``pltpu.make_async_copy``: tile ``j+1``'s
-    DMA is started before waiting on tile ``j`` (double buffering).  The
-    cross-ROUND prefetch (starting tile 0 of round ``t+1`` during the last
-    tile of round ``t``) and ``bp``/``bv`` tuning on real TPUs are the
-    recorded follow-ons (ROADMAP);
+    DMA is started before waiting on tile ``j`` (double buffering), and the
+    pipeline runs on a GLOBAL tile counter so tile 0 of round ``t+1`` is
+    prefetched during the LAST tile of round ``t`` (cross-round prefetch —
+    the double buffer never resets at a round boundary); ``bp``/``bv``
+    tuning on real TPUs is the recorded follow-on (ROADMAP);
   * off-TPU everything runs in interpret mode (correct but not fast),
     including the DMA pipeline.
+
+SEEDED kernels (``decode_seeded*``): the same four decode contracts with
+NO H operand at all — each ``bp x N`` tile is regenerated in-register
+inside the round from the code's counter-based seed
+(:class:`repro.core.ldpc.SeededStructure`, passed as a STATIC argument so
+the per-layer affine constants compile into the kernel).  The jnp tile
+generator :func:`seeded_h_tile` is bit-exact against the NumPy reference
+``repro.core.ldpc.seeded_h_rows`` — every step is 32-bit integer
+arithmetic or exact-in-f32 float math — so seeded trajectories are
+bit-identical to every materialized backend on the same code, while the
+operand traffic for H drops to zero bytes.
 """
 from __future__ import annotations
 
@@ -73,6 +85,8 @@ __all__ = ["check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive", "decode_fused_batch_adaptive",
            "decode_fused_tiled", "decode_fused_batch_tiled",
            "decode_fused_adaptive_tiled", "decode_fused_batch_adaptive_tiled",
+           "decode_seeded", "decode_seeded_batch", "decode_seeded_adaptive",
+           "decode_seeded_batch_adaptive", "seeded_h_tile",
            "detect_interpret"]
 
 _HIGH = jax.lax.Precision.HIGHEST
@@ -190,7 +204,8 @@ def _apply_round(vals, e, resolved, scattered):
 
 def _resident_round(H):
     """Round function for a whole-H-in-VMEM tile (the resident kernels)."""
-    def round_body(vals, e):
+    def round_body(vals, e, t):
+        del t                              # no streaming state to rotate
         known = vals * (1.0 - e)
         return _apply_round(vals, e, *_check_tile_proposal(H, known, e))
 
@@ -202,32 +217,46 @@ def _streamed_round(h_hbm, h_scratch, sem, *, bp: int):
 
     ``h_hbm`` is the full ``(p, N)`` ref left in HBM (``memory_space=ANY``,
     ``p % bp == 0``); ``h_scratch (2, bp, N)`` and ``sem (2,)`` are the
-    double-buffered VMEM stream slots.  Tile ``j+1``'s DMA is started
-    before waiting on tile ``j``.  Every tile's proposal is computed
-    against the round-start ``(vals, e)`` and the proposals are merged
+    double-buffered VMEM stream slots.  The pipeline runs on a GLOBAL tile
+    counter ``g = round * n_tiles + j``: slot ``g % 2``, tile ``g %
+    n_tiles``.  Tile ``g+1``'s DMA is started before waiting on tile ``g``
+    — unconditionally, so during round ``t``'s LAST tile the prefetch
+    lands on tile 0 of round ``t+1``: the double buffer never resets at a
+    round boundary and the first tile of every round (after the first) is
+    already in flight when the round starts.  Every tile's proposal is
+    still computed against the round-start ``(vals, e)`` and merged
     first-tile-wins (tiles ascend the check axis, so the winner is the
     globally lowest check row — bit-identical to the resident merge).
+
+    Returns ``(round_body(vals, e, t), prime, drain)``: callers start the
+    pipeline with ``prime()`` before the decode loop and consume the one
+    always-in-flight prefetch with ``drain(rounds_done)`` after it (the
+    loop exits with tile 0 of round ``rounds_done`` outstanding — also
+    true for 0 rounds, where the primed first DMA is the outstanding one).
     """
     n_tiles = h_hbm.shape[0] // bp
 
-    def get_dma(slot, j):
+    def get_dma(g):
         return pltpu.make_async_copy(
-            h_hbm.at[pl.ds(j * bp, bp), :], h_scratch.at[slot], sem.at[slot])
+            h_hbm.at[pl.ds((g % n_tiles) * bp, bp), :],
+            h_scratch.at[g % 2], sem.at[g % 2])
 
-    def round_body(vals, e):
+    def prime():
+        get_dma(0).start()
+
+    def drain(rounds_done):
+        get_dma(rounds_done * n_tiles).wait()
+
+    def round_body(vals, e, t):
         known = vals * (1.0 - e)
-        get_dma(0, 0).start()
+        base = t * n_tiles
 
         def tile_step(j, carry):
             resolved, scattered = carry
-            slot = j % 2
-
-            @pl.when(j + 1 < n_tiles)
-            def _():
-                get_dma((j + 1) % 2, j + 1).start()
-
-            get_dma(slot, j).wait()
-            t_res, t_scat = _check_tile_proposal(h_scratch[slot], known, e)
+            g = base + j
+            get_dma(g + 1).start()         # j == n_tiles-1: next ROUND's tile 0
+            get_dma(g).wait()
+            t_res, t_scat = _check_tile_proposal(h_scratch[g % 2], known, e)
             take = (t_res > 0.0) & (resolved <= 0.0)
             return (jnp.maximum(resolved, t_res),
                     jnp.where(take, t_scat, scattered))
@@ -236,12 +265,15 @@ def _streamed_round(h_hbm, h_scratch, sem, *, bp: int):
             0, n_tiles, tile_step, (jnp.zeros_like(e), jnp.zeros_like(vals)))
         return _apply_round(vals, e, resolved, scattered)
 
-    return round_body
+    return round_body, prime, drain
 
 
 def _fixed_loop(round_body, vals, e, iters: int):
-    """Exactly ``iters`` flooding rounds (the paper's fixed-D decode)."""
-    return jax.lax.fori_loop(0, iters, lambda _, c: round_body(*c), (vals, e))
+    """Exactly ``iters`` flooding rounds (the paper's fixed-D decode).
+    The round index is passed through so streamed rounds can keep their
+    cross-round DMA pipeline position."""
+    return jax.lax.fori_loop(0, iters, lambda t, c: round_body(*c, t),
+                             (vals, e))
 
 
 def _adaptive_loop(round_body, vals, e, budget):
@@ -255,7 +287,7 @@ def _adaptive_loop(round_body, vals, e, budget):
 
     def body(carry):
         vals_, e_, d, _ = carry
-        vals2, e2 = round_body(vals_, e_)
+        vals2, e2 = round_body(vals_, e_, d)
         return vals2, e2, d + 1, jnp.any(e2 != e_)
 
     vals, e, d, _ = jax.lax.while_loop(
@@ -513,8 +545,10 @@ def _check_tiled_operands(p: int, N: int, V: int, bp: int, bv: int) -> None:
 def _decode_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
                          out_erased_ref, h_scratch, sem, *, iters: int,
                          bp: int):
-    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    round_body, prime, drain = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    prime()
     vals, e = _fixed_loop(round_body, vals_ref[...], erased_ref[...], iters)
+    drain(jnp.int32(iters))
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
 
@@ -562,8 +596,10 @@ def decode_fused_tiled(H: jax.Array, values: jax.Array, erased_f: jax.Array,
 def _decode_batch_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
                                out_erased_ref, h_scratch, sem, *, iters: int,
                                bp: int):
-    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    round_body, prime, drain = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    prime()
     vals, e = _fixed_loop(round_body, vals_ref[0], erased_ref[0], iters)
+    drain(jnp.int32(iters))
     out_vals_ref[0] = vals
     out_erased_ref[0] = e
 
@@ -611,9 +647,11 @@ def decode_fused_batch_tiled(H: jax.Array, values: jax.Array,
 def _decode_adaptive_tiled_kernel(H_hbm, vals_ref, erased_ref, out_vals_ref,
                                   out_erased_ref, out_rounds_ref, h_scratch,
                                   sem, *, max_iters: int, bp: int):
-    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    round_body, prime, drain = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    prime()
     vals, e, d = _adaptive_loop(round_body, vals_ref[...], erased_ref[...],
                                 max_iters)
+    drain(d)
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
     out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
@@ -666,9 +704,11 @@ def _decode_batch_adaptive_tiled_kernel(H_hbm, vals_ref, erased_ref,
                                         budget_ref, out_vals_ref,
                                         out_erased_ref, out_rounds_ref,
                                         h_scratch, sem, *, bp: int):
-    round_body = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    round_body, prime, drain = _streamed_round(H_hbm, h_scratch, sem, bp=bp)
+    prime()
     vals, e, d = _adaptive_loop(round_body, vals_ref[0], erased_ref[0],
                                 budget_ref[0, 0])  # THIS slot's round budget
+    drain(d)
     out_vals_ref[0] = vals
     out_erased_ref[0] = e
     out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
@@ -714,3 +754,309 @@ def decode_fused_batch_adaptive_tiled(H: jax.Array, values: jax.Array,
         scratch_shapes=_tiled_scratch(bp, N),
         interpret=interpret,
     )(H, values, erased_f, budgets)
+
+
+# --------------------------------------------------- seeded tiled decodes --
+#
+# The same four contracts with the DMA'd H scratch replaced by in-register
+# tile GENERATION: no H operand, no stream slots, no semaphores — the only
+# HBM traffic is the (N, bv) payload carry and masks.  The structure spec
+# (repro.core.ldpc.SeededStructure — plain ints/tuples, hashable) is a
+# STATIC argument, so the per-layer affine constants are compiled into the
+# kernel and tile regeneration is pure VPU arithmetic on iotas.
+
+
+def _mix32_jnp(x):
+    """jnp twin of ``repro.core.ldpc._mix32`` (lowbias32 avalanche).
+
+    uint32 in, uint32 out; multiplication wraps mod 2^32 and ``>>`` on an
+    unsigned dtype is a logical shift, so every intermediate matches the
+    NumPy reference bit for bit.
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def seeded_h_tile(spec, row0, bp: int, n_pad: int):
+    """Regenerate the dense ``(bp, n_pad)`` H tile at check row ``row0``.
+
+    Pure jnp — usable inside a Pallas kernel body or as a plain traced
+    function (the bit-exactness tests call it directly).  Bit-exact against
+    ``repro.core.ldpc.seeded_h_rows(spec, row0, row0 + bp)`` padded with
+    zero columns to ``n_pad``: column draws are int32 affine arithmetic
+    (``spec`` bounds the stride so ``a*x + b`` never overflows), edge
+    weights are uint32 hash bits mapped through exact f32 steps.  Rows past
+    ``spec.rows`` (check-axis padding) come out all-zero — never solvable,
+    exactly like the zero-padded rows the materialized wrappers append.
+
+    ``row0`` may be traced (the tile loop's ``j * bp``); ``bp``/``n_pad``
+    are static.
+    """
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bp, 1), 0)  # global
+    t = rows // spec.rows_per_layer
+    a = jnp.zeros((bp, 1), jnp.int32)
+    b = jnp.zeros((bp, 1), jnp.int32)
+    for tt in range(spec.layers):          # static unroll: layers == l (small)
+        a = jnp.where(t == tt, jnp.int32(spec.strides[tt]), a)
+        b = jnp.where(t == tt, jnp.int32(spec.offsets[tt]), b)
+    jl = rows - t * spec.rows_per_layer
+    valid = (rows < spec.rows).astype(jnp.float32)      # (bp, 1) row mask
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (bp, n_pad), 1)
+    H = jnp.zeros((bp, n_pad), jnp.float32)
+    for s in range(spec.row_weight):       # static unroll: r compares + FMAs
+        x = jl * spec.row_weight + s
+        col = (a * x + b) % spec.cols      # int32-safe by the stride bound
+        edge = (rows * spec.row_weight + s).astype(jnp.uint32)
+        u = _mix32_jnp(edge ^ jnp.uint32(spec.wseed))
+        sign = 1.0 - 2.0 * (u & 1).astype(jnp.float32)
+        m = (u >> 9).astype(jnp.int32).astype(jnp.float32)   # [0, 2^23)
+        w = sign * (1.0 + m * jnp.float32(2.0 ** -23))       # exact f32
+        H = H + (col_iota == col).astype(jnp.float32) * (w * valid)
+    return H
+
+
+def _seeded_round(spec, *, bp: int, p_pad: int, n_pad: int):
+    """Round function regenerating H tiles from the seed (no DMA at all).
+
+    Mirrors :func:`_streamed_round`'s tile loop and first-tile-wins merge
+    exactly — tiles ascend the check axis against the round-start state —
+    so the seeded trajectory is bit-identical to the streamed/resident
+    ones on the same code; the only difference is where the tile's floats
+    come from.
+    """
+    n_tiles = p_pad // bp
+
+    def round_body(vals, e, t):
+        del t                              # no pipeline position to keep
+        known = vals * (1.0 - e)
+
+        def tile_step(j, carry):
+            resolved, scattered = carry
+            H_tile = seeded_h_tile(spec, j * bp, bp, n_pad)
+            t_res, t_scat = _check_tile_proposal(H_tile, known, e)
+            take = (t_res > 0.0) & (resolved <= 0.0)
+            return (jnp.maximum(resolved, t_res),
+                    jnp.where(take, t_scat, scattered))
+
+        resolved, scattered = jax.lax.fori_loop(
+            0, n_tiles, tile_step, (jnp.zeros_like(e), jnp.zeros_like(vals)))
+        return _apply_round(vals, e, resolved, scattered)
+
+    return round_body
+
+
+def _check_seeded_operands(spec, N: int, V: int, bp: int, bv: int) -> None:
+    if N % 128 or V % bv or N < spec.cols or bp % 8:
+        raise ValueError(
+            "seeded decode operands must be pre-padded (ops.py wrappers do "
+            f"this): need N % 128 == 0, V % bv == 0, N >= spec.cols, "
+            f"bp % 8 == 0; got N={N} (cols={spec.cols}), V={V} bv={bv}, "
+            f"bp={bp}")
+
+
+def _seeded_p_pad(spec, bp: int) -> int:
+    """Check-axis extent of the tile loop: spec.rows rounded up to bp."""
+    return spec.rows + (-spec.rows) % bp
+
+
+def _decode_seeded_kernel(vals_ref, erased_ref, out_vals_ref, out_erased_ref,
+                          *, spec, iters: int, bp: int):
+    N = vals_ref.shape[0]
+    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
+                               n_pad=N)
+    vals, e = _fixed_loop(round_body, vals_ref[...], erased_ref[...], iters)
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "iters", "bp", "bv", "interpret"))
+def decode_seeded(spec, values: jax.Array, erased_f: jax.Array, *,
+                  iters: int, bp: int = 128, bv: int = 128,
+                  interpret: bool | None = None):
+    """Fixed-``iters`` decode with H REGENERATED from the seed per tile.
+
+    Inputs (already padded by ops.py): values (N, V) f32 with N % 128 == 0
+    covering ``spec.cols`` (padded columns are all-zero in the generated
+    tiles, so they never move), erased_f (N, 1) f32.  ``spec`` is the
+    static :class:`repro.core.ldpc.SeededStructure`.  Same trajectory and
+    output contract as :func:`decode_fused` / :func:`decode_fused_tiled`
+    on the materialized H of the same code; the VMEM working set is ONE
+    generated ``(bp, N)`` tile plus the ``(N, bv)`` carry, and H
+    contributes ZERO bytes of operand traffic.
+    """
+    interpret = detect_interpret(interpret)
+    N = values.shape[0]
+    V = values.shape[1]
+    _check_seeded_operands(spec, N, V, bp, bv)
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_seeded_kernel, spec=spec, iters=iters,
+                          bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, erased_f)
+
+
+def _decode_seeded_batch_kernel(vals_ref, erased_ref, out_vals_ref,
+                                out_erased_ref, *, spec, iters: int, bp: int):
+    N = vals_ref.shape[1]
+    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
+                               n_pad=N)
+    vals, e = _fixed_loop(round_body, vals_ref[0], erased_ref[0], iters)
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "iters", "bp", "bv", "interpret"))
+def decode_seeded_batch(spec, values: jax.Array, erased_f: jax.Array, *,
+                        iters: int, bp: int = 128, bv: int = 128,
+                        interpret: bool | None = None):
+    """``B`` independent patterns, H regenerated from the seed per tile.
+
+    Same contract as :func:`decode_fused_batch_tiled` (values (B, N, V),
+    erased_f (B, N, 1), both padded) minus the H operand: every grid step
+    re-generates the tiles instead of re-streaming them, so the per-slot
+    marginal HBM traffic is the payload alone.
+    """
+    interpret = detect_interpret(interpret)
+    B, N, V = values.shape
+    _check_seeded_operands(spec, N, V, bp, bv)
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        functools.partial(_decode_seeded_batch_kernel, spec=spec,
+                          iters=iters, bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, erased_f)
+
+
+def _decode_seeded_adaptive_kernel(vals_ref, erased_ref, out_vals_ref,
+                                   out_erased_ref, out_rounds_ref, *, spec,
+                                   max_iters: int, bp: int):
+    N = vals_ref.shape[0]
+    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
+                               n_pad=N)
+    vals, e, d = _adaptive_loop(round_body, vals_ref[...], erased_ref[...],
+                                max_iters)
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "max_iters", "bp", "bv",
+                                             "interpret"))
+def decode_seeded_adaptive(spec, values: jax.Array, erased_f: jax.Array, *,
+                           max_iters: int, bp: int = 128, bv: int = 128,
+                           interpret: bool | None = None):
+    """Early-exit decode with seed-regenerated tiles: an early exit stops
+    the tile regeneration compute the way it stops the tiled kernel's H
+    streaming.  Same stopping rule and outputs as
+    :func:`decode_fused_adaptive` (values (N, V), erased (N, 1), rounds
+    (1, 1))."""
+    interpret = detect_interpret(interpret)
+    N, V = values.shape
+    _check_seeded_operands(spec, N, V, bp, bv)
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_decode_seeded_adaptive_kernel, spec=spec,
+                          max_iters=max_iters, bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, bv), lambda j: (0, j)),
+            pl.BlockSpec((N, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, V), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, erased_f)
+
+
+def _decode_seeded_batch_adaptive_kernel(vals_ref, erased_ref, budget_ref,
+                                         out_vals_ref, out_erased_ref,
+                                         out_rounds_ref, *, spec, bp: int):
+    N = vals_ref.shape[1]
+    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
+                               n_pad=N)
+    vals, e, d = _adaptive_loop(round_body, vals_ref[0], erased_ref[0],
+                                budget_ref[0, 0])  # THIS slot's round budget
+    out_vals_ref[0] = vals
+    out_erased_ref[0] = e
+    out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "bp", "bv", "interpret"))
+def decode_seeded_batch_adaptive(spec, values: jax.Array,
+                                 erased_f: jax.Array, budgets: jax.Array, *,
+                                 bp: int = 128, bv: int = 128,
+                                 interpret: bool | None = None):
+    """Per-slot adaptive decode of ``B`` patterns, seed-regenerated tiles.
+
+    Same contract as :func:`decode_fused_batch_adaptive_tiled` (budgets
+    (B, 1) int32 stays a TRACED operand) without the H operand: a light
+    slot stops its regeneration compute after 1-2 rounds and no slot ever
+    touches HBM for H.
+    """
+    interpret = detect_interpret(interpret)
+    B, N, V = values.shape
+    _check_seeded_operands(spec, N, V, bp, bv)
+    grid = (B, V // bv)
+    return pl.pallas_call(
+        functools.partial(_decode_seeded_batch_adaptive_kernel, spec=spec,
+                          bp=bp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),      # slot budget
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((1, N, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values, erased_f, budgets)

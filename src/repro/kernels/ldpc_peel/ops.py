@@ -30,6 +30,11 @@
 ``interpret`` defaults to ``None`` = backend-detected: compiled on TPU,
 interpret mode elsewhere (CPU CI runs the same kernel code path, slowly but
 bit-faithfully).
+
+The ``peel_decode*_seeded_pallas`` family wraps the SEEDED kernels: no H
+argument at all — the caller passes the hashable
+``repro.core.ldpc.SeededStructure`` spec (a static argument) and each tile
+is regenerated in-register from the seed.  Only the payload is padded.
 """
 from __future__ import annotations
 
@@ -49,6 +54,10 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_fused_batch_adaptive_tiled,
     decode_fused_batch_tiled,
     decode_fused_tiled,
+    decode_seeded,
+    decode_seeded_adaptive,
+    decode_seeded_batch,
+    decode_seeded_batch_adaptive,
     detect_interpret,
 )
 
@@ -57,7 +66,10 @@ __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_batch_adaptive_pallas",
            "peel_decode_tiled_pallas", "peel_decode_batch_tiled_pallas",
            "peel_decode_adaptive_tiled_pallas",
-           "peel_decode_batch_adaptive_tiled_pallas"]
+           "peel_decode_batch_adaptive_tiled_pallas",
+           "peel_decode_seeded_pallas", "peel_decode_batch_seeded_pallas",
+           "peel_decode_adaptive_seeded_pallas",
+           "peel_decode_batch_adaptive_seeded_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -386,4 +398,149 @@ def peel_decode_batch_adaptive_tiled_pallas(H, values, erased, budgets, *,
     :func:`peel_decode_batch_adaptive_pallas` (budgets stay traced)."""
     return _peel_decode_batch_adaptive_tiled_impl(
         H, values, erased, jnp.asarray(budgets),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+
+
+# ------------------------------------------------------- seeded family --
+
+
+def _pad_operands_seeded(vals, erased_f, bv):
+    """Pad ONCE for a whole seeded decode: only the PAYLOAD needs padding
+    (N → multiple of 128, V → multiple of ``bv``) — there is no H operand;
+    the kernel's generated tiles are zero on padded columns and padded
+    check rows by construction."""
+    vp = pad_axis_to(pad_axis_to(vals.astype(jnp.float32), 128, -2), bv, -1)
+    ep = pad_axis_to(erased_f, 128, -2)
+    return vp, ep
+
+
+@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv"))
+def _peel_decode_seeded_impl(values, erased, *, spec, iters: int,
+                             interpret: bool, bp: int = 128, bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+
+    bp_eff = _effective_bp(spec.rows, bp)
+    vp, ep = _pad_operands_seeded(vals, erased.astype(jnp.float32)[:, None],
+                                  bv)
+    out_v, out_e = decode_seeded(spec, vp, ep, iters=iters, bp=bp_eff,
+                                 bv=min(bv, vp.shape[1]), interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_seeded_pallas(spec, values, erased, iters: int, *,
+                              interpret: bool | None = None, bp: int = 128,
+                              bv: int = 128):
+    """Fixed-D decode in ONE launch with H REGENERATED from the seed.
+
+    ``spec`` is the static :class:`repro.core.ldpc.SeededStructure`; values
+    (N,) or (N, V); erased (N,) bool.  Same erasure trajectory as every
+    materialized backend on the same code and bit-identical VALUES to the
+    tiled path (same tile-shaped summation); zero H operand traffic.
+    """
+    return _peel_decode_seeded_impl(values, erased, spec=spec,
+                                    iters=int(iters),
+                                    interpret=detect_interpret(interpret),
+                                    bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv"))
+def _peel_decode_batch_seeded_impl(values, erased, *, spec, iters: int,
+                                   interpret: bool, bp: int = 128,
+                                   bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    bp_eff = _effective_bp(spec.rows, bp)
+    vp, ep = _pad_operands_seeded(vals,
+                                  erased.astype(jnp.float32)[:, :, None], bv)
+    out_v, out_e = decode_seeded_batch(spec, vp, ep, iters=iters, bp=bp_eff,
+                                       bv=min(bv, vp.shape[2]),
+                                       interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_batch_seeded_pallas(spec, values, erased, iters: int, *,
+                                    interpret: bool | None = None,
+                                    bp: int = 128, bv: int = 128):
+    """Fixed-D decode of B independent patterns, H regenerated from the
+    seed per grid step.  Same contract as
+    :func:`peel_decode_batch_tiled_pallas` minus the H operand."""
+    return _peel_decode_batch_seeded_impl(
+        values, erased, spec=spec, iters=int(iters),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+
+
+@partial(jax.jit,
+         static_argnames=("spec", "max_iters", "interpret", "bp", "bv"))
+def _peel_decode_adaptive_seeded_impl(values, erased, *, spec,
+                                      max_iters: int, interpret: bool,
+                                      bp: int = 128, bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+
+    bp_eff = _effective_bp(spec.rows, bp)
+    vp, ep = _pad_operands_seeded(vals, erased.astype(jnp.float32)[:, None],
+                                  bv)
+    out_v, out_e, rounds = decode_seeded_adaptive(
+        spec, vp, ep, max_iters=max_iters, bp=bp_eff,
+        bv=min(bv, vp.shape[1]), interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased, rounds[0, 0]
+
+
+def peel_decode_adaptive_seeded_pallas(spec, values, erased, max_iters: int,
+                                       *, interpret: bool | None = None,
+                                       bp: int = 128, bv: int = 128):
+    """Early-exit decode in ONE launch, H regenerated from the seed.  Same
+    stopping rule and contract as :func:`peel_decode_adaptive_tiled_pallas`
+    minus the H operand."""
+    return _peel_decode_adaptive_seeded_impl(
+        values, erased, spec=spec, max_iters=int(max_iters),
+        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret", "bp", "bv"))
+def _peel_decode_batch_adaptive_seeded_impl(values, erased, budgets, *, spec,
+                                            interpret: bool, bp: int = 128,
+                                            bv: int = 128):
+    squeeze = values.ndim == 2  # (B, N) scalar payloads
+    vals = values[:, :, None] if squeeze else values
+    B, N, V = vals.shape
+
+    bp_eff = _effective_bp(spec.rows, bp)
+    vp, ep = _pad_operands_seeded(vals,
+                                  erased.astype(jnp.float32)[:, :, None], bv)
+    out_v, out_e, rounds = decode_seeded_batch_adaptive(
+        spec, vp, ep, budgets.astype(jnp.int32)[:, None], bp=bp_eff,
+        bv=min(bv, vp.shape[2]), interpret=interpret)
+    out_vals = out_v[:, :N, :V].astype(vals.dtype)
+    out_erased = out_e[:, :N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, :, 0]
+    return out_vals, out_erased, rounds[:, 0]
+
+
+def peel_decode_batch_adaptive_seeded_pallas(spec, values, erased, budgets,
+                                             *, interpret: bool | None = None,
+                                             bp: int = 128, bv: int = 128):
+    """Per-slot adaptive decode of B independent patterns in ONE launch, H
+    regenerated from the seed per slot.  Same contract as
+    :func:`peel_decode_batch_adaptive_tiled_pallas` (budgets stay traced)."""
+    return _peel_decode_batch_adaptive_seeded_impl(
+        values, erased, jnp.asarray(budgets), spec=spec,
         interpret=detect_interpret(interpret), bp=bp, bv=bv)

@@ -31,6 +31,15 @@ master/worker collective mix instead of an undifferentiated sharded step.
 
   python -m repro.launch.paper_dryrun --k 32768 --distributed --decode sparse
 
+``--seeded`` (with ``--decode pallas``) swaps the decode for the SEEDED
+kernel: the step carries NO (p, N) parity-check operand — each check tile
+is regenerated from ``(seed, row)`` inside the kernel — so the dry-run
+lowers and compiles at K where even materializing H would exceed host
+memory (e.g. ``--k 131072 --K 131072``: H alone would be 128 GiB f32).
+
+  python -m repro.launch.paper_dryrun --k 131072 --K 131072 \\
+      --decode pallas --seeded
+
 Writes artifacts/dryrun/paper-coded-gd__scheme2-k<k>-D<D>-<dtype>__<mesh>.json
 """
 import argparse
@@ -55,6 +64,10 @@ def main(argv=None):
     ap.add_argument("--dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--decode", default="dense",
                     choices=["dense", "dense-fused", "sparse", "pallas"])
+    ap.add_argument("--seeded", action="store_true",
+                    help="seeded on-the-fly H decode (pallas only): no "
+                         "(p, N) parity-check operand; compiles at K where "
+                         "materializing H would exceed host memory")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--distributed", action="store_true",
                     help="master/worker runtime step: explicit "
@@ -64,8 +77,15 @@ def main(argv=None):
 
     dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
 
+    if args.seeded and args.decode != "pallas":
+        raise SystemExit("--seeded requires --decode pallas (the seeded "
+                         "on-the-fly H generation is a Pallas kernel)")
+
     t0 = time.time()
     if args.distributed:
+        if args.seeded:
+            raise SystemExit("--seeded is for the sharded-tensor step; "
+                             "drop --distributed")
         if args.multi_pod:
             raise SystemExit("--distributed is single-pod only (16x16 "
                              "workers x data); drop --multi-pod")
@@ -84,7 +104,8 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         mesh_desc = "2x16x16" if args.multi_pod else "16x16"
         jitted, specs = build_coded_gd_step(args.k, args.K, args.decode_iters,
-                                            dtype, mesh, decode=args.decode)
+                                            dtype, mesh, decode=args.decode,
+                                            seed=0 if args.seeded else None)
     lowered = jitted.lower(*specs)
     t_lower = time.time() - t0
     t0 = time.time()
@@ -96,7 +117,8 @@ def main(argv=None):
     N, p, nb = 2 * args.K, args.K, args.k // args.K
     mflops = 2 * N * args.k * nb + args.decode_iters * 2 * p * N * nb
     shape_tag = (f"scheme2-k{args.k}-D{args.decode_iters}-{args.dtype}"
-                 f"-{args.decode}" + ("-dist" if args.distributed else ""))
+                 f"-{args.decode}" + ("-seeded" if args.seeded else "")
+                 + ("-dist" if args.distributed else ""))
     rep = analyze_compiled(compiled, arch="paper-coded-gd", shape=shape_tag,
                            mesh_desc=mesh_desc, chips=mesh.devices.size,
                            mflops=float(mflops))

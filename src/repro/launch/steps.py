@@ -117,7 +117,8 @@ def build_step(cfg: ArchConfig, mesh, shape_name: str, *,
 def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
                         mesh, *, decode: str = "dense", r: int = 6,
                         bp: int | None = None,
-                        vmem_budget_bytes: int | None = None):
+                        vmem_budget_bytes: int | None = None,
+                        seed: int | None = None):
     """Functional Scheme2Blocked step at scale, with explicit shardings.
 
     Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
@@ -152,6 +153,15 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
                     H bandwidth; off-TPU the kernel lowers via interpret
                     mode, so compile works everywhere but the HLO op mix is
                     the emulated kernel, not Mosaic.
+
+    ``seed`` (pallas only) switches the decode to the SEEDED kernel
+    (``peel_decode_seeded_pallas``): the step takes NO H operand at all —
+    each ``bp × N`` check tile is regenerated from ``(seed, row)`` inside
+    the kernel — so the step lowers and compiles at N where even
+    materializing the (p, N) parity-check matrix would exceed host memory.
+    The seeded ensemble is the (4, 8)-regular layered-permutation one
+    (``repro.core.ldpc.seeded_structure``), which the rate-1/2 shape here
+    (p = K, N = 2K) satisfies for any K divisible by 4.
 
     Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
     """
@@ -207,11 +217,33 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
         return jax.jit(step_fused, in_shardings=in_sh,
                        out_shardings=sh()), args
 
+    if seed is not None and decode != "pallas":
+        raise ValueError("seed= (the seeded on-the-fly H decode) requires "
+                         f"decode='pallas'; got {decode!r}")
+
     if decode == "pallas":
         from repro.core.decoder import pick_tile_bp, vmem_bytes_estimate
         from repro.core.decoder import _DEFAULT_VMEM_BUDGET_BYTES
         from repro.kernels.ldpc_peel import (peel_decode_pallas,
+                                             peel_decode_seeded_pallas,
                                              peel_decode_tiled_pallas)
+
+        if seed is not None:
+            # Seeded on-the-fly H: no (p, N) operand anywhere in the step.
+            from repro.core.ldpc import seeded_structure
+            spec = seeded_structure(p, N, 8, seed)
+            bp_seeded = bp if bp is not None else 128
+
+            def step_seeded(C_blocks, theta, b, mask, lr):
+                z = worker_products(C_blocks, theta, mask)
+                vals, erased = peel_decode_seeded_pallas(
+                    spec, z, mask, decode_iters, bp=bp_seeded, bv=8)
+                return update(vals, erased, theta, b, lr)
+
+            args = (c_spec, *common)
+            in_sh = (sh(None, "model", dspec), *common_sh)
+            return jax.jit(step_seeded, in_shardings=in_sh,
+                           out_shardings=sh()), args
 
         budget = vmem_budget_bytes or _DEFAULT_VMEM_BUDGET_BYTES
         tiled = vmem_bytes_estimate((p, N), bv=8) > budget

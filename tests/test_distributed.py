@@ -298,3 +298,56 @@ def test_build_distributed_gd_step_lowers():
     with pytest.raises(ValueError):
         build_distributed_gd_step(256, 128, 4, jnp.float32, mesh,
                                   decode="pallas")
+
+
+# ------------------------------------------------ seeded workers & grad-agg
+
+
+def test_seeded_worker_encode_bit_parity():
+    """worker_encode="seeded": workers hold only generator gather tables,
+    fuse encode into the matvec — bit-identical to the single-device
+    Scheme2.build_seeded trajectory under the lifted masks."""
+    assert check_parity(K=K, n_workers=8, steps=5, q0=0.25,
+                        backend="sparse", worker_encode="seeded") == 5
+
+
+def test_seeded_worker_encode_validates_scheme():
+    """A materialized scheme cannot drive seeded workers (there are no
+    gather tables to shard; C is the encoded operator, not M)."""
+    topo = WorkerTopology(8, CODE.N)
+    with pytest.raises(ValueError, match="build_seeded"):
+        DistributedCodedGD(_scheme(), topo, make_worker_mesh(),
+                           worker_encode="seeded")
+
+
+def test_distributed_grad_agg_bit_parity():
+    """DistributedCodedAggregator (2-D payload worker launch) vs the
+    single-device CodedAggregator, bit for bit, several masks."""
+    from repro.distributed.selfcheck import check_grad_agg_parity
+    assert check_grad_agg_parity(n_shards=64, dim=17, n_workers=8,
+                                 steps=4, q0=0.25) == 4
+
+
+def test_seeded_and_grad_agg_parity_subprocess():
+    """The two new selfcheck modes on the REAL fake-8-device mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.selfcheck",
+         "--workers", "8", "--steps", "4", "--backends", "sparse",
+         "--worker-encode", "seeded"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert res.returncode == 0, f"selfcheck failed:\n{res.stdout}\n{res.stderr}"
+    assert "parity OK" in res.stdout
+    assert "worker_encode=seeded" in res.stdout
+    assert "devices=8" in res.stdout
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.selfcheck",
+         "--workers", "8", "--steps", "4", "--backends", "sparse",
+         "--grad-agg"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert res.returncode == 0, f"selfcheck failed:\n{res.stdout}\n{res.stderr}"
+    assert "parity OK: grad-agg" in res.stdout
+    assert "devices=8" in res.stdout

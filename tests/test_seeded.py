@@ -1,0 +1,337 @@
+"""Seeded on-the-fly LDPC structure: determinism, kernel parity, encode.
+
+The seeded construction's contract (core/ldpc.py): every check row of the
+(l, r)-regular layered-permutation ensemble is a pure O(r) function of
+``(seed, row)`` — the same bits on every host, device, and process — so
+kernels regenerate H tiles in-register (``backend="pallas_seeded"``, zero H
+operand traffic) and workers regenerate generator rows instead of holding
+encoded-operator rows.  These tests pin:
+
+* per-row determinism ACROSS PROCESSES (hash equality in subprocesses);
+* the in-kernel tile generator (`seeded_h_tile`, jnp) bit-exact against
+  the host-side reference (`seeded_h_rows`, NumPy), including check-row
+  and column padding;
+* exact (l, r)-biregularity of the materialized ensemble;
+* all four seeded decode entry points at N = 8192 (interpret mode),
+  erasure trajectories bit-identical to the sparse backend and VALUES
+  bit-identical to the tiled kernel (same tile-shaped summation);
+* structure-only decode (`SeededLDPC` — no materialized H anywhere);
+* the seeded encode path (`encode_moment_seeded`, `Scheme2.build_seeded`)
+  against the materialized generator, and its error paths;
+* the benchmark-side failover when ``pallas_seeded`` is forced on a code
+  that carries no seed.
+"""
+import functools
+import hashlib
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Scheme2, second_moment
+from repro.core.decoder import (
+    peel_decode,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    peel_decode_batch_adaptive,
+    resolve_backend,
+)
+from repro.core.encoding import (
+    encode_moment,
+    encode_moment_seeded,
+    gather_encode,
+    generator_gather_tables,
+)
+from repro.core.ldpc import (
+    SeededLDPC,
+    make_parity_only_ldpc,
+    make_seeded_ldgm,
+    make_seeded_ldpc,
+    seeded_generator_rows,
+    seeded_h_rows,
+    seeded_structure,
+    seeded_structure_of,
+)
+from repro.data import make_linear_problem
+
+REPO = Path(__file__).resolve().parents[1]
+D = 5
+
+
+@functools.lru_cache(maxsize=None)
+def _seeded_code(K):
+    return make_seeded_ldpc(K, l=4, r=8, seed=0)
+
+
+def _instance(code, *, q=0.25, seed=0, V=None):
+    rng = np.random.default_rng(seed)
+    shape = (code.N,) if V is None else (code.N, V)
+    vals = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    erased = jnp.asarray(rng.random(code.N) < q)
+    rx = jnp.where(erased if V is None else erased[:, None], 0.0, vals)
+    return rx, erased
+
+
+# ---------------------------------------------------------- determinism --
+
+
+def test_seeded_rows_deterministic_across_processes():
+    """The whole point of the counter-based construction: any process can
+    regenerate any row range bit-for-bit from (seed, row) alone."""
+    st = seeded_structure(1024, 2048, 8, seed=7)
+    here = hashlib.sha256(
+        np.ascontiguousarray(seeded_h_rows(st, 64, 192)).tobytes()
+    ).hexdigest()
+    prog = (
+        "import hashlib, numpy as np\n"
+        "from repro.core.ldpc import seeded_structure, seeded_h_rows\n"
+        "st = seeded_structure(1024, 2048, 8, seed=7)\n"
+        "h = hashlib.sha256(np.ascontiguousarray("
+        "seeded_h_rows(st, 64, 192)).tobytes()).hexdigest()\n"
+        "print(h)\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for _ in range(2):
+        res = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True, timeout=300,
+                             env=env, cwd=REPO)
+        assert res.returncode == 0, res.stderr
+        assert res.stdout.strip() == here
+
+
+@pytest.mark.parametrize("row0,bp,n_pad", [
+    (0, 128, 2048),      # interior tile, no padding
+    (896, 256, 2176),    # column padding (n_pad > cols)
+    (960, 128, 2048),    # last tile crosses spec.rows (check padding)
+])
+def test_kernel_tile_matches_host_rows(row0, bp, n_pad):
+    """The jnp in-kernel tile generator is bit-exact against the NumPy
+    reference, including zeroed pad rows and pad columns — f32 weights are
+    sign·(1 + m·2^-23), exact in both arithmetics."""
+    from repro.kernels.ldpc_peel import seeded_h_tile
+
+    st = seeded_structure(1024, 2048, 8, seed=3)
+    tile = np.asarray(seeded_h_tile(st, row0, bp, n_pad))
+    assert tile.shape == (bp, n_pad)
+    hi = min(row0 + bp, st.rows)
+    ref = seeded_h_rows(st, row0, hi)
+    np.testing.assert_array_equal(tile[: hi - row0, : st.cols], ref)
+    assert (tile[hi - row0:] == 0.0).all()          # padded check rows
+    assert (tile[:, st.cols:] == 0.0).all()         # padded columns
+
+
+def test_degree_profile_exactly_biregular():
+    """Every check row has exactly r nonzeros, every variable column
+    exactly l — the layered-permutation ensemble is biregular by
+    construction, not in expectation; weights have magnitude in [1, 2)."""
+    for seed in range(3):
+        code = make_seeded_ldpc(512, l=4, r=8, seed=seed)
+        H = np.asarray(code.H)
+        nz = H != 0.0
+        np.testing.assert_array_equal(nz.sum(axis=1), 8)
+        np.testing.assert_array_equal(nz.sum(axis=0), 4)
+        mags = np.abs(H[nz])
+        assert ((mags >= 1.0) & (mags < 2.0)).all()
+
+
+def test_distinct_seeds_distinct_structures():
+    a = seeded_h_rows(seeded_structure(256, 512, 8, seed=0), 0, 256)
+    b = seeded_h_rows(seeded_structure(256, 512, 8, seed=1), 0, 256)
+    assert (a != b).any()
+
+
+# ---------------------------------------------------------- decode parity --
+
+
+def test_seeded_values_bit_identical_to_tiled():
+    """The seeded round is the tiled round with generation replacing DMA:
+    same tile-shaped summation, same merge winner — VALUES (not just the
+    trajectory) must match the tiled kernel bit for bit."""
+    code = _seeded_code(1024)
+    rx, erased = _instance(code, seed=1)
+    for bp in (128, 512):
+        tiled = peel_decode(code, rx, erased, D, backend="pallas_tiled",
+                            bp=bp, bv=8)
+        seeded = peel_decode(code, rx, erased, D, backend="pallas_seeded",
+                             bp=bp, bv=8)
+        np.testing.assert_array_equal(np.asarray(seeded.values),
+                                      np.asarray(tiled.values))
+        np.testing.assert_array_equal(np.asarray(seeded.erased),
+                                      np.asarray(tiled.erased))
+
+
+def test_all_four_seeded_variants_at_8192():
+    """The acceptance config: fixed, adaptive, batch, and batch-adaptive
+    seeded decodes at N = 8192 (interpret mode), erasure trajectories
+    bit-identical to the sparse backend on the same code."""
+    code = _seeded_code(4096)
+    kw = dict(backend="pallas_seeded", bp=512, bv=8)
+
+    # fixed
+    rx, erased = _instance(code, seed=2)
+    ref = peel_decode(code, rx, erased, D, backend="sparse")
+    got = peel_decode(code, rx, erased, D, **kw)
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    still = ~np.asarray(erased)
+    np.testing.assert_array_equal(np.asarray(got.values)[still],
+                                  np.asarray(ref.values)[still])
+
+    # adaptive: same fixpoint, real round count
+    ref_a = peel_decode_adaptive(code, rx, erased, 16, backend="sparse")
+    got_a = peel_decode_adaptive(code, rx, erased, 16, **kw)
+    np.testing.assert_array_equal(np.asarray(got_a.erased),
+                                  np.asarray(ref_a.erased))
+    assert int(got_a.rounds_used) == int(ref_a.rounds_used)
+
+    # batch of independent patterns
+    B = 3
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.standard_normal((B, code.N)), jnp.float32)
+    er_B = jnp.asarray(rng.random((B, code.N)) < 0.25)
+    rx_B = jnp.where(er_B, 0.0, vals)
+    ref_b = peel_decode_batch(code, rx_B, er_B, D, backend="sparse")
+    got_b = peel_decode_batch(code, rx_B, er_B, D, **kw)
+    np.testing.assert_array_equal(np.asarray(got_b.erased),
+                                  np.asarray(ref_b.erased))
+
+    # batch-adaptive with per-slot budgets
+    budgets = jnp.asarray([1, 3, 16], jnp.int32)
+    ref_ba = peel_decode_batch_adaptive(code, rx_B, er_B, 16,
+                                        backend="sparse", budgets=budgets)
+    got_ba = peel_decode_batch_adaptive(code, rx_B, er_B, 16, budgets=budgets,
+                                        **kw)
+    np.testing.assert_array_equal(np.asarray(got_ba.erased),
+                                  np.asarray(ref_ba.erased))
+    np.testing.assert_array_equal(np.asarray(got_ba.rounds_used),
+                                  np.asarray(ref_ba.rounds_used))
+
+
+def test_structure_only_decode_no_materialized_h():
+    """A SeededLDPC carries (N, K, l, r, seed) and nothing else — the
+    decode must match the materialized code's seeded decode bit for bit,
+    and every H-needing backend must refuse it loudly."""
+    code = _seeded_code(1024)
+    sl = SeededLDPC(N=code.N, K=code.K, l=4, r=8, seed=0)
+    rx, erased = _instance(code, seed=9)
+    ref = peel_decode(code, rx, erased, D, backend="pallas_seeded", bv=8)
+    got = peel_decode(sl, rx, erased, D, backend="auto", bv=8)
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    assert resolve_backend("auto", sl) == "pallas_seeded"
+    with pytest.raises(ValueError):
+        resolve_backend("sparse", sl)
+
+
+def test_pallas_seeded_rejected_without_seed():
+    code = make_parity_only_ldpc(512, l=3, r=6, seed=0)
+    with pytest.raises(ValueError):
+        resolve_backend("pallas_seeded", code)
+    with pytest.raises(ValueError):
+        seeded_structure_of(code)
+
+
+def test_seeded_structure_validation():
+    with pytest.raises(ValueError):
+        seeded_structure(10, 20, 8, 0)       # cols % row_weight != 0
+    with pytest.raises(ValueError):
+        seeded_structure(10, 64, 8, 0)       # rows % rows_per_layer != 0
+
+
+# ----------------------------------------------------------------- encode --
+
+
+def test_encode_moment_seeded_matches_materialized():
+    """The gather+sum over regenerated generator rows reproduces G @ M up
+    to f32 summation order (the gather sums r terms in index order; the
+    matvec may block differently)."""
+    code = make_seeded_ldgm(64, 32, row_weight=8, seed=0)
+    rng = np.random.default_rng(0)
+    M = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    ref = encode_moment(code, M)
+    got = encode_moment_seeded(code, M)
+    assert got.shape == ref.shape == (code.N, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # systematic prefix is an exact copy either way
+    np.testing.assert_array_equal(np.asarray(got[:64]), np.asarray(M))
+
+
+def test_gather_encode_2d_matches_columnwise_1d():
+    """The 2-D payload path (coded aggregation) is the 1-D gather applied
+    per column — bit for bit, since each output element is the same
+    r-term sum."""
+    code = make_seeded_ldgm(64, 32, row_weight=8, seed=1)
+    idx, coeff = generator_gather_tables(code)
+    rng = np.random.default_rng(1)
+    Y = jnp.asarray(rng.standard_normal((64, 5)), jnp.float32)
+    got = np.asarray(gather_encode(idx, coeff, Y))
+    for j in range(5):
+        np.testing.assert_array_equal(
+            got[:, j], np.asarray(gather_encode(idx, coeff, Y[:, j])))
+
+
+def test_seeded_generator_rows_requires_ldgm():
+    with pytest.raises(ValueError):
+        seeded_generator_rows(_seeded_code(512), 0, 8)
+
+
+def test_scheme2_build_seeded_matches_materialized():
+    """Same code, same masks: the seeded scheme (C = raw M, per-step
+    generator gather) tracks the materialized scheme (C = G @ M) to f32
+    summation order, with identical unresolved sets."""
+    K = 64
+    code = make_seeded_ldgm(K, 32, row_weight=8, seed=0)
+    prob = make_linear_problem(m=4 * K, k=K, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    mat = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
+                        decode_backend="sparse")
+    sed = Scheme2.build_seeded(code, mom, lr=prob.lr, decode_iters=8,
+                               decode_backend="sparse")
+    assert sed.seeded_encode and sed.C.shape == (K, K)
+    rng = np.random.default_rng(2)
+    theta = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    mask = jnp.asarray(rng.random(code.N) < 0.25)
+    g_m, u_m = mat.gradient(theta, mask)
+    g_s, u_s = sed.gradient(theta, mask)
+    np.testing.assert_allclose(np.asarray(g_s), np.asarray(g_m),
+                               rtol=2e-4, atol=2e-4)
+    assert int(u_s) == int(u_m)
+    # batched queries too
+    theta_B = jnp.asarray(rng.standard_normal((3, K)), jnp.float32)
+    mask_B = jnp.asarray(rng.random((3, code.N)) < 0.25)
+    gb_m, ub_m = mat.gradient_batch(theta_B, mask_B)
+    gb_s, ub_s = sed.gradient_batch(theta_B, mask_B)
+    np.testing.assert_allclose(np.asarray(gb_s), np.asarray(gb_m),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(ub_s), np.asarray(ub_m))
+
+
+# -------------------------------------------------------- bench failover --
+
+
+def test_resolve_bench_backend_seeded_failover():
+    from benchmarks.common import resolve_bench_backend
+
+    # no seed on the code → clean failover with a message
+    code = make_parity_only_ldpc(1024, l=3, r=6, seed=0)
+    backend, msg = resolve_bench_backend(code, "pallas_seeded")
+    assert backend == "sparse"
+    assert msg and "seeded" in msg
+    # small materialized seeded code → the request stands
+    small = make_seeded_ldpc(128, l=4, r=8, seed=0)
+    assert resolve_bench_backend(small, "pallas_seeded") == \
+        ("pallas_seeded", None)
+    # structure-only code past the interpret limit: no H to fall back on,
+    # the seeded kernel IS the decode
+    sl = SeededLDPC(N=2048, K=1024, l=4, r=8, seed=0)
+    assert resolve_bench_backend(sl, "pallas_seeded") == \
+        ("pallas_seeded", None)
