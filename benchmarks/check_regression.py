@@ -33,12 +33,22 @@ the ratio alone, while a code change that erodes the win moves it directly:
   timed seeded record also trips if its same-run
   ``wallclock_ratio_vs_tiled`` exceeds 1.2 (the regeneration must not buy
   bandwidth with compute the kernel cannot afford).
+* ``sim_steps_per_sec_ratio`` (``pipeline``, schema v7) — the depth-2
+  pipelined runtime's same-run makespan advantage over the synchronous
+  barrier driver on the simulated clock (deterministic: fixed delay
+  schedule, fixed seed).  Besides the relative-drop gate it carries a
+  HARD floor of ≥ 1.5×, and quality floors: the pipeline's mean
+  unresolved (after late folds) must not exceed the sync run's, and its
+  final error must stay within 5% of sync.  The measured
+  ``host_steps_per_sec_ratio`` is gated only relative to its own baseline
+  (single-core runners serialize the overlapped device programs and keep
+  only the control-plane savings).
 
 ``--sections`` selects which gates run (CI's tier-1 job gates
 batched+serving+large_n+seeded; the fake-8-device distributed job gates
-distributed).  Every record present in both files is compared (batched
-records key on (mode, N, B, D); serving on (mode, N, B, budget, chunk,
-n_queries); distributed on (mode, W, N); large_n on (backend, N, D)); the
+distributed+pipeline).  Every record present in both files is compared
+(batched records key on (mode, N, B, D); serving on (mode, N, B, budget,
+chunk, n_queries); distributed/pipeline on (mode, W, N); large_n on (backend, N, D)); the
 run fails if any fresh ratio drops more than ``--tol`` (relative) below
 the baseline's.  Interpret-mode Pallas records are skipped (interpret-mode
 latency is not a tracked quantity).  Absolute per-query/per-step times are
@@ -139,6 +149,37 @@ def _distributed_records(path: Path, mode: str) -> dict[tuple, dict]:
     return out
 
 
+def _pipeline_floors(new: dict[tuple, dict], *, floor_ratio: float = 1.5,
+                     max_error_ratio: float = 1.05) -> bool:
+    """Absolute gates on the FRESH pipeline records (baseline-independent):
+    the ≥1.5× simulated-clock speedup floor, and the quality floors —
+    mean unresolved after folds no worse than sync, final error within 5%
+    of sync.  Returns True iff any floor failed."""
+    failed = False
+    if not new:
+        print("check_regression [pipeline]: no pipeline records to hold "
+              "to the speedup floor")
+        return True
+    for key, rec in sorted(new.items()):
+        ratio = rec["sim_steps_per_sec_ratio"]
+        ok = ratio >= floor_ratio
+        print(f"  {key}: sim_steps_per_sec_ratio {ratio:.2f}x (floor "
+              f"{floor_ratio:.1f}x)  {'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+        pu, su = rec["pipeline_mean_unresolved"], rec["sync_mean_unresolved"]
+        ok = pu <= su + 1e-9
+        print(f"  {key}: mean_unresolved pipeline {pu:.2f} vs sync {su:.2f}"
+              f"  {'OK' if ok else 'QUALITY FAILED'}")
+        failed |= not ok
+        pe, se = rec["pipeline_final_error"], rec["sync_final_error"]
+        ok = pe <= se * max_error_ratio
+        print(f"  {key}: final_error pipeline {pe:.4f} vs sync {se:.4f} "
+              f"(ceiling {max_error_ratio:.2f}x)  "
+              f"{'OK' if ok else 'QUALITY FAILED'}")
+        failed |= not ok
+    return failed
+
+
 def _gate(name: str, metric: str, base: dict, new: dict, tol: float,
           context_key: str = "per_query_us") -> bool | None:
     """Compare shared records on ``metric``.
@@ -179,13 +220,15 @@ def main(argv=None) -> int:
                     help="allowed relative drop in the gated same-run "
                          "speedup ratios (default 25%%)")
     ap.add_argument("--sections",
-                    default="batched,serving,distributed,large_n,seeded",
+                    default="batched,serving,distributed,large_n,seeded,"
+                            "pipeline",
                     help="comma-separated gates to run "
-                         "(batched|serving|distributed|large_n|seeded)")
+                         "(batched|serving|distributed|large_n|seeded|"
+                         "pipeline)")
     args = ap.parse_args(argv)
     sections = [s for s in args.sections.split(",") if s]
     unknown = set(sections) - {"batched", "serving", "distributed", "large_n",
-                               "seeded"}
+                               "seeded", "pipeline"}
     if unknown:
         print(f"check_regression: unknown sections {sorted(unknown)}")
         return 1
@@ -232,6 +275,17 @@ def main(argv=None) -> int:
                   _distributed_records(args.baseline, "telemetry"),
                   _distributed_records(args.new, "telemetry"), args.tol,
                   context_key="telemetry_mean_unresolved"))
+    if "pipeline" in sections:
+        new_pipe = _distributed_records(args.new, "pipeline")
+        results.append(
+            _gate("pipeline-sim", "sim_steps_per_sec_ratio",
+                  _distributed_records(args.baseline, "pipeline"),
+                  new_pipe, args.tol, context_key="pipeline_per_step_us"))
+        results.append(
+            _gate("pipeline-host", "host_steps_per_sec_ratio",
+                  _distributed_records(args.baseline, "pipeline"),
+                  new_pipe, args.tol, context_key="sync_per_step_us"))
+        results.append(_pipeline_floors(new_pipe))
     if any(r is None for r in results):
         print("check_regression: FAILED (a gated section had no "
               "overlapping records — regenerate the committed baseline?)")

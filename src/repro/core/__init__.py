@@ -17,6 +17,7 @@ from repro.core.straggler import (
     FixedCountStragglers,
     AdversarialStragglers,
     DelayModel,
+    ScheduledDelays,
 )
 from repro.core.grad_agg import CodedAggregator, flatten_grads
 from repro.core.padding import pad_axis_to, pad_blocks
@@ -30,7 +31,7 @@ __all__ = [
     "Moments", "second_moment", "encode_moment", "encode_moment_blocks",
     "Scheme1", "Scheme2", "Scheme2Blocked", "run_pgd", "RunResult",
     "Scheme", "scheme_registry",
-    "BernoulliStragglers", "FixedCountStragglers", "AdversarialStragglers", "DelayModel",
+    "BernoulliStragglers", "FixedCountStragglers", "AdversarialStragglers", "DelayModel", "ScheduledDelays",
     "CodedAggregator", "flatten_grads",
     "pad_axis_to", "pad_blocks",
 ]

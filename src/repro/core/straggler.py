@@ -16,6 +16,7 @@ from typing import Protocol
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "StragglerModel",
@@ -23,6 +24,7 @@ __all__ = [
     "FixedCountStragglers",
     "AdversarialStragglers",
     "DelayModel",
+    "ScheduledDelays",
 ]
 
 
@@ -101,3 +103,64 @@ class DelayModel:
         cutoff = delays[order[wait_for - 1]]
         mask = delays > cutoff  # stragglers: slower than the wait-for cutoff
         return mask, cutoff
+
+    @staticmethod
+    def arrival_lags(delays, cutoff) -> np.ndarray:
+        """Per-worker arrival lag in STEP-LENGTH units (host-side numpy).
+
+        A worker slower than the wait-for ``cutoff`` misses this step; if
+        steps keep taking about ``cutoff`` wall-clock, its partial product
+        lands ``ceil((d - cutoff) / cutoff)`` steps later.  0 = arrived on
+        time.  The pipelined runtime folds lags within ``max_staleness``
+        into later updates and treats larger lags as today's drop.
+        """
+        d = np.asarray(delays, float)
+        cutoff = float(cutoff)
+        late = np.maximum(d - cutoff, 0.0)
+        with np.errstate(invalid="ignore"):
+            lags = np.ceil(late / max(cutoff, 1e-30))
+        return lags.astype(int)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledDelays:
+    """Deterministic per-step worker latencies from a fixed table.
+
+    ``schedule`` is ``(T, w)``: row ``t`` is the per-worker delay vector of
+    step ``t`` (cycled if the run is longer).  Shares :class:`DelayModel`'s
+    driver-facing surface (``sample_delays`` keyed by step, ``mask_and_time``
+    / ``arrival_lags`` via the DelayModel staticmethods), so
+    ``DistributedCodedGD.run`` and the pipelined runtime accept it wherever
+    a ``delay_model`` goes.  The benchmark's pipeline section uses it to
+    put the synchronous and pipelined runtimes under the SAME injected
+    arrival pattern — the speedup ratio then cannot hide behind sampling
+    noise.
+    """
+
+    schedule: tuple  # (T, w) nested tuple of floats; frozen-dataclass safe
+    _step: dict = dataclasses.field(default_factory=dict, hash=False,
+                                    compare=False)
+
+    @staticmethod
+    def build(schedule) -> "ScheduledDelays":
+        arr = np.asarray(schedule, float)
+        if arr.ndim != 2:
+            raise ValueError(f"schedule must be (T, w); got {arr.shape}")
+        return ScheduledDelays(tuple(map(tuple, arr.tolist())))
+
+    mask_and_time = staticmethod(DelayModel.mask_and_time)
+    arrival_lags = staticmethod(DelayModel.arrival_lags)
+
+    def sample_delays(self, key: jax.Array, w: int) -> jax.Array:
+        """Row ``t`` of the table, keyed by call order (one call per step,
+        mirroring how the drivers consume a DelayModel)."""
+        t = self._step.get("t", 0)
+        self._step["t"] = t + 1
+        row = self.schedule[t % len(self.schedule)]
+        if len(row) != w:
+            raise ValueError(f"schedule rows cover {len(row)} workers; "
+                             f"driver asked for {w}")
+        return jnp.asarray(row, jnp.float32)
+
+    def reset(self) -> None:
+        self._step.clear()

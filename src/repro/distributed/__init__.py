@@ -24,23 +24,41 @@ Layers (each its own module):
   single-device sparse decode (overwrite semantics shard without changing
   f32 summation order);
 * :mod:`repro.distributed.telemetry` — online EMA straggler-rate estimation
-  feeding density evolution to pick wait-for thresholds and per-step
-  adaptive decode budgets.
+  feeding density evolution to pick wait-for thresholds, per-step adaptive
+  decode budgets, and (for the pipelined runtime) arrival-lag-driven fold
+  windows;
+* :mod:`repro.distributed.pipeline` — the depth-k asynchronous runtime
+  (:class:`~repro.distributed.pipeline.AsyncDistributedCodedGD`): worker
+  launch ``t+1`` dispatched before decode ``t`` is consumed (double-buffered
+  θ broadcasts, donated master buffers), late straggler partials within
+  ``max_staleness`` steps folded into the current update with staleness
+  weights ``w(τ)``.  Depth 1 with a zero fold window is bit-identical to
+  :class:`~repro.distributed.master.DistributedCodedGD`, which stays the
+  synchronous parity reference.
 """
 from repro.distributed.master import (
     DistributedCodedAggregator,
     DistributedCodedGD,
     DistributedRunResult,
     build_distributed_gd_step,
+    delay_step_control,
+)
+from repro.distributed.pipeline import (
+    AsyncDistributedCodedGD,
+    PipelineRunResult,
+    pipeline_timeline,
 )
 from repro.distributed.sharded_decode import (
     build_sharded_decode,
     shard_check_tables,
 )
 from repro.distributed.telemetry import (
+    ArrivalLagEstimator,
     StragglerRateEstimator,
     decode_budget,
+    pick_wait_and_staleness,
     pick_wait_for,
+    pick_wait_for_cached,
     rounds_to_clear,
 )
 from repro.distributed.topology import (
@@ -58,9 +76,11 @@ from repro.distributed.worker import (
 
 __all__ = [
     "DistributedCodedGD", "DistributedRunResult", "build_distributed_gd_step",
-    "DistributedCodedAggregator",
+    "DistributedCodedAggregator", "delay_step_control",
+    "AsyncDistributedCodedGD", "PipelineRunResult", "pipeline_timeline",
     "build_sharded_decode", "shard_check_tables",
-    "StragglerRateEstimator", "decode_budget", "pick_wait_for",
+    "StragglerRateEstimator", "ArrivalLagEstimator", "decode_budget",
+    "pick_wait_for", "pick_wait_for_cached", "pick_wait_and_staleness",
     "rounds_to_clear",
     "WorkerTopology", "make_worker_mesh", "row_sharding",
     "WorkerStragglers", "build_worker_products", "shard_encoded_rows",

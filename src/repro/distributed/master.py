@@ -69,7 +69,7 @@ from repro.distributed.sharded_decode import (
 from repro.distributed.telemetry import (
     StragglerRateEstimator,
     decode_budget,
-    pick_wait_for,
+    pick_wait_for_cached,
 )
 from repro.distributed.topology import (
     WorkerTopology,
@@ -84,11 +84,35 @@ from repro.distributed.worker import (
 )
 
 __all__ = ["DistributedRunResult", "DistributedCodedGD",
-           "DistributedCodedAggregator", "build_distributed_gd_step"]
+           "DistributedCodedAggregator", "build_distributed_gd_step",
+           "delay_step_control"]
 
 BUDGET_MODES = ("fixed", "telemetry")
 MASTER_DECODES = ("single", "sharded")
 WORKER_ENCODES = ("materialized", "seeded")
+
+
+def delay_step_control(delays: np.ndarray, wait_for: int,
+                       straggler_factor: float
+                       ) -> tuple[np.ndarray, float, float]:
+    """Per-step host-side control math for delay-model runs, in ONE numpy
+    pass: the straggler mask at the wait-for cutoff, the cutoff itself
+    (the step's simulated wall-clock), and the telemetry observation
+    (fraction of workers slower than ``straggler_factor`` × the waited-for
+    median — NOT the mask, which is the cut the estimator itself chose).
+
+    Shared by the synchronous driver and the pipelined one
+    (:mod:`repro.distributed.pipeline`) so the two runtimes realize
+    IDENTICAL masks from identical delays — the depth-1 bit-parity gate
+    rests on it.  Returns ``(mask (W,) bool, cutoff, observed_fraction)``.
+    """
+    delays = np.asarray(delays)
+    order = np.argsort(delays, kind="stable")
+    cutoff = float(delays[order[wait_for - 1]])
+    mask = delays > cutoff  # stragglers: slower than the wait-for cutoff
+    med = float(np.median(delays[order[:wait_for]]))
+    observed = float((delays > straggler_factor * med).mean())
+    return mask, cutoff, observed
 
 
 class DistributedRunResult(NamedTuple):
@@ -184,7 +208,20 @@ class DistributedCodedGD:
             # Check tiles partitioned over the workers axis, once at build.
             self._sharded_tables = shard_check_tables(self.scheme.code,
                                                       self.mesh)
+        # Which addressable shard of a replicated array lives on the master
+        # device: the worker program's replicated output hands the master
+        # program its operand ZERO-COPY via that shard's buffer, instead of
+        # a fresh device_put per step.
+        probe = jax.device_put(jnp.zeros((1,)), self._replicated)
+        self._mshard_idx = next(
+            i for i, s in enumerate(probe.addressable_shards)
+            if s.device == self.master_device)
         self._worker_program, self._master_program = self._build_programs()
+
+    def _mshard(self, x: jax.Array) -> jax.Array:
+        """The master device's shard of a replicated array — a zero-copy
+        single-device view, usable as a master-program operand."""
+        return x.addressable_shards[self._mshard_idx].data
 
     # ------------------------------------------------------------ step build
 
@@ -302,9 +339,14 @@ class DistributedCodedGD:
                                    max_rounds=self.max_rounds)
         else:
             budget = int(self.scheme.decode_iters)
-        # broadcast θ + mask to the workers, one SPMD partial-product launch
+        # broadcast θ + mask to the workers, one SPMD partial-product
+        # launch.  device_put is a no-op when the operand already carries
+        # the replicated sharding (θ handed back by a previous step), so a
+        # driver loop pays ONE broadcast per array per step, not the old
+        # replicated-put + master-put pair.
         theta_rep = jax.device_put(theta, self._replicated)
         mask_rep = jax.device_put(worker_mask, self._replicated)
+        budget_arr = np.asarray([budget], np.int32)
         if self.worker_encode == "seeded":
             idx_sh, coeff_sh = self._tables_sharded
             z = self._worker_program(idx_sh, coeff_sh, self._M_replicated,
@@ -312,21 +354,19 @@ class DistributedCodedGD:
         else:
             z = self._worker_program(self._C_sharded, theta_rep, mask_rep)
         if self.master_decode == "sharded":
-            # decode over the mesh: check tiles stay sharded, operands
-            # replicated, one all-gather merge per round
-            rep = self._replicated
+            # decode over the mesh: check tiles stay sharded; z/θ/mask are
+            # already replicated (z is the worker program's output sharding)
             idx_sh, coeff_sh = self._sharded_tables
             theta2, n_unres, rounds = self._master_program(
-                idx_sh, coeff_sh, jax.device_put(z, rep),
-                jax.device_put(worker_mask, rep), jax.device_put(theta, rep),
-                jax.device_put(jnp.asarray([budget], jnp.int32), rep))
+                idx_sh, coeff_sh, z, mask_rep, theta_rep,
+                jax.device_put(jnp.asarray(budget_arr), self._replicated))
             return theta2, int(n_unres), int(rounds), budget
-        # master-local decode + update on the gathered survivors
-        m = self.master_device
+        # master-local decode + update: operands are the master device's
+        # OWN shards of the replicated worker output / broadcast (zero-copy
+        # views), plus the budget scalar which jit places alongside them.
         theta2, n_unres, rounds = self._master_program(
-            jax.device_put(z, m), jax.device_put(worker_mask, m),
-            jax.device_put(theta, m),
-            jax.device_put(jnp.asarray([budget], jnp.int32), m))
+            self._mshard(z), self._mshard(mask_rep), self._mshard(theta_rep),
+            budget_arr)
         return theta2, int(n_unres), int(rounds), budget
 
     def run(
@@ -371,20 +411,19 @@ class DistributedCodedGD:
         for t in range(steps):
             observed = None
             if delay_model is not None:
-                wait = pick_wait_for(self.estimator.rate, W, code.l, code.r)
-                delays = delay_model.sample_delays(keys[t], W)
-                worker_mask, cutoff = DelayModel.mask_and_time(delays, wait)
-                times.append(float(cutoff))
-                # Telemetry observation: tail latency relative to the
-                # waited-for median, NOT the mask (the mask is the cut the
-                # estimator itself chose — observing it would close a
-                # feedback loop where q̂ converges to its own decision and
-                # homogeneous fast fleets keep getting cut forever).
-                d = np.sort(np.asarray(delays))
-                med = float(np.median(d[:wait]))
-                observed = float(
-                    (np.asarray(delays) > self.straggler_factor * med)
-                    .mean())
+                wait = pick_wait_for_cached(self.estimator.rate, W,
+                                            code.l, code.r)
+                delays = np.asarray(delay_model.sample_delays(keys[t], W))
+                # One host-side numpy pass: mask at the cutoff, simulated
+                # step time, and the telemetry observation (tail latency
+                # relative to the waited-for median, NOT the mask — the
+                # mask is the cut the estimator itself chose; observing it
+                # would close a feedback loop where q̂ converges to its own
+                # decision and homogeneous fast fleets keep getting cut
+                # forever).
+                worker_mask, cutoff, observed = delay_step_control(
+                    delays, wait, self.straggler_factor)
+                times.append(cutoff)
             else:
                 wait = W
                 worker_mask = straggler_model.sample(keys[t], W)

@@ -21,6 +21,11 @@ bit-identical to the single-device seeded gather.  ``--grad-agg`` checks the
 additive-loss path instead: :class:`repro.distributed.master
 .DistributedCodedAggregator` vs the single-device
 :class:`repro.core.grad_agg.CodedAggregator` under the lifted worker masks.
+``--pipeline`` checks the asynchronous runtime's degenerate corner:
+:class:`repro.distributed.pipeline.AsyncDistributedCodedGD` at depth 1
+with a zero fold window must walk the EXACT synchronous trajectory —
+double buffering, donated master buffers, and the fold machinery being
+armed-but-idle change no bit.
 """
 from __future__ import annotations
 
@@ -33,6 +38,7 @@ import numpy as np
 from repro.core import (
     BernoulliStragglers,
     CodedAggregator,
+    DelayModel,
     Scheme2,
     make_regular_ldpc,
     second_moment,
@@ -43,6 +49,7 @@ from repro.distributed.master import (
     DistributedCodedAggregator,
     DistributedCodedGD,
 )
+from repro.distributed.pipeline import AsyncDistributedCodedGD
 from repro.distributed.topology import WorkerTopology, make_worker_mesh
 from repro.distributed.worker import WorkerStragglers
 
@@ -145,6 +152,65 @@ def check_grad_agg_parity(*, n_shards: int = 64, dim: int = 17,
     return steps
 
 
+def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
+                          q0: float = 0.25, backend: str = "sparse",
+                          worker_encode: str = "materialized",
+                          seed: int = 0) -> int:
+    """Depth-1 / zero-fold-window pipeline vs the synchronous driver.
+
+    Both runtimes consume the same key schedule, so they realize identical
+    masks (straggler-model leg) and identical delays → wait-for → cut
+    decisions (delay-model leg, which exercises the telemetry-driven
+    control plane shared through ``delay_step_control``).  The iterates,
+    unresolved counts, round counts, and budgets must match exactly; the
+    assertion names the first diverging step.  Returns total steps checked.
+    """
+    if worker_encode == "seeded":
+        code = make_seeded_ldgm(K, K // 2, row_weight=8, seed=seed)
+    else:
+        code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    prob = make_linear_problem(m=4 * K, k=K, seed=seed)
+    mom = second_moment(prob.X, prob.y)
+    build = (Scheme2.build_seeded if worker_encode == "seeded"
+             else Scheme2.build)
+    scheme = build(code, mom, lr=prob.lr, decode_iters=8,
+                   decode_backend=backend)
+    topo = WorkerTopology(n_workers, code.N)
+    mesh = make_worker_mesh()
+    theta0 = jnp.zeros(K)
+    key = jax.random.PRNGKey(seed)
+    checked = 0
+    legs = (("straggler", BernoulliStragglers(q0), None),
+            ("delay", None, DelayModel(tau=1.0, mu=1.0)))
+    for name, model, delay_model in legs:
+        sync = DistributedCodedGD(scheme, topo, mesh,
+                                  worker_encode=worker_encode)
+        pipe = AsyncDistributedCodedGD(scheme, topo, mesh, depth=1,
+                                       max_staleness=0,
+                                       worker_encode=worker_encode)
+        rs = sync.run(theta0, model, steps, key=key,
+                      theta_star=prob.theta_star, delay_model=delay_model)
+        rp = pipe.run(theta0, model, steps, key=key,
+                      theta_star=prob.theta_star, delay_model=delay_model,
+                      record_thetas=True)
+        ref, got = np.asarray(rs.theta), np.asarray(rp.theta)
+        if not (ref == got).all():
+            bad = int(np.argmax(ref != got))
+            raise AssertionError(
+                f"pipeline backend={backend} worker_encode={worker_encode} "
+                f"leg={name}: final iterates diverge at coordinate {bad}: "
+                f"{ref[bad]!r} != {got[bad]!r}")
+        for field in ("unresolved", "rounds", "budgets", "wait_for"):
+            a, b = getattr(rs, field), getattr(rp, field)
+            if not (np.asarray(a) == np.asarray(b)).all():
+                t = int(np.argmax(np.asarray(a) != np.asarray(b)))
+                raise AssertionError(
+                    f"pipeline backend={backend} leg={name}: {field} "
+                    f"diverges at step {t}: {a[t]!r} != {b[t]!r}")
+        checked += steps
+    return checked
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--K", type=int, default=64)
@@ -167,8 +233,22 @@ def main(argv=None) -> int:
                     help="check the additive-loss DistributedCodedAggregator "
                          "against the single-device CodedAggregator instead "
                          "of the moment-encoded GD step")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="check the depth-1 / zero-fold-window asynchronous "
+                         "pipeline against the synchronous driver (straggler "
+                         "and delay-model legs) instead of the GD step")
     args = ap.parse_args(argv)
     n_dev = jax.device_count()
+    if args.pipeline:
+        for backend in args.backends.split(","):
+            steps = check_pipeline_parity(K=args.K, n_workers=args.workers,
+                                          steps=args.steps, q0=args.q0,
+                                          backend=backend,
+                                          worker_encode=args.worker_encode)
+            print(f"parity OK: pipeline backend={backend} "
+                  f"worker_encode={args.worker_encode} W={args.workers} "
+                  f"devices={n_dev} steps={steps} (bit-identical iterates)")
+        return 0
     if args.grad_agg:
         for backend in args.backends.split(","):
             steps = check_grad_agg_parity(n_shards=args.K,

@@ -16,21 +16,33 @@ average ``q̂`` of it, and uses density evolution (Proposition 2) to turn
   the master should wait for under :class:`repro.core.straggler.DelayModel`
   timing, cutting off no more workers than the code's erasure threshold
   ``q*(l, r)`` (times a safety margin) can absorb, and no more than the
-  observed straggling suggests is useful.
+  observed straggling suggests is useful;
+* for the pipelined runtime (:mod:`repro.distributed.pipeline`), an
+  ARRIVAL-LAG distribution (:class:`ArrivalLagEstimator`): how many steps
+  late the cut-off workers actually land, in units of the step length —
+  :func:`pick_wait_and_staleness` turns it into a ``(wait_for,
+  max_staleness)`` pair so the fold window covers most late arrivals
+  without holding stale partials that will never come.
 
 Everything here is tiny host-side arithmetic (numpy floats) — it sits in
 the driver loop between device launches, exactly where a real master's
-control plane would run.
+control plane would run.  :func:`pick_wait_for_cached` is the driver-loop
+entry point: the per-step call is memoized on a quantized rate bucket so a
+steady climate costs a dict lookup, not a density-evolution walk.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 
+import numpy as np
+
 from repro.core.density_evolution import qd_sequence, threshold
 
-__all__ = ["StragglerRateEstimator", "rounds_to_clear", "decode_budget",
-           "pick_wait_for", "cached_threshold"]
+__all__ = ["StragglerRateEstimator", "ArrivalLagEstimator",
+           "rounds_to_clear", "decode_budget", "pick_wait_for",
+           "pick_wait_for_cached", "pick_wait_and_staleness",
+           "cached_threshold"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -114,6 +126,70 @@ def decode_budget(q_hat: float, l: int, r: int, *, max_rounds: int = 64,
     return max(1, min(D + slack, max_rounds))
 
 
+@dataclasses.dataclass
+class ArrivalLagEstimator:
+    """Bias-corrected EMA of the late-worker arrival-lag distribution.
+
+    The pipelined runtime can FOLD a cut-off worker's partial product into
+    a later update if it lands within ``max_staleness`` steps
+    (:mod:`repro.distributed.pipeline`).  Whether that window is worth its
+    buffer space depends on WHERE the late arrivals land: a fleet whose
+    stragglers are barely late (lag 1) wants a short window, one whose
+    stragglers are hopeless (lag ≫ 1) should keep today's drop semantics.
+    Each step the master observes every worker's arrival lag in step-length
+    units (0 = arrived inside the wait-for cutoff, ``k`` = would land
+    during step ``t+k``, anything past ``max_lag`` = effectively never) and
+    this class maintains a bias-corrected EMA histogram of them — the same
+    estimator shape as :class:`StragglerRateEstimator`, per lag bin.
+    """
+
+    decay: float = 0.8
+    max_lag: int = 8
+    _mass: np.ndarray | None = None
+    _norm: float = 0.0
+    steps: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1); got {self.decay}")
+        if self.max_lag < 1:
+            raise ValueError(f"max_lag must be >= 1; got {self.max_lag}")
+        if self._mass is None:
+            # bins: lag 0 (on time), 1..max_lag (foldable), max_lag+1 (never)
+            self._mass = np.zeros(self.max_lag + 2)
+
+    def observe(self, lags) -> None:
+        """Fold in one step's per-worker arrival lags (ints, 0 = on time)."""
+        lags = np.clip(np.asarray(lags, int), 0, self.max_lag + 1)
+        hist = np.bincount(lags, minlength=self.max_lag + 2)
+        frac = hist / max(1, lags.size)
+        self._mass = self.decay * self._mass + (1.0 - self.decay) * frac
+        self._norm = self.decay * self._norm + (1.0 - self.decay)
+        self.steps += 1
+
+    @property
+    def pmf(self) -> np.ndarray:
+        """Estimated lag pmf over bins ``0..max_lag+1`` (uniform prior
+        over the late bins until the first observation)."""
+        if self._norm == 0.0:
+            p = np.zeros(self.max_lag + 2)
+            p[0] = 0.5
+            p[1:] = 0.5 / (self.max_lag + 1)
+            return p
+        return self._mass / self._norm
+
+    def coverage(self, staleness: int) -> float:
+        """P(lag ≤ staleness | late): the fraction of late arrivals a fold
+        window of ``staleness`` steps would recover.  1.0 when nothing is
+        ever late (any window trivially covers an empty set)."""
+        p = self.pmf
+        late = p[1:].sum()
+        if late <= 0.0:
+            return 1.0
+        s = int(min(max(staleness, 0), self.max_lag))
+        return float(p[1:s + 1].sum() / late)
+
+
 def pick_wait_for(q_hat: float, w: int, l: int, r: int, *,
                   margin: float = 0.9, headroom: float = 1.5) -> int:
     """How many fastest workers the master should wait for.
@@ -133,3 +209,54 @@ def pick_wait_for(q_hat: float, w: int, l: int, r: int, *,
     cap_observed = headroom * max(q_hat, 0.0)
     cut = int(min(cap_threshold, cap_observed, 1.0) * w)
     return max(1, w - cut)
+
+
+_RATE_BUCKETS = 1024
+
+
+@functools.lru_cache(maxsize=8192)
+def _pick_wait_for_bucketed(bucket: int, w: int, l: int, r: int,
+                            margin: float, headroom: float) -> int:
+    return pick_wait_for(bucket / _RATE_BUCKETS, w, l, r,
+                         margin=margin, headroom=headroom)
+
+
+def pick_wait_for_cached(q_hat: float, w: int, l: int, r: int, *,
+                         margin: float = 0.9, headroom: float = 1.5) -> int:
+    """:func:`pick_wait_for` memoized on ``(rate bucket, w, l, r)``.
+
+    The density-evolution threshold inside :func:`pick_wait_for` is already
+    memoized, but the driver loop still pays the wrapper arithmetic and the
+    threshold-cache lookup every step.  Quantizing ``q̂`` to 1/1024 buckets
+    makes the whole per-step decision one ``lru_cache`` hit; the bucket
+    width is finer than the ``1/w`` cut granularity at w ≤ 1024 workers,
+    so the chosen wait-for differs from the exact policy by at most one
+    worker, and only when ``headroom·q̂·w`` sits exactly on an integer
+    boundary.
+    """
+    b = int(round(min(max(q_hat, 0.0), 1.0) * _RATE_BUCKETS))
+    return _pick_wait_for_bucketed(b, w, l, r, margin, headroom)
+
+
+def pick_wait_and_staleness(q_hat: float, lag_est: ArrivalLagEstimator,
+                            w: int, l: int, r: int, *,
+                            coverage: float = 0.9,
+                            max_window: int = 4) -> tuple[int, int]:
+    """Joint online policy for the pipelined runtime: how many fastest
+    workers to wait for, and how long a fold window to keep for the rest.
+
+    ``wait_for`` comes from the cut policy (:func:`pick_wait_for_cached`);
+    ``max_staleness`` is the smallest window whose estimated coverage of
+    late arrivals (:meth:`ArrivalLagEstimator.coverage`) reaches
+    ``coverage``, capped at ``max_window`` — if even the cap cannot reach
+    it, the cap is returned (recovering SOME late partials still beats
+    dropping them all).  Returns ``(wait_for, max_staleness)``.
+    """
+    wait = pick_wait_for_cached(q_hat, w, l, r)
+    cap = int(min(max_window, lag_est.max_lag))
+    staleness = cap
+    for s in range(cap + 1):
+        if lag_est.coverage(s) >= coverage:
+            staleness = s
+            break
+    return wait, staleness

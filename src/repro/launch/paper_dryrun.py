@@ -40,7 +40,19 @@ memory (e.g. ``--k 131072 --K 131072``: H alone would be 128 GiB f32).
   python -m repro.launch.paper_dryrun --k 131072 --K 131072 \\
       --decode pallas --seeded
 
+``--pipeline`` additionally lowers and analyzes the pipelined runtime's
+LATE-FOLD program (:func:`repro.launch.steps.build_pipeline_fold_step`):
+the sparse re-decode of a stored survivor vector plus the
+staleness-weighted delta on newly-resolved coordinates.  It runs on the
+same mesh as the main step — including the ``--distributed``
+("workers", "data") layout — so the roofline shows what the fold path
+adds to the master's budget at production scale.
+
+  python -m repro.launch.paper_dryrun --k 32768 --distributed \\
+      --decode sparse --pipeline
+
 Writes artifacts/dryrun/paper-coded-gd__scheme2-k<k>-D<D>-<dtype>__<mesh>.json
+(and a ``...-fold`` sibling with ``--pipeline``)
 """
 import argparse
 import json
@@ -73,6 +85,10 @@ def main(argv=None):
                     help="master/worker runtime step: explicit "
                          "(workers, data) mesh, shard_map worker matvec, "
                          "per-worker straggler mask (decode: dense|sparse)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="also lower+analyze the pipelined runtime's "
+                         "late-fold program (sparse re-decode + weighted "
+                         "delta) on the same mesh")
     args = ap.parse_args(argv)
 
     dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
@@ -148,6 +164,48 @@ def main(argv=None):
     }
     (ARTIFACTS / f"paper-coded-gd__{shape_tag}__{mesh_desc.replace('x','_')}.json"
      ).write_text(json.dumps(out, indent=2))
+
+    if args.pipeline:
+        from repro.launch.steps import build_pipeline_fold_step
+
+        t0 = time.time()
+        fold_jitted, fold_specs = build_pipeline_fold_step(
+            args.k, args.K, args.decode_iters, dtype, mesh)
+        fold_lowered = fold_jitted.lower(*fold_specs)
+        tf_lower = time.time() - t0
+        t0 = time.time()
+        fold_compiled = fold_lowered.compile()
+        tf_compile = time.time() - t0
+        # useful work of a fold: the decode matmuls only (no worker matvec)
+        fold_mflops = args.decode_iters * 2 * p * N * nb
+        fold_tag = shape_tag + "-fold"
+        frep = analyze_compiled(fold_compiled, arch="paper-coded-gd",
+                                shape=fold_tag, mesh_desc=mesh_desc,
+                                chips=mesh.devices.size,
+                                mflops=float(fold_mflops))
+        print(f"== paper-coded-gd {fold_tag} on {mesh_desc} ==")
+        print(f"   lower {tf_lower:.1f}s compile {tf_compile:.1f}s")
+        print("   cost_analysis: flops=%.3e bytes=%.3e (per chip)" %
+              (frep.hlo_gflops * 1e9, frep.hlo_gbytes * 1e9))
+        print(f"   collectives: {frep.coll_counts}")
+        print(f"   roofline: compute={frep.compute_s*1e3:.3f}ms "
+              f"memory={frep.memory_s*1e3:.3f}ms "
+              f"collective={frep.collective_s*1e3:.3f}ms -> "
+              f"{frep.dominant}-bound")
+        fold_out = {
+            "arch": "paper-coded-gd", "shape": fold_tag, "mesh": mesh_desc,
+            "chips": mesh.devices.size, "ok": True, "extrapolated": False,
+            "lower_s": tf_lower, "compile_s": tf_compile,
+            "hlo_gflops": frep.hlo_gflops, "hlo_gbytes": frep.hlo_gbytes,
+            "coll_gbytes_local": frep.coll_gbytes_local,
+            "coll_counts": frep.coll_counts, "compute_s": frep.compute_s,
+            "memory_s": frep.memory_s, "collective_s": frep.collective_s,
+            "dominant": frep.dominant, "model_gflops": frep.model_gflops,
+            "useful_ratio": frep.useful_ratio,
+        }
+        (ARTIFACTS / f"paper-coded-gd__{fold_tag}__"
+         f"{mesh_desc.replace('x', '_')}.json"
+         ).write_text(json.dumps(fold_out, indent=2))
 
 
 if __name__ == "__main__":

@@ -30,7 +30,8 @@ from repro.sharding import (
     opt_state_shardings,
 )
 
-__all__ = ["BuiltStep", "build_step", "build_coded_gd_step"]
+__all__ = ["BuiltStep", "build_step", "build_coded_gd_step",
+           "build_pipeline_fold_step"]
 
 
 class BuiltStep(NamedTuple):
@@ -282,3 +283,56 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
     in_sh = (sh(None, "model", dspec), sh("model", None), sh("model", None),
              *common_sh)
     return jax.jit(step_sparse, in_shardings=in_sh, out_shardings=sh()), args
+
+
+def build_pipeline_fold_step(k: int, K: int, decode_iters: int, dtype,
+                             mesh, *, r: int = 6):
+    """The pipelined runtime's LATE-FOLD program at production scale.
+
+    When a straggler's partial products land within the fold window
+    (:class:`repro.distributed.pipeline.AsyncDistributedCodedGD`), the
+    master re-decodes the SOURCE step's stored survivor vector with the
+    newly-landed rows restored and applies a staleness-weighted delta on
+    exactly the coordinates the original decode left unresolved.  This
+    builder is that program with explicit production shardings, composed
+    from the same shared stages as :func:`build_coded_gd_step` (sparse
+    neighbour-table decode rounds + the blocked epilogue):
+
+      (H_idx, H_val, z, remaining_mask, u_old, b, w)
+          → (delta, u_next)
+
+    with ``delta = w · (ĉ′ − b)`` on ``newly = u_old ∧ ¬u′`` (zero
+    elsewhere — already-applied coordinates cannot double-count) and
+    ``u_next = u_old ∧ u′``.  The stored ``z`` and the carried masks are
+    replicated (they live with the master); the neighbour tables shard
+    their check rows over the mesh's first axis, so the builder serves
+    both the sharded-tensor mesh ("model", "data") and the distributed
+    runtime's ("workers", "data") layout.
+
+    Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
+    """
+    N, p, nb = 2 * K, K, k // K
+    axis = mesh.axis_names[0]
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+
+    def fold_step(H_idx, H_val, z, remaining_mask, u_old, b, w):
+        vals, erased = peel_fixed_sparse(H_idx, H_val,
+                                         z.astype(jnp.float32),
+                                         remaining_mask, decode_iters)
+        g, u_new = blocked_epilogue(vals, erased, b, K=K, nb=nb)
+        newly = u_old & ~u_new
+        delta = jnp.where(newly, g, 0.0) * w
+        return delta, u_old & u_new
+
+    args = (
+        jax.ShapeDtypeStruct((p, r), jnp.int32),      # H_idx
+        jax.ShapeDtypeStruct((p, r), jnp.float32),    # H_val
+        jax.ShapeDtypeStruct((N, nb), dtype),         # stored survivors
+        jax.ShapeDtypeStruct((N,), jnp.bool_),        # remaining erasures
+        jax.ShapeDtypeStruct((k,), jnp.bool_),        # unresolved carry
+        jax.ShapeDtypeStruct((k,), jnp.float32),      # b
+        jax.ShapeDtypeStruct((), jnp.float32),        # w(τ)
+    )
+    in_sh = (sh(axis, None), sh(axis, None), sh(), sh(), sh(), sh(), sh())
+    return jax.jit(fold_step, in_shardings=in_sh,
+                   out_shardings=(sh(), sh())), args

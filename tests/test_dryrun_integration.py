@@ -92,6 +92,25 @@ def test_paper_dryrun_pallas_variant():
     assert out["ok"] and out["shape"].endswith("-pallas")
 
 
+def test_paper_dryrun_pipeline_fold_step():
+    """``--pipeline`` lowers+analyzes the late-fold program alongside the
+    main step, on the distributed (workers, data) mesh layout."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.paper_dryrun", "--k", "1024",
+         "--K", "512", "--decode-iters", "4", "--decode", "sparse",
+         "--distributed", "--pipeline"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert res.returncode == 0, f"paper_dryrun failed:\n{res.stdout}\n{res.stderr}"
+    assert "scheme2-k1024-D4-f32-sparse-dist-fold" in res.stdout
+    out = json.loads((REPO / "artifacts" / "dryrun" /
+                      "paper-coded-gd__scheme2-k1024-D4-f32-sparse-dist-fold"
+                      "__16w_16d.json").read_text())
+    assert out["ok"] and out["shape"].endswith("-fold")
+
+
 def test_input_specs_all_shapes():
     from repro.configs import get_config
     from repro.launch.specs import SHAPES, input_specs

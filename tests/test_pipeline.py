@@ -1,0 +1,333 @@
+"""The depth-k pipelined runtime: degenerate-corner bit-parity with the
+synchronous driver, late-arrival folding against a host-side reference,
+drop-semantics equivalence of w ≡ 0, no-recompile guarantees, and the
+simulated pipeline clock.
+
+Like ``tests/test_distributed.py``, the in-process tests run on whatever
+mesh this process has (1 CPU device in tier-1; 8 fake devices in the CI
+distributed job) — logical workers are decoupled from devices.  The
+subprocess test forces the fake 8-device mesh (the acceptance
+configuration) through ``selfcheck --pipeline``.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BernoulliStragglers,
+    ScheduledDelays,
+    Scheme2,
+    make_regular_ldpc,
+    second_moment,
+)
+from repro.core.straggler import DelayModel
+from repro.data import make_linear_problem
+from repro.distributed import (
+    AsyncDistributedCodedGD,
+    DistributedCodedGD,
+    WorkerTopology,
+    delay_step_control,
+    pipeline_timeline,
+)
+from repro.distributed.selfcheck import check_pipeline_parity
+from repro.distributed.telemetry import pick_wait_for_cached
+
+REPO = Path(__file__).resolve().parents[1]
+
+K = 64
+W = 8
+CODE = make_regular_ldpc(K, l=3, r=6, seed=0)
+PROB = make_linear_problem(m=4 * K, k=K, seed=0)
+MOM = second_moment(PROB.X, PROB.y)
+TOPO = WorkerTopology(W, CODE.N)
+
+
+def _scheme(backend="sparse", decode_iters=8, **kw):
+    return Scheme2.build(CODE, MOM, lr=PROB.lr, decode_iters=decode_iters,
+                         decode_backend=backend, **kw)
+
+
+# A deterministic delay table that exercises every arrival class: per step
+# the three slowest workers miss the 5-of-8 cutoff (delay 1.0) at lags
+# 1, 2, and never; positions rotate so different symbols are erased.
+def _fold_schedule(steps):
+    row = np.full(W, 1.0)
+    row[5], row[6], row[7] = 1.6, 2.9, 9.0
+    return np.stack([np.roll(row, t) for t in range(steps)])
+
+
+# ------------------------------------------------------- depth-1 bit parity
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_depth1_zero_window_bit_parity(backend):
+    """depth=1, max_staleness=0 walks the synchronous trajectory exactly —
+    both the straggler-model and the delay-model (telemetry control plane)
+    legs, checked inside ``check_pipeline_parity``."""
+    assert check_pipeline_parity(K=K, n_workers=W, steps=4, q0=0.25,
+                                 backend=backend) == 8
+
+
+def test_depth1_bit_parity_pallas():
+    assert check_pipeline_parity(K=K, n_workers=W, steps=2, q0=0.25,
+                                 backend="pallas") == 4
+
+
+def test_depth1_bit_parity_seeded_worker_encode():
+    assert check_pipeline_parity(K=K, n_workers=W, steps=3, q0=0.25,
+                                 backend="sparse",
+                                 worker_encode="seeded") == 6
+
+
+def test_pipeline_parity_on_fake_8_device_mesh_subprocess():
+    """The acceptance configuration: real 8-device mesh, both worker
+    encode modes, through the selfcheck CLI."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for extra in ([], ["--worker-encode", "seeded"]):
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.distributed.selfcheck",
+             "--pipeline", "--workers", "8", "--steps", "3",
+             "--backends", "sparse", *extra],
+            capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+        assert res.returncode == 0, res.stderr
+        assert "parity OK: pipeline" in res.stdout
+
+
+def test_telemetry_budget_mode_depth1_parity():
+    """The adaptive-budget control plane (EMA → decode budget) must also
+    survive the pipelined driver unchanged at depth 1."""
+    scheme = _scheme(decode_iters=16)
+    sync = DistributedCodedGD(scheme, TOPO, budget_mode="telemetry",
+                              max_rounds=16)
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=1, max_staleness=0,
+                                   budget_mode="telemetry", max_rounds=16)
+    key = jax.random.PRNGKey(3)
+    theta0 = jnp.zeros(K)
+    rs = sync.run(theta0, None, 5, key=key, theta_star=PROB.theta_star,
+                  delay_model=DelayModel(tau=1.0, mu=1.0))
+    rp = pipe.run(theta0, None, 5, key=key, theta_star=PROB.theta_star,
+                  delay_model=DelayModel(tau=1.0, mu=1.0))
+    assert (np.asarray(rs.theta) == np.asarray(rp.theta)).all()
+    assert (rs.budgets == rp.budgets).all()
+    assert (rs.rounds == rp.rounds).all()
+    assert (rs.unresolved == rp.unresolved).all()
+    assert rs.rates == pytest.approx(rp.rates)
+
+
+# --------------------------------------------------- fold path correctness
+
+
+def test_zero_decay_is_bit_exact_drop_semantics():
+    """w ≡ 0 (staleness_decay=0) must reproduce max_staleness=0 exactly:
+    no fold dispatches, no ±0 sign flips from adding a zero delta."""
+    scheme = _scheme()
+    theta0 = jnp.zeros(K)
+    key = jax.random.PRNGKey(1)
+    dm = ScheduledDelays.build(_fold_schedule(6))
+    drop = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=0)
+    w0 = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=2,
+                                 staleness_decay=0.0)
+    rd = drop.run(theta0, None, 6, key=key, theta_star=PROB.theta_star,
+                  delay_model=dm)
+    dm.reset()
+    r0 = w0.run(theta0, None, 6, key=key, theta_star=PROB.theta_star,
+                delay_model=dm)
+    assert (np.asarray(rd.theta) == np.asarray(r0.theta)).all()
+    assert (rd.errors == r0.errors).all()
+    assert r0.fold_rounds.sum() == 0
+    assert r0.resolved_late.sum() == 0
+
+
+def test_fold_matches_host_reference():
+    """The device-side fold pipeline (stored survivors, re-decode with the
+    remaining mask, staleness-weighted delta on NEWLY resolved coords,
+    no double-counting) against a step-by-step host reference built from
+    the engine primitives at depth 1."""
+    decay, window, steps = 0.7, 2, 6
+    scheme = _scheme(decode_iters=8)
+    eng = scheme.engine
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=1,
+                                   max_staleness=window,
+                                   staleness_decay=decay)
+    theta0 = jnp.zeros(K)
+    key = jax.random.PRNGKey(0)
+    sched = _fold_schedule(steps)
+    dm = ScheduledDelays.build(sched)
+    res = pipe.run(theta0, None, steps, key=key,
+                   theta_star=PROB.theta_star, delay_model=dm,
+                   record_thetas=True)
+
+    # ---- host reference -------------------------------------------------
+    theta = theta0
+    entries = []                                # (step, z, u, cut, lags)
+    thetas_ref, unres_pre, newly_by_src = [], [], {}
+    for t in range(steps):
+        wait = pick_wait_for_cached(0.3, W, CODE.l, CODE.r)
+        cut, cutoff, _ = delay_step_control(sched[t], wait, 2.0)
+        lags = DelayModel.arrival_lags(sched[t], cutoff)
+        never = cut & (lags > window)
+        z = jnp.where(TOPO.to_symbol_erasure(never), 0.0, scheme.C @ theta)
+        fold_dg = jnp.zeros(K)
+        still = []
+        for (s, z_s, u_s, cut_s, lags_s) in entries:
+            lag = t - s
+            if (cut_s & (lags_s == lag)).any():
+                remaining = cut_s & (lags_s > lag)
+                er = TOPO.to_symbol_erasure(remaining)
+                dec = eng.decode_batch(eng.erase(z_s, er)[None], er[None],
+                                       adaptive=True,
+                                       budgets=np.asarray([8], np.int32))
+                c2, u2 = eng.systematic(dec)
+                c2, u2 = c2[0], u2[0]
+                newly = u_s & ~u2
+                fold_dg = fold_dg + scheme._debias(
+                    jnp.where(newly, c2 - scheme.b, 0.0)) * (decay ** lag)
+                newly_by_src[s] = newly_by_src.get(s, 0) + int(newly.sum())
+                u_s = u_s & u2
+            if lag < window and (cut_s & (lags_s > lag)).any():
+                still.append((s, z_s, u_s, cut_s, lags_s))
+        entries = still
+        c_hat, u = eng.recover(z, TOPO.to_symbol_erasure(cut))
+        g, n_unres = scheme.finish_gradient(c_hat, u)
+        theta = scheme.projection(theta - scheme.lr * (g + fold_dg))
+        thetas_ref.append(np.asarray(theta))
+        unres_pre.append(int(n_unres))
+        if (cut & (lags > 0) & (lags <= window)).any():
+            entries.append((t, z, u, cut, lags))
+
+    # The reference is EAGER, so fused-multiply-add choices differ from the
+    # jitted programs and the peeling chains amplify that f32 noise a few
+    # orders (observed ≤ 2e-3 over 6 steps); any WIRING error — wrong
+    # w(τ), skipped or double-counted fold — lands at O(0.1) and up.
+    assert res.thetas == pytest.approx(np.stack(thetas_ref), abs=2e-2,
+                                       rel=2e-2)
+    # the run must actually have folded something, and the bookkeeping
+    # (post-fold unresolved = pre-fold − newly per SOURCE step) must agree
+    assert res.resolved_late.sum() > 0
+    for s in range(steps):
+        assert res.resolved_late[s] == newly_by_src.get(s, 0)
+        assert res.unresolved[s] == unres_pre[s] - newly_by_src.get(s, 0)
+
+
+def test_folds_recover_unresolved_coordinates():
+    """With a tight round budget the main decode gives up on some
+    coordinates; the fold window must claw a measurable share back and
+    not hurt convergence."""
+    scheme = _scheme(decode_iters=4)
+    theta0 = jnp.zeros(K)
+    key = jax.random.PRNGKey(0)
+    drop = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=0)
+    fold = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=2,
+                                   staleness_decay=0.5)
+    steps = 8
+    dm = ScheduledDelays.build(_fold_schedule(steps))
+    rd = drop.run(theta0, None, steps, key=key,
+                  theta_star=PROB.theta_star, delay_model=dm)
+    dm.reset()
+    rf = fold.run(theta0, None, steps, key=key,
+                  theta_star=PROB.theta_star, delay_model=dm)
+    assert rd.unresolved.sum() > 0          # budget genuinely runs out
+    assert rf.resolved_late.sum() > 0       # folds landed
+    assert rf.unresolved.sum() < rd.unresolved.sum()
+    assert rf.errors[-1] <= rd.errors[-1] * 1.05
+
+
+# ------------------------------------------------- compile-once guarantees
+
+
+def test_no_recompile_across_masks_budgets_and_weights():
+    """Masks, budgets, step index, and staleness weights are all traced
+    operands: one compiled master program and one fold program serve the
+    whole run."""
+    scheme = _scheme(decode_iters=16)
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=2,
+                                   staleness_decay=0.5,
+                                   budget_mode="telemetry", max_rounds=16)
+    dm = ScheduledDelays.build(_fold_schedule(7))
+    pipe.run(jnp.zeros(K), None, 7, key=jax.random.PRNGKey(0),
+             theta_star=PROB.theta_star, delay_model=dm)
+    assert pipe._cache_size() == 1
+    assert pipe._fold_program._cache_size() == 1
+
+
+# ------------------------------------------------------------ control plane
+
+
+def test_auto_staleness_adapts_window():
+    """auto_staleness starts from the prior (window = cap, the uniform
+    late prior can't reach 0.9 coverage at s ≤ 4) and shrinks to the
+    observed lag support (all late arrivals at lag ≤ 2 here)."""
+    scheme = _scheme()
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=4,
+                                   auto_staleness=True)
+    row = np.full(W, 1.0)
+    row[5], row[6], row[7] = 1.6, 2.9, 2.9     # lags 1, 2, 2 — no nevers
+    dm = ScheduledDelays.build(np.stack([np.roll(row, t)
+                                         for t in range(10)]))
+    res = pipe.run(jnp.zeros(K), None, 10, key=jax.random.PRNGKey(0),
+                   theta_star=PROB.theta_star, delay_model=dm)
+    assert res.staleness[0] == 4               # prior: cap
+    assert res.staleness[-1] == 2              # learned: lag support
+
+
+def test_validates_construction():
+    scheme = _scheme()
+    with pytest.raises(ValueError, match="depth"):
+        AsyncDistributedCodedGD(scheme, TOPO, depth=0)
+    with pytest.raises(ValueError, match="max_staleness"):
+        AsyncDistributedCodedGD(scheme, TOPO, max_staleness=-1)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        AsyncDistributedCodedGD(scheme, TOPO, staleness_decay=1.5)
+    with pytest.raises(ValueError, match="auto_staleness"):
+        AsyncDistributedCodedGD(scheme, TOPO, auto_staleness=True,
+                                max_staleness=0)
+
+
+def test_depth2_uses_stale_iterate_and_converges():
+    """Depth 2 launches workers at θ_{t-2} — a delayed-gradient chain that
+    still converges at a conservative stepsize."""
+    scheme = Scheme2.build(CODE, MOM, lr=PROB.lr * 0.5, decode_iters=8,
+                           decode_backend="sparse")
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=0)
+    res = pipe.run(jnp.zeros(K), BernoulliStragglers(0.15), 25,
+                   key=jax.random.PRNGKey(0), theta_star=PROB.theta_star)
+    assert res.errors[-1] < 0.25 * res.errors[0]
+
+
+# --------------------------------------------------------- simulated clock
+
+
+def test_pipeline_timeline_depth1_is_barrier():
+    waits = np.array([1.0, 2.0, 1.5])
+    decodes = np.array([0.5, 0.5, 1.0])
+    _, m_end = pipeline_timeline(waits, decodes, 1)
+    assert m_end[-1] == pytest.approx(waits.sum() + decodes.sum())
+
+
+def test_pipeline_timeline_depth2_overlaps():
+    """Balanced phases: depth 2 hides all but one worker phase behind the
+    master — makespan T+1 units instead of the barrier's 2T."""
+    T = 8
+    waits = np.ones(T)
+    decodes = np.ones(T)
+    _, barrier = pipeline_timeline(waits, decodes, 1)
+    w_end, m_end = pipeline_timeline(waits, decodes, 2)
+    assert barrier[-1] == pytest.approx(2.0 * T)
+    assert m_end[-1] == pytest.approx(T + 1.0)
+    # worker t may start before master t-1 finished, never before t-2
+    for t in range(2, T):
+        assert w_end[t] - waits[t] >= m_end[t - 2] - 1e-12
+
+
+def test_pipeline_timeline_validates():
+    with pytest.raises(ValueError, match="depth"):
+        pipeline_timeline([1.0], [1.0], 0)

@@ -14,10 +14,13 @@ except ImportError:  # pragma: no cover - run from tests/ directly
 from repro.core import BernoulliStragglers
 from repro.core.density_evolution import q_final, threshold
 from repro.distributed.telemetry import (
+    ArrivalLagEstimator,
     StragglerRateEstimator,
     cached_threshold,
     decode_budget,
+    pick_wait_and_staleness,
     pick_wait_for,
+    pick_wait_for_cached,
     rounds_to_clear,
 )
 from repro.distributed.topology import WorkerTopology
@@ -135,6 +138,68 @@ def test_wait_for_tracks_observed_rate():
 
 def test_cached_threshold_matches_direct():
     assert cached_threshold(3, 6) == pytest.approx(threshold(3, 6))
+
+
+def test_pick_wait_for_cached_matches_uncached():
+    """On bucket-aligned rates the memo is exact; off-grid the 1/1024
+    quantization can shift the cut by at most one worker, and only when
+    ``headroom·q̂·w`` lands exactly on an integer boundary."""
+    for w in (4, 8, 40, 256):
+        for b in range(0, 1025, 8):
+            q = b / 1024
+            assert (pick_wait_for_cached(q, w, 3, 6)
+                    == pick_wait_for(q, w, 3, 6))
+        for q in np.linspace(0.0, 1.0, 101):
+            assert abs(pick_wait_for_cached(float(q), w, 3, 6)
+                       - pick_wait_for(float(q), w, 3, 6)) <= 1
+
+
+# --------------------------------------------------- arrival-lag estimation
+
+
+def test_lag_estimator_prior_then_tracks_observations():
+    est = ArrivalLagEstimator(decay=0.5, max_lag=4)
+    # before any observation: uniform-late prior, half the mass on-time
+    assert est.pmf[0] == pytest.approx(0.5)
+    assert est.pmf[1:].sum() == pytest.approx(0.5)
+    # steady stream: 6 of 8 on time, 2 at lag 1 → pmf converges there
+    for _ in range(30):
+        est.observe([0, 0, 0, 0, 0, 0, 1, 1])
+    assert est.pmf[0] == pytest.approx(0.75)
+    assert est.pmf[1] == pytest.approx(0.25)
+    assert est.coverage(1) == pytest.approx(1.0)
+    assert est.coverage(0) == pytest.approx(0.0)
+
+
+def test_lag_estimator_clips_and_covers():
+    est = ArrivalLagEstimator(decay=0.0, max_lag=3)
+    est.observe([0, 1, 2, 99])      # 99 clips into the never bin
+    assert est.pmf[-1] == pytest.approx(0.25)
+    # of the late mass (3 workers), a window of 2 covers 2
+    assert est.coverage(2) == pytest.approx(2 / 3)
+    # no late mass at all → any window trivially covers
+    est2 = ArrivalLagEstimator()
+    est2.observe([0, 0, 0])
+    assert est2.coverage(0) == 1.0
+
+
+def test_lag_estimator_validates():
+    with pytest.raises(ValueError):
+        ArrivalLagEstimator(decay=1.0)
+    with pytest.raises(ValueError):
+        ArrivalLagEstimator(max_lag=0)
+
+
+def test_pick_wait_and_staleness_window_tracks_lags():
+    w, l, r = 8, 3, 6
+    est = ArrivalLagEstimator(decay=0.0, max_lag=8)
+    est.observe([0] * 6 + [1, 1])              # all late mass at lag 1
+    wait, s = pick_wait_and_staleness(0.25, est, w, l, r)
+    assert wait == pick_wait_for_cached(0.25, w, l, r)
+    assert s == 1
+    est.observe([0] * 6 + [8, 8])              # hopeless stragglers only:
+    _, s = pick_wait_and_staleness(0.25, est, w, l, r, max_window=4)
+    assert s == 4                              # cap returned, not exceeded
 
 
 # ----------------------------------------- worker→symbol lift is a partition
