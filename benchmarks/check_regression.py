@@ -33,6 +33,15 @@ the ratio alone, while a code change that erodes the win moves it directly:
   timed seeded record also trips if its same-run
   ``wallclock_ratio_vs_tiled`` exceeds 1.2 (the regeneration must not buy
   bandwidth with compute the kernel cannot afford).
+* ``flops_ratio_vs_dense_tile`` (``seeded_gather``, schema v8) — the
+  edge-proportional gather round's modeled per-round FLOPs advantage over
+  the dense regenerated tile inside the same seeded kernel (the
+  :mod:`repro.core.hwcaps` crossover model behind ``seeded_mode="auto"``).
+  Besides the relative-drop gate, the ratio carries a HARD floor: ≥ 8× at
+  N = 16384, the PR's headline arithmetic claim.  The timed gather record
+  also trips if its same-run ``wallclock_ratio_vs_dense_tile`` exceeds
+  1.2 (the gather/segment-sum round must not buy FLOPs with launch or
+  layout overhead it cannot afford).
 * ``sim_steps_per_sec_ratio`` (``pipeline``, schema v7) — the depth-2
   pipelined runtime's same-run makespan advantage over the synchronous
   barrier driver on the simulated clock (deterministic: fixed delay
@@ -45,8 +54,8 @@ the ratio alone, while a code change that erodes the win moves it directly:
   only the control-plane savings).
 
 ``--sections`` selects which gates run (CI's tier-1 job gates
-batched+serving+large_n+seeded; the fake-8-device distributed job gates
-distributed+pipeline).  Every record present in both files is compared
+batched+serving+large_n+seeded+seeded_gather; the fake-8-device
+distributed job gates distributed+pipeline).  Every record present in both files is compared
 (batched records key on (mode, N, B, D); serving on (mode, N, B, budget,
 chunk, n_queries); distributed/pipeline on (mode, W, N); large_n on (backend, N, D)); the
 run fails if any fresh ratio drops more than ``--tol`` (relative) below
@@ -140,6 +149,47 @@ def _seeded_floors(new: dict[tuple, dict], *, floor_n: int = 16384,
     return failed
 
 
+def _seeded_gather_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("seeded_gather", []):
+        if "flops_ratio_vs_dense_tile" in rec:
+            out[(rec["N"], rec["D"])] = rec
+    return out
+
+
+def _seeded_gather_floors(new: dict[tuple, dict], *, floor_n: int = 16384,
+                          floor_ratio: float = 8.0,
+                          max_wallclock_ratio: float = 1.2) -> bool:
+    """Absolute gates on the FRESH seeded-gather records
+    (baseline-independent): the ≥8× per-round FLOPs floor at N=16384 and
+    the ≤1.2× same-run wall-clock ceiling on the timed record.  Returns
+    True iff any floor failed."""
+    failed = False
+    floor_recs = [r for (n, _), r in new.items() if n == floor_n]
+    if not floor_recs:
+        print(f"check_regression [seeded_gather]: no N={floor_n} record to "
+              "hold to the FLOPs floor")
+        failed = True
+    for rec in floor_recs:
+        ratio = rec["flops_ratio_vs_dense_tile"]
+        ok = ratio >= floor_ratio
+        print(f"  (N={floor_n}, D={rec['D']}): flops_ratio_vs_dense_tile "
+              f"{ratio:.0f}x (floor {floor_ratio:.0f}x)  "
+              f"{'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+    for key, rec in sorted(new.items()):
+        if not rec.get("timed"):
+            continue
+        wr = rec["wallclock_ratio_vs_dense_tile"]
+        ok = wr <= max_wallclock_ratio
+        print(f"  {key}: wallclock_ratio_vs_dense_tile {wr:.2f}x (ceiling "
+              f"{max_wallclock_ratio:.1f}x)  "
+              f"{'OK' if ok else 'CEILING FAILED'}")
+        failed |= not ok
+    return failed
+
+
 def _distributed_records(path: Path, mode: str) -> dict[tuple, dict]:
     data = json.loads(path.read_text())
     out = {}
@@ -221,14 +271,14 @@ def main(argv=None) -> int:
                          "speedup ratios (default 25%%)")
     ap.add_argument("--sections",
                     default="batched,serving,distributed,large_n,seeded,"
-                            "pipeline",
+                            "seeded_gather,pipeline",
                     help="comma-separated gates to run "
                          "(batched|serving|distributed|large_n|seeded|"
-                         "pipeline)")
+                         "seeded_gather|pipeline)")
     args = ap.parse_args(argv)
     sections = [s for s in args.sections.split(",") if s]
     unknown = set(sections) - {"batched", "serving", "distributed", "large_n",
-                               "seeded", "pipeline"}
+                               "seeded", "seeded_gather", "pipeline"}
     if unknown:
         print(f"check_regression: unknown sections {sorted(unknown)}")
         return 1
@@ -257,6 +307,13 @@ def main(argv=None) -> int:
                   _seeded_records(args.baseline), new_seeded, args.tol,
                   context_key="modeled_seeded_bytes"))
         results.append(_seeded_floors(new_seeded))
+    if "seeded_gather" in sections:
+        new_sg = _seeded_gather_records(args.new)
+        results.append(
+            _gate("seeded_gather", "flops_ratio_vs_dense_tile",
+                  _seeded_gather_records(args.baseline), new_sg, args.tol,
+                  context_key="modeled_gather_flops_per_round"))
+        results.append(_seeded_gather_floors(new_sg))
     if "distributed" in sections:
         results.append(
             _gate("dist-overhead", "single_vs_distributed",

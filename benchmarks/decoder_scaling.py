@@ -50,6 +50,20 @@ Sections:
      lowers at N=262144, where even materializing H (128 GiB f32) is
      infeasible — there is nothing to compare against there.
 
+  8. SEEDED-GATHER sweep (schema v8): the edge-proportional gather round
+     (``seeded_mode="gather"``) vs the dense regenerated-tile round inside
+     the same seeded kernel.  Per N up to 32768: the MODELED per-round
+     FLOPs of both (the :mod:`repro.core.hwcaps` expressions behind
+     ``seeded_mode="auto"``: the dense round contracts a ``p_pad × n_pad``
+     tile per payload lane; the gather round touches only the r generated
+     edges per check row plus the per-layer inverse-permutation merge) and
+     the same-run ``flops_ratio_vs_dense_tile`` that
+     ``check_regression.py --sections seeded_gather`` gates (hard ≥8×
+     floor at N=16384).  At N=2048 both modes are also TIMED (interpret
+     off-TPU) with a trajectory tripwire: erasure masks bit-identical,
+     never-erased values bit-equal (resolved VALUES agree only up to f32
+     summation order — the two rounds sum in different shapes).
+
 Forcing ``--backend pallas`` (CLI) past the VMEM limit no longer crashes:
 ``benchmarks.common.resolve_bench_backend`` fails over with a clear message
 (to "pallas_tiled" on TPU, "sparse" off-TPU), and the quick CI run
@@ -566,6 +580,81 @@ def run_seeded_sweep(*, Ns=(2048, 4096, 8192, 16384, 32768), D=8, q=0.25,
     return rows, records
 
 
+def run_seeded_gather_sweep(*, Ns=(2048, 4096, 8192, 16384, 32768), D=8,
+                            V=8, q=0.25, reps=3, timed_n=2048, bp=128):
+    """Gather vs dense-tile seeded rounds: modeled per-round FLOPs at every
+    N, wall-clock + trajectory tripwire where timeable.
+
+    Returns (table_rows, json_records).  ``flops_ratio_vs_dense_tile``
+    (dense FLOPs / gather FLOPs, the same :mod:`repro.core.hwcaps` model
+    ``seeded_mode="auto"`` dispatches on) is gated by
+    ``check_regression.py --sections seeded_gather`` — including the hard
+    ≥8× floor at N=16384.  The timed record at ``timed_n`` runs BOTH modes
+    on one seeded code and asserts the bit-exact part of the contract:
+    identical erasure trajectories and untouched never-erased values
+    (resolved values agree to f32 summation order only — the dense round
+    contracts over N, the gather round sums r edges per row).
+    """
+    from repro.core.hwcaps import (seeded_dense_round_flops,
+                                   seeded_gather_round_flops)
+    from repro.core.ldpc import make_seeded_ldpc, seeded_structure
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows, records = [], []
+    for N in Ns:
+        spec = seeded_structure(N // 2, N, 8, 0)
+        dense_f = seeded_dense_round_flops(spec, V, bp=bp)
+        gather_f = seeded_gather_round_flops(spec, V, bp=bp)
+        rec = {
+            "N": N, "D": D, "V": V, "bp": bp, "erasure_q": q,
+            "modeled_dense_tile_flops_per_round": dense_f,
+            "modeled_gather_flops_per_round": gather_f,
+            "flops_ratio_vs_dense_tile": dense_f / gather_f,
+            "timed": False,
+            "jax_backend": jax.default_backend(),
+        }
+        timed = N == timed_n and (on_tpu or N <= 2048)
+        if timed:
+            code = make_seeded_ldpc(N // 2, l=4, r=8, seed=0)
+            assert code.N == N, (code.N, N)
+            rng = np.random.default_rng(N)
+            vals = jnp.asarray(rng.standard_normal((N, V)), jnp.float32)
+            erased = jnp.asarray(rng.random(N) < q)
+            rx = jnp.where(erased[:, None], 0.0, vals)
+            ts, outs = {}, {}
+            for mode in ("dense_tile", "gather"):
+                fn = jax.jit(lambda v, e, m=mode: tuple(peel_decode(
+                    code, v, e, D, backend="pallas_seeded", bp=bp, bv=8,
+                    seeded_mode=m)[:2]))
+                ts[mode] = _median_seconds(lambda v, e: fn(v, e), rx,
+                                           erased, reps=reps)
+                outs[mode] = tuple(np.asarray(x) for x in fn(rx, erased))
+            # tripwire: the TRAJECTORY is bit-exact across modes, and
+            # never-erased coordinates pass through untouched
+            still = ~np.asarray(erased)
+            if (outs["gather"][1] != outs["dense_tile"][1]).any() or \
+                    (outs["gather"][0][still]
+                     != outs["dense_tile"][0][still]).any():
+                raise AssertionError(
+                    f"seeded_gather N={N}: gather round diverged from "
+                    "dense_tile (erasure trajectory or known values)")
+            rec.update({
+                "timed": True,
+                "median_s_dense_tile": ts["dense_tile"],
+                "median_s_gather": ts["gather"],
+                "wallclock_ratio_vs_dense_tile":
+                    ts["gather"] / ts["dense_tile"],
+                "interpret_mode": not on_tpu,
+            })
+        records.append(rec)
+        rows.append([N, f"{dense_f / 1e6:.1f}", f"{gather_f / 1e6:.2f}",
+                     f"{rec['flops_ratio_vs_dense_tile']:.0f}x",
+                     (f"{rec['wallclock_ratio_vs_dense_tile']:.2f}x"
+                      if timed else "-"),
+                     "interp" if timed and not on_tpu else ""])
+    return rows, records
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -673,6 +762,16 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
                 ["N", "tiled_MiB", "seeded_MiB", "traffic_ratio",
                  "wallclock_ratio", ""], srows)
 
+    # 8. seeded-gather sweep — edge-proportional rounds vs dense tiles.
+    # Fixed config in quick mode for the same reason as section 7 (modeled
+    # arithmetic + one timed N, seconds total; the gate needs matching
+    # (N, D, V) records).
+    sgrows, seeded_gather_records = run_seeded_gather_sweep(reps=3)
+    print_table("Seeded-gather sweep — modeled per-round FLOPs and "
+                "wall-clock, gather vs dense-tile rounds",
+                ["N", "dense_MFLOP", "gather_MFLOP", "flops_ratio",
+                 "wallclock_ratio", ""], sgrows)
+
     # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
@@ -694,7 +793,11 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
         # v6: adds the "seeded" section (in-kernel H regeneration: modeled
         # operand-traffic ratio vs the tiled kernel, gated ≥10× at N=16384,
         # plus the timed + lower-only feasibility records).
-        "schema_version": 6,
+        # v8: adds the "seeded_gather" section (edge-proportional gather
+        # rounds: modeled per-round FLOPs ratio vs the dense regenerated
+        # tile — the hwcaps crossover model — gated ≥8× at N=16384, plus a
+        # timed interpret record with a trajectory tripwire).
+        "schema_version": 8,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
@@ -702,6 +805,7 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
         "serving_sweep": serve_records,
         "large_n": large_records,
         "seeded": seeded_records,
+        "seeded_gather": seeded_gather_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows

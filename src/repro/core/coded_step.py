@@ -33,8 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import density_evolution
 from repro.core.encoding import (Moments, encode_moment,
-                                 encode_moment_blocks, gather_encode,
-                                 generator_gather_tables)
+                                 encode_moment_blocks, encode_seeded,
+                                 gather_encode, generator_gather_tables)
 from repro.core.engine import CodedComputeEngine, blocked_epilogue
 from repro.core.ldpc import LDPCCode
 from repro.optim import projections
@@ -69,6 +69,14 @@ class Scheme2:
     # per-row gather+sum is the SAME one the sharded workers run
     # (bit-identical products to the distributed runtime).
     seeded_encode: bool = False
+    # With ``encode_fused=True`` the generator gather runs inside the fused
+    # Pallas encode kernel (:func:`repro.core.encoding.encode_seeded`):
+    # gather indices regenerate in-register, so not even the (N, r+1)
+    # tables exist.  Bit-identical to the table gather under jit (the
+    # kernel and the sequential ``gather_encode`` lower to the same FMA
+    # chain) — and to the ``worker_encode="seeded-fused"`` distributed
+    # runtime, which runs the same kernel per shard.
+    encode_fused: bool = False
 
     @classmethod
     def build(cls, code: LDPCCode, moments: Moments, *, lr: float, **kw) -> "Scheme2":
@@ -80,9 +88,19 @@ class Scheme2:
         """Scheme 2 over a seeded LDGM code with on-the-fly encode: stores
         ``M`` itself ((k, k) — the preprocessing output) instead of the
         ``(N, k)`` encoded ``C``, and regenerates each worker's generator
-        row from the seed at every step (``z = gather(M θ)``)."""
+        row from the seed at every step (``z = gather(M θ)``); pass
+        ``encode_fused=True`` to run that gather inside the fused Pallas
+        encode kernel (no index tables at all)."""
         return cls(code=code, C=jnp.asarray(moments.M), b=moments.b, lr=lr,
                    seeded_encode=True, **kw)
+
+    def _encode(self, y: jax.Array) -> jax.Array:
+        """Seeded codeword of ``y`` ((K,) or (K, V)): fused kernel or
+        table gather — bit-identical under jit."""
+        if self.encode_fused:
+            return encode_seeded(self.code, y)
+        idx, coeff = generator_gather_tables(self.code)
+        return gather_encode(idx, coeff, y)
 
     @property
     def w(self) -> int:
@@ -122,8 +140,7 @@ class Scheme2:
     def gradient(self, theta: jax.Array, straggler_mask: jax.Array):
         """Return (approx gradient, |U_t|)."""
         if self.seeded_encode:
-            idx, coeff = generator_gather_tables(self.code)
-            z = gather_encode(idx, coeff, self.C @ theta)  # gather(M θ)
+            z = self._encode(self.C @ theta)  # gather(M θ)
         else:
             z = self.C @ theta  # (N,) worker inner products (codeword of C)
         erased = self.worker_mask_to_erasure(straggler_mask)
@@ -143,8 +160,7 @@ class Scheme2:
         whole batch for the worst-case ``decode_iters`` budget.
         """
         if self.seeded_encode:
-            idx, coeff = generator_gather_tables(self.code)
-            Z = gather_encode(idx, coeff, (theta_B @ self.C.T).T).T  # (B, N)
+            Z = self._encode((theta_B @ self.C.T).T).T  # (B, N)
         else:
             Z = theta_B @ self.C.T  # (B, N)
         erased_B = jax.vmap(self.worker_mask_to_erasure)(straggler_mask_B)

@@ -67,6 +67,27 @@ backend    what runs
            other backend on the same code and VALUES are bit-identical to
            "pallas_tiled" (same tile-shaped summation); H costs zero bytes
            of HBM storage and operand traffic.
+
+           ``seeded_mode`` sub-dispatches the ROUND implementation:
+
+           * "dense_tile" (default) — regenerate the full ``bp×N`` tile and
+             run the tiled round's dense contractions on it (MXU-friendly,
+             but O(p·N) FLOPs per round even though only r of N entries
+             per check row are nonzero);
+           * "gather" — generate only the r (column, weight) pairs per
+             check row from the seed and run the check pass as gather +
+             segment-sum, merging resolutions through the layered
+             permutation's INVERSE map (first-tile-wins, lowest-check
+             tie-break preserved) — O(p·r) FLOPs per round, the
+             edge-proportional cost the paper's low-overhead-decoding
+             claim assumes.  Erasure trajectories (masks AND round counts)
+             are bit-identical to "dense_tile"; decoded values agree up to
+             f32 summation order.
+           * "auto" — crossover rule from :mod:`repro.core.hwcaps`:
+             "gather" iff the dense round's modeled FLOPs exceed
+             ``mxu_advantage ×`` the gather round's (advantage 1.0 on
+             CPU/interpret — gather always wins; 8.0 placeholder on TPU
+             until ROADMAP item 5's profiling replaces it).
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
            large codes off-TPU; on TPU, "pallas_seeded" whenever the code
            carries a regenerable seed, else "pallas" when
@@ -120,7 +141,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ldpc import LDPCCode, SeededLDPC, seeded_structure_of
+from repro.core.ldpc import (
+    LDPCCode,
+    SeededLDPC,
+    SeededStructure,
+    seeded_structure_of,
+)
 
 __all__ = [
     "DecodeResult",
@@ -137,10 +163,13 @@ __all__ = [
     "resolve_backend",
     "vmem_bytes_estimate",
     "pick_tile_bp",
+    "SEEDED_MODES",
 ]
 
 BACKENDS = ("auto", "dense", "sparse", "pallas", "pallas_tiled",
             "pallas_seeded")
+# Sub-dispatch of "pallas_seeded": how each flooding round is computed.
+SEEDED_MODES = ("auto", "dense_tile", "gather")
 
 # "auto" picks the sparse neighbor-table round once the dense round's O(p·N)
 # work clearly loses to O(p·r_max) gathers; below this the dense matmul's
@@ -388,10 +417,28 @@ def _tile_knobs(code, bp, bv, vmem_budget_bytes):
 
 def _seeded_spec(code):
     """The hashable :class:`~repro.core.ldpc.SeededStructure` for a seeded
-    code — materialized (``kind="ldpc-seeded"``) or structure-only."""
+    code — materialized (``kind="ldpc-seeded"``), structure-only, or the
+    bare structure itself (launch-layer callers hold no code object)."""
+    if isinstance(code, SeededStructure):
+        return code
     if isinstance(code, SeededLDPC):
         return code.structure
     return seeded_structure_of(code)
+
+
+def _resolve_seeded_mode(seeded_mode: str, code, V: int, bp: int) -> str:
+    """Resolve the ``seeded_mode`` knob to a concrete round implementation:
+    "auto" applies the :func:`repro.core.hwcaps.pick_seeded_mode` crossover
+    (gather iff the dense-tile round's modeled FLOPs exceed the platform's
+    ``mxu_advantage ×`` the gather round's)."""
+    if seeded_mode not in SEEDED_MODES:
+        raise ValueError(f"unknown seeded_mode {seeded_mode!r}; "
+                         f"want one of {SEEDED_MODES}")
+    if seeded_mode == "auto":
+        from repro.core.hwcaps import pick_seeded_mode
+
+        return pick_seeded_mode(_seeded_spec(code), V, bp=bp)
+    return seeded_mode
 
 
 def peel_decode(
@@ -404,6 +451,7 @@ def peel_decode(
     bp: int | None = None,
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
+    seeded_mode: str = "dense_tile",
 ) -> DecodeResult:
     """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode).
 
@@ -413,7 +461,9 @@ def peel_decode(
     round (or, on TPU, the fused one-kernel Pallas decode — resident H
     within ``vmem_budget_bytes``, check-axis tiled beyond it).  ``bp`` /
     ``bv`` are the tiled kernels' check/payload tile knobs (``bp`` defaults
-    to :func:`pick_tile_bp`'s budget-sized tile).
+    to :func:`pick_tile_bp`'s budget-sized tile).  ``seeded_mode``
+    sub-dispatches the "pallas_seeded" round — "dense_tile" | "gather" |
+    "auto" (hwcaps crossover); ignored by other backends.
     """
     backend = resolve_backend(backend, code,
                               vmem_budget_bytes=vmem_budget_bytes)
@@ -438,8 +488,9 @@ def peel_decode(
         from repro.kernels.ldpc_peel import peel_decode_seeded_pallas
 
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        mode = _resolve_seeded_mode(seeded_mode, code, v.shape[1], bp_)
         v, e = peel_decode_seeded_pallas(_seeded_spec(code), v, e, iters,
-                                         bp=bp_, bv=bv_)
+                                         bp=bp_, bv=bv_, mode=mode)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = peel_fixed_dense(H, Hb, v, e, iters)
@@ -462,15 +513,19 @@ def _peel_fixed_dense_batch(H, Hb, values, erased, iters: int):
 def peel_round_sparse_batch(check_idx, check_coeff, var_idx, vb, eb):
     """One flooding round for B independent erasure patterns, scatter-free.
 
-    Batch-minor layout: ``vb (N+1, B)`` values (one zero sentinel row),
-    ``eb (N+1, B)`` f32 0/1 erasure flags — neighbor gathers then move
-    contiguous B-length rows instead of B strided scalars.
+    Batch-minor layout: ``vb (N+1, B, V)`` values (one zero sentinel row,
+    V payload lanes per pattern), ``eb (N+1, B)`` f32 0/1 erasure flags —
+    neighbor gathers then move contiguous rows instead of strided scalars.
 
     Check side: a solvable check has EXACTLY one erased neighbour, so the
     masked sums ``Σ idx·e`` / ``Σ coeff·e`` *are* its resolved index and
     coefficient — exact in f32 (small integers / single surviving term), no
     argmax, and bit-identical solvability decisions to
-    :func:`peel_round_sparse`.
+    :func:`peel_round_sparse`.  The V payload lanes of one pattern share a
+    trajectory, so ALL structure work (cnt/pos/coeff, solvability, the
+    candidate-match masks) is computed ONCE per pattern on the ``(·, B)``
+    erasure flags and broadcast over V — only the value sums and the
+    resolved-value writes touch the ``(·, B, V)`` payload.
 
     Variable side: XLA's scatter is the slow op on CPU (~70 ns/element,
     serialized); instead each variable GATHERS its ≤ l_max candidate
@@ -482,30 +537,31 @@ def peel_round_sparse_batch(check_idx, check_coeff, var_idx, vb, eb):
     N = vb.shape[0] - 1
     dt = vb.dtype
     ne = eb[check_idx]                              # (p, r_max, B)
-    nv = vb[check_idx]                              # (p, r_max, B)
+    nv = vb[check_idx]                              # (p, r_max, B, V)
     cnt = ne.sum(axis=1)                            # (p, B) — exact counts
     c3 = check_coeff.astype(dt)[:, :, None]
-    sums = (nv * (1.0 - ne) * c3).sum(axis=1)       # (p, B) known-neighbour
+    known = (1.0 - ne) * c3                         # (p, r_max, B)
+    sums = (nv * known[..., None]).sum(axis=1)      # (p, B, V)
     posf = (check_idx.astype(dt)[:, :, None] * ne).sum(axis=1)
-    coeff = (c3 * ne).sum(axis=1)
+    coeff = (c3 * ne).sum(axis=1)                   # (p, B)
     solvable = cnt == 1.0
-    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)
+    new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)[..., None]
     res_pos = jnp.where(solvable, posf.astype(jnp.int32), N)    # (p, B)
 
-    B = vb.shape[1]
+    B, V = vb.shape[1], vb.shape[2]
     rp_pad = jnp.concatenate([res_pos, jnp.full((1, B), N, jnp.int32)])
-    nv_pad = jnp.concatenate([new_val, jnp.zeros((1, B), dt)])
+    nv_pad = jnp.concatenate([new_val, jnp.zeros((1, B, V), dt)])
     cand_pos = rp_pad[var_idx]                      # (N, l_max, B)
-    cand_val = nv_pad[var_idx]
+    cand_val = nv_pad[var_idx]                      # (N, l_max, B, V)
     me = jax.lax.broadcasted_iota(jnp.int32, cand_pos.shape, 0)
     match = cand_pos == me                          # (N, l_max, B)
     resolved = jnp.zeros((N, B), bool)
-    val = jnp.zeros((N, B), dt)
+    val = jnp.zeros((N, B, V), dt)
     for t in range(match.shape[1]):                 # l_max is small & static
         m = match[:, t]
-        val = jnp.where(m & ~resolved, cand_val[:, t], val)
+        val = jnp.where((m & ~resolved)[..., None], cand_val[:, t], val)
         resolved = resolved | m
-    vb = vb.at[:N].set(jnp.where(resolved, val, vb[:N]))
+    vb = vb.at[:N].set(jnp.where(resolved[..., None], val, vb[:N]))
     eb = eb.at[:N].set(jnp.where(resolved, 0.0, eb[:N]))
     return vb, eb
 
@@ -515,27 +571,24 @@ def _peel_fixed_sparse_batch(check_idx, check_coeff, var_idx, values, erased,
                              iters: int):
     """values (B, N, V), erased (B, N) → fixed-D batch-major sparse decode.
 
-    The V payload axis rides along as extra batch lanes (each of the B
-    patterns is repeated V times), so one launch covers both axes.  Known
-    inefficiency: the check-side structure work (cnt/pos/coeff) is
-    recomputed per lane even though the V lanes of one pattern share a
-    trajectory — computing it once per pattern and broadcasting over V is a
-    follow-on for V-heavy batched workloads (serving queries are V=1).
+    The erasure state is carried once per pattern (``(N+1, B)``) while the
+    payload keeps its own V axis (``(N+1, B, V)``), so the check-side
+    structure work runs once per pattern and only the value arithmetic
+    scales with V — see :func:`peel_round_sparse_batch`.
     """
     B, N, V = values.shape
-    vb = jnp.transpose(values, (1, 0, 2)).reshape(N, B * V)
-    eb = jnp.repeat(erased.T.astype(values.dtype), V, axis=1)   # (N, B*V)
-    zrow = jnp.zeros((1, B * V), values.dtype)
-    vb = jnp.concatenate([vb, zrow])
-    eb = jnp.concatenate([eb, zrow])
+    vb = jnp.concatenate([jnp.transpose(values, (1, 0, 2)),
+                          jnp.zeros((1, B, V), values.dtype)])  # (N+1, B, V)
+    eb = jnp.concatenate([erased.T.astype(values.dtype),
+                          jnp.zeros((1, B), values.dtype)])     # (N+1, B)
 
     def body(_, carry):
         return peel_round_sparse_batch(check_idx, check_coeff, var_idx,
                                        *carry)
 
     vb, eb = jax.lax.fori_loop(0, iters, body, (vb, eb))
-    out_v = jnp.transpose(vb[:N].reshape(N, B, V), (1, 0, 2))
-    out_e = eb[:N].reshape(N, B, V)[:, :, 0].T > 0.0
+    out_v = jnp.transpose(vb[:N], (1, 0, 2))
+    out_e = eb[:N].T > 0.0
     return out_v, out_e
 
 
@@ -549,6 +602,7 @@ def peel_decode_batch(
     bp: int | None = None,
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
+    seeded_mode: str = "dense_tile",
 ) -> DecodeResult:
     """Decode ``B`` INDEPENDENT erasure patterns in one launch.
 
@@ -600,8 +654,10 @@ def peel_decode_batch(
         from repro.kernels.ldpc_peel import peel_decode_batch_seeded_pallas
 
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        mode = _resolve_seeded_mode(seeded_mode, code, v.shape[2], bp_)
         v, e = peel_decode_batch_seeded_pallas(_seeded_spec(code), v, e,
-                                               iters, bp=bp_, bv=bv_)
+                                               iters, bp=bp_, bv=bv_,
+                                               mode=mode)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e = _peel_fixed_dense_batch(H, Hb, v, e, iters)
@@ -657,6 +713,7 @@ def peel_decode_adaptive(
     bp: int | None = None,
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
+    seeded_mode: str = "dense_tile",
 ) -> DecodeResult:
     """Decode until fixpoint (no check resolves) or ``max_iters`` rounds.
 
@@ -693,8 +750,10 @@ def peel_decode_adaptive(
         from repro.kernels.ldpc_peel import peel_decode_adaptive_seeded_pallas
 
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        mode = _resolve_seeded_mode(seeded_mode, code, v.shape[1], bp_)
         v, e, d = peel_decode_adaptive_seeded_pallas(
-            _seeded_spec(code), v, e, int(max_iters), bp=bp_, bv=bv_)
+            _seeded_spec(code), v, e, int(max_iters), bp=bp_, bv=bv_,
+            mode=mode)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive(H, Hb, v, e, int(max_iters))
@@ -743,21 +802,20 @@ def _peel_adaptive_sparse_batch(check_idx, check_coeff, var_idx, values,
     rounding churn) and the loop exits as soon as every slot is done, so a
     batch of light stragglers costs 1-2 rounds regardless of the budget.
     Layout and round semantics are exactly :func:`peel_round_sparse_batch`'s
-    (values (B, N, V), erased (B, N) bool; V lanes of one slot share the
-    trajectory).  Returns (values, erased, rounds (B,)).
+    (values (B, N, V), erased (B, N) bool; the V lanes of one slot share
+    the trajectory, and all structure work runs once per slot).  Returns
+    (values, erased, rounds (B,)).
     """
     B, N, V = values.shape
     dt = values.dtype
-    vb = jnp.transpose(values, (1, 0, 2)).reshape(N, B * V)
-    eb = jnp.repeat(erased.T.astype(dt), V, axis=1)          # (N, B*V)
-    zrow = jnp.zeros((1, B * V), dt)
-    vb = jnp.concatenate([vb, zrow])
-    eb = jnp.concatenate([eb, zrow])
+    vb = jnp.concatenate([jnp.transpose(values, (1, 0, 2)),
+                          jnp.zeros((1, B, V), dt)])         # (N+1, B, V)
+    eb = jnp.concatenate([erased.T.astype(dt),
+                          jnp.zeros((1, B), dt)])            # (N+1, B)
     budgets = budgets.astype(jnp.int32)
 
     def slot_erased_any(eb_):
-        # lane 0 of each slot (all V lanes share the mask): (B,) bool
-        return eb_[:N].reshape(N, B, V)[:, :, 0].sum(axis=0) > 0.0
+        return eb_[:N].sum(axis=0) > 0.0                     # (B,) bool
 
     # The per-slot predicate ``(d < budget) & progressed & any_erased`` is
     # carried as one ACTIVE mask (slots only ever deactivate), so each round
@@ -768,12 +826,11 @@ def _peel_adaptive_sparse_batch(check_idx, check_coeff, var_idx, values,
 
     def body(carry):
         vb_, eb_, d, active = carry
-        lane = jnp.repeat(active, V)                         # (B*V,)
         vb2, eb2 = peel_round_sparse_batch(check_idx, check_coeff, var_idx,
                                            vb_, eb_)
-        changed = (eb2[:N] != eb_[:N]).reshape(N, B, V)[:, :, 0].any(axis=0)
-        vb_ = jnp.where(lane[None, :], vb2, vb_)
-        eb_ = jnp.where(lane[None, :], eb2, eb_)
+        changed = (eb2[:N] != eb_[:N]).any(axis=0)           # (B,)
+        vb_ = jnp.where(active[None, :, None], vb2, vb_)
+        eb_ = jnp.where(active[None, :], eb2, eb_)
         d = jnp.where(active, d + 1, d)
         active = (active & (d < budgets) & changed
                   & slot_erased_any(eb_))
@@ -782,8 +839,8 @@ def _peel_adaptive_sparse_batch(check_idx, check_coeff, var_idx, values,
     active0 = (budgets > 0) & slot_erased_any(eb)
     vb, eb, d, _ = jax.lax.while_loop(
         cond, body, (vb, eb, jnp.zeros((B,), jnp.int32), active0))
-    out_v = jnp.transpose(vb[:N].reshape(N, B, V), (1, 0, 2))
-    out_e = eb[:N].reshape(N, B, V)[:, :, 0].T > 0.0
+    out_v = jnp.transpose(vb[:N], (1, 0, 2))
+    out_e = eb[:N].T > 0.0
     return out_v, out_e, d
 
 
@@ -798,6 +855,7 @@ def peel_decode_batch_adaptive(
     bp: int | None = None,
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
+    seeded_mode: str = "dense_tile",
 ) -> DecodeResult:
     """Decode ``B`` independent patterns with PER-SLOT early exit, one launch.
 
@@ -862,8 +920,9 @@ def peel_decode_batch_adaptive(
             peel_decode_batch_adaptive_seeded_pallas)
 
         bp_, bv_ = _tile_knobs(code, bp, bv, vmem_budget_bytes)
+        mode = _resolve_seeded_mode(seeded_mode, code, v.shape[2], bp_)
         v, e, d = peel_decode_batch_adaptive_seeded_pallas(
-            _seeded_spec(code), v, e, budgets, bp=bp_, bv=bv_)
+            _seeded_spec(code), v, e, budgets, bp=bp_, bv=bv_, mode=mode)
     else:
         H, Hb = _mats(code, v.dtype)
         v, e, d = _peel_adaptive_dense_batch(H, Hb, v, e, budgets)

@@ -23,6 +23,16 @@ and the per-step codeword ``C θ`` to a gather over ``y = M θ``
 materialized.  The same gather tables drive the sharded worker encode
 (``distributed/worker.local_products_seeded``), so single-device and
 distributed products are bit-identical.
+
+FUSED seeded encode (:func:`encode_seeded`): the gather itself moves into a
+Pallas kernel (``encode_seeded_fused``) that regenerates each row's
+(column, weight) pairs in-register, so not even the ``(N, r+1)`` index
+tables exist.  :func:`gather_encode` runs its sum SEQUENTIALLY in table
+order for exactly this reason: under jit, XLA:CPU contracts each
+multiply-add into an FMA the same way inside and outside the kernel, so the
+fused kernel is bit-identical to the jit-compiled table gather (a
+``(g * c).sum(axis=1)`` reduction would sum in a different association
+order and only match to ~1 ulp).
 """
 from __future__ import annotations
 
@@ -31,11 +41,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ldpc import LDPCCode, seeded_generator_rows
+from repro.core.ldpc import (LDPCCode, seeded_generator_rows,
+                             seeded_structure)
 
 __all__ = ["Moments", "second_moment", "encode_moment",
            "encode_moment_blocks", "encode_moment_seeded", "gather_encode",
-           "generator_gather_tables"]
+           "generator_gather_tables", "encode_seeded",
+           "generator_structure_of"]
 
 
 class Moments(NamedTuple):
@@ -96,13 +108,21 @@ def gather_encode(idx: jax.Array, coeff: jax.Array,
     coefficient 0 — exact zeros, no sentinel row needed.  Single-device
     encodes and each sharded worker's fused encode-matvec run this same
     gather+sum over their row ranges, so their products are bit-identical.
+
+    The sum is SEQUENTIAL in table-slot order: under jit this lowers to
+    the same FMA chain as the fused Pallas encode kernel
+    (``kernels.ldpc_peel.encode_seeded_fused``), making the two
+    bit-identical — the load-bearing property behind every
+    materialized-vs-fused encode parity check.
     """
     yj = jnp.asarray(y)
-    g = yj[idx]                               # (n, rw) or (n, rw, V)
     c = coeff.astype(yj.dtype)
     if yj.ndim == 2:
         c = c[..., None]
-    return (g * c).sum(axis=1)
+    out = c[:, 0] * yj[idx[:, 0]]
+    for s in range(1, idx.shape[1]):
+        out = out + c[:, s] * yj[idx[:, s]]
+    return out
 
 
 def encode_moment_seeded(code: LDPCCode, M: jax.Array) -> jax.Array:
@@ -121,3 +141,35 @@ def encode_moment_seeded(code: LDPCCode, M: jax.Array) -> jax.Array:
                          "use encode_moment_blocks for K | k")
     idx, coeff = generator_gather_tables(code)
     return gather_encode(idx, coeff, M)
+
+
+def generator_structure_of(code: LDPCCode):
+    """The :class:`repro.core.ldpc.SeededStructure` of a seeded LDGM code's
+    generator parity block ``P`` (``G = [I; P]``) — the static spec the
+    fused encode kernel regenerates rows from."""
+    kind = getattr(code, "kind", None)
+    if kind != "ldgm-seeded":
+        raise ValueError(
+            f"fused seeded encode needs a make_seeded_ldgm code "
+            f"(kind='ldgm-seeded'); got kind={kind!r}")
+    return seeded_structure(code.p, code.K, code.r - 1, code.seed)
+
+
+def encode_seeded(code: LDPCCode, y: jax.Array, row0=0, *,
+                  n_out: int | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Codeword rows ``[row0, row0 + n_out)`` of ``G @ y`` via the FUSED
+    seeded encode kernel — no gather tables, no generator.
+
+    ``y`` is ``(K,)`` or ``(K, V)``; ``row0`` may be traced (sharded
+    workers pass their row offset); ``n_out`` defaults to the full
+    codeword ``N``.  Bit-identical to the (jit-compiled)
+    :func:`gather_encode` over :func:`generator_gather_tables` rows —
+    see the module docstring for why the summation orders agree.
+    """
+    from repro.kernels.ldpc_peel.ops import encode_seeded_fused_pallas
+    st = generator_structure_of(code)
+    if n_out is None:
+        n_out = code.N
+    return encode_seeded_fused_pallas(st, y, row0, n_out=n_out,
+                                      interpret=interpret)

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decoder import (
+    SEEDED_MODES,
     DecodeResult,
     peel_decode,
     peel_decode_adaptive,
@@ -112,6 +113,9 @@ class CodedComputeEngine:
     bp: int | None = None
     bv: int | None = None
     vmem_budget_bytes: int | None = None
+    # "pallas_seeded" round sub-dispatch: dense_tile | gather | auto
+    # (the hwcaps FLOPs-crossover rule); ignored by other backends.
+    seeded_mode: str = "dense_tile"
 
     def __post_init__(self) -> None:
         # Fail fast on unknown/unsupported backend names (same matrix as
@@ -119,6 +123,9 @@ class CodedComputeEngine:
         # the resolved dispatch where operators can see it.
         resolve_backend(self.backend, self.code, adaptive=self.adaptive,
                         vmem_budget_bytes=self.vmem_budget_bytes)
+        if self.seeded_mode not in SEEDED_MODES:
+            raise ValueError(f"unknown seeded_mode {self.seeded_mode!r}; "
+                             f"want one of {SEEDED_MODES}")
         if logger.isEnabledFor(logging.DEBUG):
             logger.debug("CodedComputeEngine: %s", self.debug_info())
 
@@ -140,11 +147,13 @@ class CodedComputeEngine:
             "N": self.code.N,
             "decode_iters": self.decode_iters,
             "adaptive": self.adaptive,
+            "seeded_mode": self.seeded_mode,
         }
 
     def _tile_kw(self) -> dict:
         return {"bp": self.bp, "bv": self.bv,
-                "vmem_budget_bytes": self.vmem_budget_bytes}
+                "vmem_budget_bytes": self.vmem_budget_bytes,
+                "seeded_mode": self.seeded_mode}
 
     # -------------------------------------------------------------- stages
 

@@ -1,0 +1,101 @@
+"""Hardware-capability shim: the FLOPs/bytes model behind ``seeded_mode="auto"``.
+
+ROADMAP item 5 asks for a small capability layer so dispatch decisions made
+analytically on CPU-interpret CI carry over to real TPU runs with measured
+numbers behind them.  This module is that seam: :func:`detect_caps` reports
+the platform and a single scalar — ``mxu_advantage``, the effective FLOPs
+multiplier the dense regenerated-tile round enjoys because its inner product
+runs on the MXU while the gather round's FMA chain runs on the VPU — and
+:func:`pick_seeded_mode` folds it into the dense-vs-gather crossover:
+
+    gather  iff  dense_flops > mxu_advantage * gather_flops
+
+On CPU (interpret-mode CI) both paths run scalar code, so
+``mxu_advantage = 1.0`` and gather wins everywhere its modeled FLOPs are
+lower (N/r ≫ 1: always, for real codes).  On TPU the placeholder advantage
+is 8.0 — a deliberately conservative stand-in until ROADMAP item 5's
+profiling replaces it with measured per-(N, r) counters; the dispatch rule
+and every caller stay unchanged when that lands.
+
+The per-round FLOPs models count the work of ONE flooding round at padded
+shapes (``p_pad × n_pad`` dense tiles vs ``p_pad × r`` gathered edges plus
+the inverse-permutation scatter merge), mirroring the kernel loop structure
+in ``repro.kernels.ldpc_peel.kernel`` — they are the same expressions the
+``seeded_gather`` benchmark section records and CI gates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["HardwareCaps", "detect_caps", "seeded_dense_round_flops",
+           "seeded_gather_round_flops", "pick_seeded_mode"]
+
+
+def _pad_to(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareCaps:
+    """What the dispatch model knows about the accelerator.
+
+    ``mxu_advantage`` — effective dense-matmul FLOPs discount vs scalar VPU
+    work: the dense round's FLOPs count is divided by it before comparing
+    against the gather round's.  1.0 on CPU/interpret; 8.0 placeholder on
+    TPU until real profiling (ROADMAP item 5) supplies measured values.
+    """
+
+    platform: str
+    mxu_advantage: float
+
+
+def detect_caps(platform: str | None = None) -> HardwareCaps:
+    """Capabilities of the default JAX backend (or an explicit platform)."""
+    if platform is None:
+        platform = jax.default_backend()
+    return HardwareCaps(platform=platform,
+                        mxu_advantage=8.0 if platform == "tpu" else 1.0)
+
+
+def seeded_dense_round_flops(spec, V: int, *, bp: int = 128) -> int:
+    """Modeled FLOPs of ONE dense-regenerated-tile round.
+
+    Per ``bp × n_pad`` tile: regenerate the tile (~5 ops/entry), the
+    ``H_tile @ [vals, e, pos]`` contractions (2 FLOPs/entry each over V
+    payload lanes + 2 structure lanes), and the O(p) row epilogue folded
+    into the per-entry count: ≈ ``p_pad · n_pad · (4V + 7)``.
+    """
+    p_pad = _pad_to(spec.rows, min(bp, _pad_to(spec.rows, 8)))
+    n_pad = _pad_to(spec.cols, 128)
+    return p_pad * n_pad * (4 * V + 7)
+
+
+def seeded_gather_round_flops(spec, V: int, *, bp: int = 128) -> int:
+    """Modeled FLOPs of ONE gather/segment-sum round.
+
+    Check pass: r gathered edges per check row, each a weight draw + FMA
+    over V lanes + cnt/pos/coeff updates ≈ ``p_pad · r · (2V + 6)``.
+    Merge pass: the inverse-permutation scatter visits each variable once
+    per layer per tile ≈ ``n_tiles · n_pad · l · (2V + 8)``.
+    """
+    bp_eff = min(bp, _pad_to(spec.rows, 8))
+    p_pad = _pad_to(spec.rows, bp_eff)
+    n_pad = _pad_to(spec.cols, 128)
+    n_tiles = p_pad // bp_eff
+    r = spec.row_weight
+    l = spec.layers
+    return (p_pad * r * (2 * V + 6)
+            + n_tiles * n_pad * l * (2 * V + 8))
+
+
+def pick_seeded_mode(spec, V: int = 1, *, bp: int = 128,
+                     caps: HardwareCaps | None = None) -> str:
+    """Resolve ``seeded_mode="auto"``: "gather" iff the dense round's
+    modeled FLOPs exceed ``mxu_advantage ×`` the gather round's."""
+    if caps is None:
+        caps = detect_caps()
+    dense = seeded_dense_round_flops(spec, V, bp=bp)
+    gather = seeded_gather_round_flops(spec, V, bp=bp)
+    return "gather" if dense > caps.mxu_advantage * gather else "dense_tile"

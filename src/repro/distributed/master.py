@@ -77,6 +77,7 @@ from repro.distributed.topology import (
     replicated_sharding,
 )
 from repro.distributed.worker import (
+    build_seeded_fused_worker_products,
     build_seeded_worker_products,
     build_worker_products,
     shard_encoded_rows,
@@ -89,7 +90,7 @@ __all__ = ["DistributedRunResult", "DistributedCodedGD",
 
 BUDGET_MODES = ("fixed", "telemetry")
 MASTER_DECODES = ("single", "sharded")
-WORKER_ENCODES = ("materialized", "seeded")
+WORKER_ENCODES = ("materialized", "seeded", "seeded-fused")
 
 
 def delay_step_control(delays: np.ndarray, wait_for: int,
@@ -154,6 +155,10 @@ class DistributedCodedGD:
     # tables and fuse encode into the matvec (z = gather(M θ) per row);
     # requires a Scheme2.build_seeded scheme (scheme.C is then the raw M).
     # Products — hence trajectories — are bit-identical across the two.
+    # "seeded-fused": like "seeded" but the gather runs inside the fused
+    # Pallas encode kernel with indices regenerated in-register from the
+    # seed — workers hold NO tables at all.  Bit-identical to a reference
+    # Scheme2 built with encode_fused=True (kernel on both sides).
     worker_encode: str = "materialized"
     estimator: StragglerRateEstimator | None = None
     max_rounds: int | None = None     # telemetry worst-case budget ceiling
@@ -175,11 +180,13 @@ class DistributedCodedGD:
         if self.worker_encode not in WORKER_ENCODES:
             raise ValueError(f"unknown worker_encode {self.worker_encode!r}; "
                              f"want one of {WORKER_ENCODES}")
-        if self.worker_encode == "seeded" and not self.scheme.seeded_encode:
+        if (self.worker_encode in ("seeded", "seeded-fused")
+                and not self.scheme.seeded_encode):
             raise ValueError(
-                "worker_encode='seeded' needs a Scheme2.build_seeded scheme "
-                "(seeded_encode=True, C holding the raw moment matrix M); "
-                "this scheme stores a materialized encoded operator")
+                f"worker_encode={self.worker_encode!r} needs a "
+                "Scheme2.build_seeded scheme (seeded_encode=True, C holding "
+                "the raw moment matrix M); this scheme stores a "
+                "materialized encoded operator")
         if self.topology.N != self.scheme.w:
             raise ValueError(
                 f"topology covers N={self.topology.N} rows but the scheme's "
@@ -192,12 +199,14 @@ class DistributedCodedGD:
         if self.max_rounds is None:
             self.max_rounds = int(self.scheme.decode_iters)
         self._replicated = replicated_sharding(self.mesh)
-        if self.worker_encode == "seeded":
-            # Workers never hold encoding-matrix rows: their slice of the
-            # generator gather tables is sharded; the raw moment matrix M
-            # (scheme.C under seeded_encode) is replicated problem data.
-            self._tables_sharded = shard_generator_tables(
-                self.scheme.code, self.mesh, self.topology)
+        if self.worker_encode in ("seeded", "seeded-fused"):
+            # Workers never hold encoding-matrix rows: the raw moment matrix
+            # M (scheme.C under seeded_encode) is replicated problem data.
+            # Plain "seeded" shards the generator gather tables; the fused
+            # mode regenerates indices in-kernel and needs no tables at all.
+            if self.worker_encode == "seeded":
+                self._tables_sharded = shard_generator_tables(
+                    self.scheme.code, self.mesh, self.topology)
             self._M_replicated = jax.device_put(
                 jnp.asarray(self.scheme.C), self._replicated)
         else:
@@ -223,6 +232,22 @@ class DistributedCodedGD:
         single-device view, usable as a master-program operand."""
         return x.addressable_shards[self._mshard_idx].data
 
+    def _launch_workers(self, theta_rep: jax.Array,
+                        mask_rep: jax.Array) -> jax.Array:
+        """One SPMD worker launch with the operands the built program wants:
+        the per-mode operator placement (sharded C rows / sharded gather
+        tables + replicated M / replicated M alone) plus the replicated
+        broadcast.  Shared by :meth:`step` and the pipelined driver so the
+        worker-encode dispatch lives exactly once."""
+        if self.worker_encode == "seeded":
+            idx_sh, coeff_sh = self._tables_sharded
+            return self._worker_program(idx_sh, coeff_sh, self._M_replicated,
+                                        theta_rep, mask_rep)
+        if self.worker_encode == "seeded-fused":
+            return self._worker_program(self._M_replicated, theta_rep,
+                                        mask_rep)
+        return self._worker_program(self._C_sharded, theta_rep, mask_rep)
+
     # ------------------------------------------------------------ step build
 
     @property
@@ -243,6 +268,13 @@ class DistributedCodedGD:
             def worker_program(idx_sh, coeff_sh, M, theta, worker_mask):
                 erased = topo.to_symbol_erasure(worker_mask)  # partition lift
                 return seeded_products(idx_sh, coeff_sh, M, theta, erased)
+        elif self.worker_encode == "seeded-fused":
+            fused_products = build_seeded_fused_worker_products(
+                scheme.code, self.mesh)
+
+            def worker_program(M, theta, worker_mask):
+                erased = topo.to_symbol_erasure(worker_mask)  # partition lift
+                return fused_products(M, theta, erased)
         else:
             worker_products = build_worker_products(self.mesh)
 
@@ -347,12 +379,7 @@ class DistributedCodedGD:
         theta_rep = jax.device_put(theta, self._replicated)
         mask_rep = jax.device_put(worker_mask, self._replicated)
         budget_arr = np.asarray([budget], np.int32)
-        if self.worker_encode == "seeded":
-            idx_sh, coeff_sh = self._tables_sharded
-            z = self._worker_program(idx_sh, coeff_sh, self._M_replicated,
-                                     theta_rep, mask_rep)
-        else:
-            z = self._worker_program(self._C_sharded, theta_rep, mask_rep)
+        z = self._launch_workers(theta_rep, mask_rep)
         if self.master_decode == "sharded":
             # decode over the mesh: check tiles stay sharded; z/θ/mask are
             # already replicated (z is the worker program's output sharding)

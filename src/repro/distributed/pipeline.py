@@ -407,12 +407,7 @@ class AsyncDistributedCodedGD:
             ti = t - 1 - tau
             theta_in = theta_rep[ti] if ti >= 0 else theta0_rep
             never_rep = jax.device_put(c["never"], rep)
-            if self.worker_encode == "seeded":
-                idx_sh, coeff_sh = sync._tables_sharded
-                z = sync._worker_program(idx_sh, coeff_sh, sync._M_replicated,
-                                         theta_in, never_rep)
-            else:
-                z = sync._worker_program(sync._C_sharded, theta_in, never_rep)
+            z = sync._launch_workers(theta_in, never_rep)
 
             # 2. folds whose arrivals land THIS step (independent of the
             # current θ, so they overlap the worker launch like the decode)

@@ -17,7 +17,11 @@ with the first diverging step otherwise.  The CI fake-8-device job and
 (``Scheme2.build_seeded`` vs ``DistributedCodedGD(worker_encode="seeded")``):
 workers hold only their slice of the generator gather tables and fuse the
 encode into the matvec — parity then proves the on-the-fly worker encode is
-bit-identical to the single-device seeded gather.  ``--grad-agg`` checks the
+bit-identical to the single-device seeded gather.  ``--worker-encode
+seeded-fused`` goes one step further: BOTH sides run the fused Pallas
+encode kernel (reference ``Scheme2.build_seeded(..., encode_fused=True)``
+vs fused shard-local kernels with traced row offsets) — parity proves the
+in-register index regeneration matches per shard.  ``--grad-agg`` checks the
 additive-loss path instead: :class:`repro.distributed.master
 .DistributedCodedAggregator` vs the single-device
 :class:`repro.core.grad_agg.CodedAggregator` under the lifted worker masks.
@@ -54,6 +58,30 @@ from repro.distributed.topology import WorkerTopology, make_worker_mesh
 from repro.distributed.worker import WorkerStragglers
 
 
+def _build_scheme(K: int, worker_encode: str, backend: str, seed: int):
+    """The shared problem + scheme of the GD parity checks: a seeded LDGM
+    scheme for the seeded worker encodes (fused kernel on the reference
+    side under ``seeded-fused`` — the kernel must sit on BOTH sides for
+    bit-parity, since it fixes its own FMA summation order), the
+    materialized regular-LDPC scheme otherwise."""
+    if worker_encode in ("seeded", "seeded-fused"):
+        # Seeded layered-permutation P needs K % rw == 0 and
+        # p % (K // rw) == 0; (K, K//2, rw=8) satisfies both for K % 16 == 0.
+        code = make_seeded_ldgm(K, K // 2, row_weight=8, seed=seed)
+    else:
+        code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    prob = make_linear_problem(m=4 * K, k=K, seed=seed)
+    mom = second_moment(prob.X, prob.y)
+    if worker_encode == "materialized":
+        scheme = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
+                               decode_backend=backend)
+    else:
+        scheme = Scheme2.build_seeded(
+            code, mom, lr=prob.lr, decode_iters=8, decode_backend=backend,
+            encode_fused=(worker_encode == "seeded-fused"))
+    return scheme, prob
+
+
 def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
                  q0: float = 0.25, backend: str = "sparse",
                  master_decode: str = "single",
@@ -73,19 +101,12 @@ def check_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
     generator gather over ``y = M θ``), the distributed side shards the
     gather tables over the mesh — parity proves the fused worker-side
     encode-matvec is bit-identical to the single-device one.
+    ``worker_encode="seeded-fused"`` puts the fused Pallas encode kernel on
+    both sides (reference built ``encode_fused=True``; workers run the same
+    kernel over their own row windows with a traced row offset).
     """
-    if worker_encode == "seeded":
-        # Seeded layered-permutation P needs K % rw == 0 and
-        # p % (K // rw) == 0; (K, K//2, rw=8) satisfies both for K % 16 == 0.
-        code = make_seeded_ldgm(K, K // 2, row_weight=8, seed=seed)
-    else:
-        code = make_regular_ldpc(K, l=3, r=6, seed=seed)
-    prob = make_linear_problem(m=4 * K, k=K, seed=seed)
-    mom = second_moment(prob.X, prob.y)
-    build = (Scheme2.build_seeded if worker_encode == "seeded"
-             else Scheme2.build)
-    scheme = build(code, mom, lr=prob.lr, decode_iters=8,
-                   decode_backend=backend)
+    scheme, prob = _build_scheme(K, worker_encode, backend, seed)
+    code = scheme.code
     topo = WorkerTopology(n_workers, code.N)
     dist = DistributedCodedGD(scheme, topo, make_worker_mesh(),
                               master_decode=master_decode,
@@ -165,16 +186,8 @@ def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
     unresolved counts, round counts, and budgets must match exactly; the
     assertion names the first diverging step.  Returns total steps checked.
     """
-    if worker_encode == "seeded":
-        code = make_seeded_ldgm(K, K // 2, row_weight=8, seed=seed)
-    else:
-        code = make_regular_ldpc(K, l=3, r=6, seed=seed)
-    prob = make_linear_problem(m=4 * K, k=K, seed=seed)
-    mom = second_moment(prob.X, prob.y)
-    build = (Scheme2.build_seeded if worker_encode == "seeded"
-             else Scheme2.build)
-    scheme = build(code, mom, lr=prob.lr, decode_iters=8,
-                   decode_backend=backend)
+    scheme, prob = _build_scheme(K, worker_encode, backend, seed)
+    code = scheme.code
     topo = WorkerTopology(n_workers, code.N)
     mesh = make_worker_mesh()
     theta0 = jnp.zeros(K)
@@ -225,10 +238,12 @@ def main(argv=None) -> int:
                          "mesh (check tiles partitioned; reference stays "
                          "the single-device sparse decode)")
     ap.add_argument("--worker-encode", default="materialized",
-                    choices=["materialized", "seeded"],
+                    choices=["materialized", "seeded", "seeded-fused"],
                     help="seeded = workers hold only generator gather "
                          "tables and fuse encode into the matvec "
-                         "(reference is the single-device seeded scheme)")
+                         "(reference is the single-device seeded scheme); "
+                         "seeded-fused = the fused Pallas encode kernel on "
+                         "both sides, indices regenerated in-register")
     ap.add_argument("--grad-agg", action="store_true",
                     help="check the additive-loss DistributedCodedAggregator "
                          "against the single-device CodedAggregator instead "

@@ -28,6 +28,10 @@ the SAME per-row gather+sum the single-device seeded
 ``Scheme2.build_seeded`` runs, so distributed products are bit-identical
 to the single-device ones; the per-device structure footprint drops from
 ``(N/W)·k`` floats to ``(N/W)·row_weight`` table entries.
+:func:`build_seeded_fused_worker_products` goes one step further: the
+gather runs inside the fused Pallas encode kernel with indices regenerated
+in-register from the seed, so workers hold NO tables at all (structure
+footprint: a few ints).
 
 The worker payload may be 2-D: ``theta (k, dim)`` (coded gradient
 AGGREGATION, where each systematic symbol is a flattened partial gradient)
@@ -43,14 +47,15 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.encoding import gather_encode
+from repro.core.encoding import gather_encode, generator_structure_of
 from repro.core.ldpc import LDPCCode, seeded_generator_rows
 from repro.core.straggler import StragglerModel
 from repro.distributed.topology import WorkerTopology, row_sharding
 
 __all__ = ["WorkerStragglers", "local_products", "build_worker_products",
            "shard_encoded_rows", "local_products_seeded",
-           "build_seeded_worker_products", "shard_generator_tables"]
+           "build_seeded_worker_products", "shard_generator_tables",
+           "build_seeded_fused_worker_products"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +156,45 @@ def build_seeded_worker_products(mesh: Mesh):
         in_specs=(P("workers", None), P("workers", None), P(), P(),
                   P("workers")),
         out_specs=P("workers"))
+
+
+def build_seeded_fused_worker_products(code: LDPCCode, mesh: Mesh):
+    """The FUSED seeded worker stage: ``(M, θ, erased) → z`` — no tables.
+
+    Each device computes ``y = M θ`` (replicated math) and runs the fused
+    Pallas encode kernel over ITS OWN codeword row window, regenerating the
+    generator's (column, weight) pairs in-register from the code's seed:
+    the per-device structure footprint drops from ``(N/W)·row_weight``
+    table entries to the handful of seed ints baked into the program.  The
+    row offset ``axis_index · rows_per_worker`` is a TRACED kernel operand,
+    so all shards share one compilation.  Products are bit-identical to
+    :func:`local_products_seeded`'s under jit (the kernel and the
+    sequential :func:`repro.core.encoding.gather_encode` lower to the same
+    FMA chain) — and therefore to ``Scheme2.build_seeded``'s.
+    """
+    from repro.kernels.ldpc_peel.ops import encode_seeded_fused_pallas
+
+    st = generator_structure_of(code)
+    n_workers = mesh.shape["workers"]
+    if code.N % n_workers:
+        raise ValueError(f"N={code.N} not divisible by {n_workers} workers")
+    rows_per = code.N // n_workers
+
+    def local_fused(M, theta, erased_shard):
+        y = M @ theta
+        row0 = jax.lax.axis_index("workers") * rows_per
+        z = encode_seeded_fused_pallas(st, y, row0, n_out=rows_per)
+        m = erased_shard
+        while m.ndim < z.ndim:
+            m = m[..., None]
+        return jnp.where(m, 0.0, z)
+
+    # check_rep=False: shard_map has no replication rule for pallas_call;
+    # the kernel only READS the replicated y, so the spec stays sound.
+    return shard_map(
+        local_fused, mesh=mesh,
+        in_specs=(P(), P(), P("workers")),
+        out_specs=P("workers"), check_rep=False)
 
 
 def shard_generator_tables(code: LDPCCode, mesh: Mesh,

@@ -71,6 +71,37 @@ generator :func:`seeded_h_tile` is bit-exact against the NumPy reference
 arithmetic or exact-in-f32 float math — so seeded trajectories are
 bit-identical to every materialized backend on the same code, while the
 operand traffic for H drops to zero bytes.
+
+Each seeded kernel takes a static ``mode`` selecting HOW the round is
+computed (the trajectory is identical either way):
+
+* ``mode="dense_tile"`` (default) — regenerate the dense ``(bp, N)`` tile
+  and reuse the tiled round's MXU matmuls on it: O(p·N) FLOPs per round.
+* ``mode="gather"`` — never build the tile.  The check pass generates only
+  the ``r`` (column, weight) pairs per check row from the seed and computes
+  cnt/pos/coeff/sums as ``r`` gathers + a static segment-sum
+  (:func:`_seeded_gather_round`); the variable pass inverts the layered
+  affine permutations (a per-layer modular inverse, compiled in) so each
+  column finds its ``l`` candidate check rows by direct index arithmetic —
+  no scatter, no one-hot.  O(p·r + N·l·p/bp) FLOPs per round, an ~N/r
+  compute win over the dense tile.  All solvability quantities are
+  integer-exact, and the first-match/first-tile-wins merges reproduce the
+  lowest-check-row tie-break, so gather-mode ERASURE TRAJECTORIES are
+  bit-identical to dense-tile (and hence to every materialized backend);
+  VALUES agree to f32 summation order (r-term draw-order sums vs tile dot
+  reductions), the same caveat that already distinguishes resident from
+  tiled.  The gathers are expressed as jnp ``take``s — exact in interpret
+  mode everywhere; tuning their lowering on real TPU rides the ROADMAP
+  item 5 profiling pass.
+
+:func:`encode_seeded_fused` is the encode-side twin: one ``pallas_call``
+that regenerates seeded-LDGM GENERATOR rows in-register (systematic +
+sorted parity draws, an odd-even transposition network standing in for the
+host-side argsort) and applies them to the payload as a sequential
+gather-FMA — bit-identical to ``repro.core.encoding.gather_encode`` over
+``seeded_generator_rows`` tables, with zero table operand traffic.  The
+row offset is a TRACED scalar so sharded workers can encode their row
+slice under ``shard_map`` without per-shard recompilation.
 """
 from __future__ import annotations
 
@@ -87,7 +118,9 @@ __all__ = ["check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive_tiled", "decode_fused_batch_adaptive_tiled",
            "decode_seeded", "decode_seeded_batch", "decode_seeded_adaptive",
            "decode_seeded_batch_adaptive", "seeded_h_tile",
-           "detect_interpret"]
+           "encode_seeded_fused", "detect_interpret"]
+
+SEEDED_MODES = ("dense_tile", "gather")
 
 _HIGH = jax.lax.Precision.HIGHEST
 
@@ -782,6 +815,37 @@ def _mix32_jnp(x):
     return x
 
 
+def _seeded_row_params(spec, rows):
+    """Per-row layer constants of global check rows ``rows`` (any shape).
+
+    Returns ``(t, a, b, jl)``: layer index, affine stride/offset (selected
+    by a static unroll over the — small — layer count, so ``spec`` stays
+    compiled-in), and the within-layer row.  Rows outside ``[0,
+    spec.rows)`` get ``a == b == 0`` (no layer matches), so their column
+    draws land on 0 and callers mask them with a ``rows < spec.rows``
+    validity test, exactly like the dense generator's zero rows.
+    """
+    t = rows // spec.rows_per_layer
+    a = jnp.zeros(rows.shape, jnp.int32)
+    b = jnp.zeros(rows.shape, jnp.int32)
+    for tt in range(spec.layers):          # static unroll: layers == l (small)
+        a = jnp.where(t == tt, jnp.int32(spec.strides[tt]), a)
+        b = jnp.where(t == tt, jnp.int32(spec.offsets[tt]), b)
+    jl = rows - t * spec.rows_per_layer
+    return t, a, b, jl
+
+
+def _seeded_edge_weight(spec, rows, s: int):
+    """Edge weight of slot ``s`` on global check rows ``rows`` — the
+    uint32-hash-to-exact-f32 map shared bit-for-bit with the NumPy
+    reference (``repro.core.ldpc._structure_rows_raw``)."""
+    edge = (rows * spec.row_weight + s).astype(jnp.uint32)
+    u = _mix32_jnp(edge ^ jnp.uint32(spec.wseed))
+    sign = 1.0 - 2.0 * (u & 1).astype(jnp.float32)
+    m = (u >> 9).astype(jnp.int32).astype(jnp.float32)   # [0, 2^23)
+    return sign * (1.0 + m * jnp.float32(2.0 ** -23))    # exact f32
+
+
 def seeded_h_tile(spec, row0, bp: int, n_pad: int):
     """Regenerate the dense ``(bp, n_pad)`` H tile at check row ``row0``.
 
@@ -798,24 +862,14 @@ def seeded_h_tile(spec, row0, bp: int, n_pad: int):
     are static.
     """
     rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bp, 1), 0)  # global
-    t = rows // spec.rows_per_layer
-    a = jnp.zeros((bp, 1), jnp.int32)
-    b = jnp.zeros((bp, 1), jnp.int32)
-    for tt in range(spec.layers):          # static unroll: layers == l (small)
-        a = jnp.where(t == tt, jnp.int32(spec.strides[tt]), a)
-        b = jnp.where(t == tt, jnp.int32(spec.offsets[tt]), b)
-    jl = rows - t * spec.rows_per_layer
+    _, a, b, jl = _seeded_row_params(spec, rows)
     valid = (rows < spec.rows).astype(jnp.float32)      # (bp, 1) row mask
     col_iota = jax.lax.broadcasted_iota(jnp.int32, (bp, n_pad), 1)
     H = jnp.zeros((bp, n_pad), jnp.float32)
     for s in range(spec.row_weight):       # static unroll: r compares + FMAs
         x = jl * spec.row_weight + s
         col = (a * x + b) % spec.cols      # int32-safe by the stride bound
-        edge = (rows * spec.row_weight + s).astype(jnp.uint32)
-        u = _mix32_jnp(edge ^ jnp.uint32(spec.wseed))
-        sign = 1.0 - 2.0 * (u & 1).astype(jnp.float32)
-        m = (u >> 9).astype(jnp.int32).astype(jnp.float32)   # [0, 2^23)
-        w = sign * (1.0 + m * jnp.float32(2.0 ** -23))       # exact f32
+        w = _seeded_edge_weight(spec, rows, s)
         H = H + (col_iota == col).astype(jnp.float32) * (w * valid)
     return H
 
@@ -850,6 +904,131 @@ def _seeded_round(spec, *, bp: int, p_pad: int, n_pad: int):
     return round_body
 
 
+def _mod_mul(m, mult: int, c: int):
+    """``(mult * m) % c`` for traced int32 ``m`` in ``[0, c)`` with STATIC
+    Python ints ``mult``/``c``, never overflowing int32.
+
+    When the direct product fits, use it.  Otherwise split ``m = hi·2^k +
+    lo`` and fold ``2^k`` into the multiplier on the host: each partial
+    product is reduced mod ``c`` before the final add, so every
+    intermediate stays under ``2^31``.  A ``k`` exists whenever
+    ``c^3 < 2^62`` (far beyond any supported code length); otherwise the
+    caller's code is too large for int32 index arithmetic and we say so.
+    """
+    mult %= c
+    if mult * (c - 1) < 2**31:
+        return (m * jnp.int32(mult)) % jnp.int32(c)
+    for k in range(1, 31):
+        if ((c - 1) * ((1 << k) - 1) < 2**31
+                and (c - 1) * ((c - 1) >> k) < 2**31):
+            mult_k = (mult << k) % c
+            hi = m >> k
+            lo = m & ((1 << k) - 1)
+            t1 = (hi * jnp.int32(mult_k)) % jnp.int32(c)
+            t2 = (lo * jnp.int32(mult)) % jnp.int32(c)
+            return (t1 + t2) % jnp.int32(c)
+    raise ValueError(
+        f"cols={c} too large for int32 modular inverse arithmetic "
+        f"(needs c^3 < 2^62); use seeded_mode='dense_tile'")
+
+
+def _seeded_gather_round(spec, *, bp: int, p_pad: int, n_pad: int):
+    """Edge-proportional round: gathers + segment-sums, NO dense tile.
+
+    Check pass: for each check row in the tile, regenerate only its ``r``
+    (column, weight) draws and accumulate cnt/pos/coeff/sums with ``r``
+    payload gathers — cnt is an exact small-integer f32 sum, pos an int32
+    sum that collapses to the single erased neighbour exactly when the row
+    is solvable, coeff the single surviving weight (bit-equal to the dense
+    tile's masked row-sum).  Variable pass: instead of a one-hot scatter
+    matmul, invert the layered affine permutations (per-layer modular
+    inverse, a compile-time Python ``pow``) so each column computes its one
+    candidate check row per layer and gathers that row's proposal;
+    candidates ascend in row index with the layer, so first-match-wins IS
+    the lowest-row tie-break, and the cross-tile merge below is the same
+    first-tile-wins carry as :func:`_seeded_round` — the erasure
+    trajectory is bit-identical to the dense-tile mode.  Values agree to
+    f32 summation order only (draw-order r-term sums here vs tile-dot
+    reductions there).
+    """
+    n_tiles = p_pad // bp
+    r = spec.row_weight
+    # Modular inverses of the layer strides (exist: gcd(a_t, cols) == 1 by
+    # construction) — Python ints, compiled into the kernel.
+    inv = [pow(spec.strides[tt], -1, spec.cols) for tt in range(spec.layers)]
+
+    def round_body(vals, e, t_round):
+        del t_round                        # no pipeline position to keep
+        known = vals * (1.0 - e)
+        e_flat = e[:, 0]                                      # (n_pad,)
+        col2 = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)
+
+        def tile_step(j, carry):
+            resolved, scattered = carry
+            rows = j * bp + jax.lax.broadcasted_iota(jnp.int32, (bp, 1), 0)
+            _, a, b, jl = _seeded_row_params(spec, rows)
+            valid = rows < spec.rows                          # (bp, 1)
+            cnt = jnp.zeros((bp, 1), jnp.float32)
+            pos = jnp.zeros((bp, 1), jnp.int32)
+            coeff = jnp.zeros((bp, 1), jnp.float32)
+            sums = jnp.zeros((bp, known.shape[1]), jnp.float32)
+            for s in range(r):             # static unroll: r gathers
+                col_s = (a * (jl * r + s) + b) % spec.cols    # (bp, 1)
+                w_s = (_seeded_edge_weight(spec, rows, s)
+                       * valid.astype(jnp.float32))           # H entry
+                eg = e_flat[col_s]                            # (bp, 1)
+                cnt = cnt + eg             # exact: r << 2^24
+                pos = pos + col_s * eg.astype(jnp.int32)
+                coeff = coeff + w_s * eg
+                sums = sums + w_s * known[col_s[:, 0]]        # (bp, BV)
+            solvable = (cnt == 1.0) & valid
+            new_val = -sums / jnp.where(coeff == 0.0, 1.0, coeff)
+            pos = jnp.where(solvable, pos, jnp.int32(-1))
+            solvable_f = solvable.astype(jnp.float32)[:, 0]   # (bp,)
+            pos_flat = pos[:, 0]
+
+            # Variable pass: each column's candidate row in layer tt is
+            # row tt·rpl + x//r with x = a_tt^{-1}·(col - b_tt) mod cols.
+            t_res = jnp.zeros((n_pad, 1), jnp.float32)
+            t_scat = jnp.zeros((n_pad, known.shape[1]), jnp.float32)
+            for tt in range(spec.layers):  # static unroll, rows ascend in tt
+                mm = (col2 - spec.offsets[tt]) % spec.cols
+                x = _mod_mul(mm, inv[tt], spec.cols)
+                row_g = tt * spec.rows_per_layer + x // r
+                in_tile = row_g - j * bp
+                idx = jnp.clip(in_tile, 0, bp - 1)            # (n_pad, 1)
+                ok = (in_tile >= 0) & (in_tile < bp) & (col2 < spec.cols)
+                sg = solvable_f[idx]
+                pg = pos_flat[idx]
+                nv = new_val[idx[:, 0]]                       # (n_pad, BV)
+                hit = ok & (sg > 0.0) & (pg == col2)
+                take = hit & (t_res <= 0.0)
+                t_res = jnp.where(take, 1.0, t_res)
+                t_scat = jnp.where(take, nv, t_scat)
+
+            take = (t_res > 0.0) & (resolved <= 0.0)
+            return (jnp.maximum(resolved, t_res),
+                    jnp.where(take, t_scat, scattered))
+
+        resolved, scattered = jax.lax.fori_loop(
+            0, n_tiles, tile_step, (jnp.zeros_like(e), jnp.zeros_like(vals)))
+        return _apply_round(vals, e, resolved, scattered)
+
+    return round_body
+
+
+def _seeded_round_for(spec, mode: str, *, bp: int, p_pad: int, n_pad: int):
+    """Round-body factory behind the static ``mode`` knob of the seeded
+    kernels: ``"dense_tile"`` regenerates + matmuls, ``"gather"`` runs the
+    edge-proportional round.  Identical erasure trajectories."""
+    if mode == "dense_tile":
+        return _seeded_round(spec, bp=bp, p_pad=p_pad, n_pad=n_pad)
+    if mode == "gather":
+        return _seeded_gather_round(spec, bp=bp, p_pad=p_pad, n_pad=n_pad)
+    raise ValueError(f"seeded mode must be one of {SEEDED_MODES}, "
+                     f"got {mode!r}")
+
+
 def _check_seeded_operands(spec, N: int, V: int, bp: int, bv: int) -> None:
     if N % 128 or V % bv or N < spec.cols or bp % 8:
         raise ValueError(
@@ -865,20 +1044,21 @@ def _seeded_p_pad(spec, bp: int) -> int:
 
 
 def _decode_seeded_kernel(vals_ref, erased_ref, out_vals_ref, out_erased_ref,
-                          *, spec, iters: int, bp: int):
+                          *, spec, iters: int, bp: int, mode: str):
     N = vals_ref.shape[0]
-    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
-                               n_pad=N)
+    round_body = _seeded_round_for(spec, mode, bp=bp,
+                                   p_pad=_seeded_p_pad(spec, bp), n_pad=N)
     vals, e = _fixed_loop(round_body, vals_ref[...], erased_ref[...], iters)
     out_vals_ref[...] = vals
     out_erased_ref[...] = e
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "iters", "bp", "bv", "interpret"))
+                   static_argnames=("spec", "iters", "bp", "bv", "interpret",
+                                    "mode"))
 def decode_seeded(spec, values: jax.Array, erased_f: jax.Array, *,
                   iters: int, bp: int = 128, bv: int = 128,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, mode: str = "dense_tile"):
     """Fixed-``iters`` decode with H REGENERATED from the seed per tile.
 
     Inputs (already padded by ops.py): values (N, V) f32 with N % 128 == 0
@@ -897,7 +1077,7 @@ def decode_seeded(spec, values: jax.Array, erased_f: jax.Array, *,
     grid = (V // bv,)
     return pl.pallas_call(
         functools.partial(_decode_seeded_kernel, spec=spec, iters=iters,
-                          bp=bp),
+                          bp=bp, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((N, bv), lambda j: (0, j)),
@@ -916,20 +1096,23 @@ def decode_seeded(spec, values: jax.Array, erased_f: jax.Array, *,
 
 
 def _decode_seeded_batch_kernel(vals_ref, erased_ref, out_vals_ref,
-                                out_erased_ref, *, spec, iters: int, bp: int):
+                                out_erased_ref, *, spec, iters: int, bp: int,
+                                mode: str):
     N = vals_ref.shape[1]
-    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
-                               n_pad=N)
+    round_body = _seeded_round_for(spec, mode, bp=bp,
+                                   p_pad=_seeded_p_pad(spec, bp), n_pad=N)
     vals, e = _fixed_loop(round_body, vals_ref[0], erased_ref[0], iters)
     out_vals_ref[0] = vals
     out_erased_ref[0] = e
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "iters", "bp", "bv", "interpret"))
+                   static_argnames=("spec", "iters", "bp", "bv", "interpret",
+                                    "mode"))
 def decode_seeded_batch(spec, values: jax.Array, erased_f: jax.Array, *,
                         iters: int, bp: int = 128, bv: int = 128,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        mode: str = "dense_tile"):
     """``B`` independent patterns, H regenerated from the seed per tile.
 
     Same contract as :func:`decode_fused_batch_tiled` (values (B, N, V),
@@ -943,7 +1126,7 @@ def decode_seeded_batch(spec, values: jax.Array, erased_f: jax.Array, *,
     grid = (B, V // bv)
     return pl.pallas_call(
         functools.partial(_decode_seeded_batch_kernel, spec=spec,
-                          iters=iters, bp=bp),
+                          iters=iters, bp=bp, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
@@ -963,10 +1146,10 @@ def decode_seeded_batch(spec, values: jax.Array, erased_f: jax.Array, *,
 
 def _decode_seeded_adaptive_kernel(vals_ref, erased_ref, out_vals_ref,
                                    out_erased_ref, out_rounds_ref, *, spec,
-                                   max_iters: int, bp: int):
+                                   max_iters: int, bp: int, mode: str):
     N = vals_ref.shape[0]
-    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
-                               n_pad=N)
+    round_body = _seeded_round_for(spec, mode, bp=bp,
+                                   p_pad=_seeded_p_pad(spec, bp), n_pad=N)
     vals, e, d = _adaptive_loop(round_body, vals_ref[...], erased_ref[...],
                                 max_iters)
     out_vals_ref[...] = vals
@@ -975,10 +1158,11 @@ def _decode_seeded_adaptive_kernel(vals_ref, erased_ref, out_vals_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "max_iters", "bp", "bv",
-                                             "interpret"))
+                                             "interpret", "mode"))
 def decode_seeded_adaptive(spec, values: jax.Array, erased_f: jax.Array, *,
                            max_iters: int, bp: int = 128, bv: int = 128,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           mode: str = "dense_tile"):
     """Early-exit decode with seed-regenerated tiles: an early exit stops
     the tile regeneration compute the way it stops the tiled kernel's H
     streaming.  Same stopping rule and outputs as
@@ -990,7 +1174,7 @@ def decode_seeded_adaptive(spec, values: jax.Array, erased_f: jax.Array, *,
     grid = (V // bv,)
     return pl.pallas_call(
         functools.partial(_decode_seeded_adaptive_kernel, spec=spec,
-                          max_iters=max_iters, bp=bp),
+                          max_iters=max_iters, bp=bp, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((N, bv), lambda j: (0, j)),
@@ -1012,10 +1196,11 @@ def decode_seeded_adaptive(spec, values: jax.Array, erased_f: jax.Array, *,
 
 def _decode_seeded_batch_adaptive_kernel(vals_ref, erased_ref, budget_ref,
                                          out_vals_ref, out_erased_ref,
-                                         out_rounds_ref, *, spec, bp: int):
+                                         out_rounds_ref, *, spec, bp: int,
+                                         mode: str):
     N = vals_ref.shape[1]
-    round_body = _seeded_round(spec, bp=bp, p_pad=_seeded_p_pad(spec, bp),
-                               n_pad=N)
+    round_body = _seeded_round_for(spec, mode, bp=bp,
+                                   p_pad=_seeded_p_pad(spec, bp), n_pad=N)
     vals, e, d = _adaptive_loop(round_body, vals_ref[0], erased_ref[0],
                                 budget_ref[0, 0])  # THIS slot's round budget
     out_vals_ref[0] = vals
@@ -1023,11 +1208,13 @@ def _decode_seeded_batch_adaptive_kernel(vals_ref, erased_ref, budget_ref,
     out_rounds_ref[...] = jnp.full((1, 1), d, jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bp", "bv", "interpret"))
+@functools.partial(jax.jit, static_argnames=("spec", "bp", "bv", "interpret",
+                                             "mode"))
 def decode_seeded_batch_adaptive(spec, values: jax.Array,
                                  erased_f: jax.Array, budgets: jax.Array, *,
                                  bp: int = 128, bv: int = 128,
-                                 interpret: bool | None = None):
+                                 interpret: bool | None = None,
+                                 mode: str = "dense_tile"):
     """Per-slot adaptive decode of ``B`` patterns, seed-regenerated tiles.
 
     Same contract as :func:`decode_fused_batch_adaptive_tiled` (budgets
@@ -1041,7 +1228,7 @@ def decode_seeded_batch_adaptive(spec, values: jax.Array,
     grid = (B, V // bv)
     return pl.pallas_call(
         functools.partial(_decode_seeded_batch_adaptive_kernel, spec=spec,
-                          bp=bp),
+                          bp=bp, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, N, bv), lambda b, j: (b, 0, j)),
@@ -1060,3 +1247,95 @@ def decode_seeded_batch_adaptive(spec, values: jax.Array,
         ],
         interpret=interpret,
     )(values, erased_f, budgets)
+
+
+# ----------------------------------------------------- seeded fused encode --
+
+
+def _encode_seeded_kernel(row0_ref, y_ref, out_ref, *, st, bo: int):
+    """One ``(bo, bv)`` tile of seeded-LDGM codeword rows.
+
+    Regenerates the generator gather table of each output row in-register
+    — systematic rows are the identity gather, parity rows are the seeded
+    draws sorted ASCENDING by column through an odd-even transposition
+    network (``row_weight`` compare-exchange passes; columns within a row
+    are distinct, so the network reproduces the host argsort exactly) —
+    then accumulates ``sum_s w_s * y[col_s]`` as a SEQUENTIAL gather-FMA
+    in table order, the same order ``repro.core.encoding.gather_encode``
+    uses: the products and their addition order match bit for bit.
+    """
+    i = pl.program_id(0)
+    K, rw = st.cols, st.row_weight
+    N = st.cols + st.rows
+    row = (row0_ref[0, 0] + i * bo
+           + jax.lax.broadcasted_iota(jnp.int32, (bo, 1), 0))   # global row
+    prow = row - K                         # parity row index (< 0: systematic)
+    _, a, b, jl = _seeded_row_params(st, prow)
+
+    pairs = []
+    for s in range(rw):                    # static unroll: the r draws
+        col = (a * (jl * rw + s) + b) % K
+        pairs.append((col, _seeded_edge_weight(st, prow, s)))
+    for p_ in range(rw):                   # odd-even transposition sort
+        for q in range(p_ % 2, rw - 1, 2):
+            c1, w1 = pairs[q]
+            c2, w2 = pairs[q + 1]
+            swap = c1 > c2
+            pairs[q] = (jnp.where(swap, c2, c1), jnp.where(swap, w2, w1))
+            pairs[q + 1] = (jnp.where(swap, c1, c2), jnp.where(swap, w1, w2))
+
+    is_sys = row < K                       # systematic: identity gather
+    is_par = (row >= K) & (row < N)        # pad rows (>= N): all-zero weights
+    y = y_ref[...]                         # (K_pad, bv)
+    acc = None
+    for s in range(rw):                    # sequential FMA in table order
+        c_s, w_s = pairs[s]
+        if s == 0:
+            c_s = jnp.where(is_sys, row, c_s)
+            w_s = jnp.where(is_sys, 1.0, jnp.where(is_par, w_s, 0.0))
+        else:
+            c_s = jnp.where(is_sys, 0, c_s)
+            w_s = jnp.where(is_sys, 0.0, jnp.where(is_par, w_s, 0.0))
+        term = w_s * y[c_s[:, 0]]          # (bo, bv)
+        acc = term if s == 0 else acc + term
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("st", "n_out", "bo", "bv", "interpret"))
+def encode_seeded_fused(st, y: jax.Array, row0: jax.Array, *, n_out: int,
+                        bo: int = 128, bv: int = 128,
+                        interpret: bool | None = None):
+    """``n_out`` seeded-LDGM codeword rows starting at TRACED row ``row0``.
+
+    ``st`` is the static :class:`repro.core.ldpc.SeededStructure` of the
+    ``(p, K)`` generator parity block (``st.cols == K``); ``y`` is the
+    already-padded payload (``(K_pad, V)`` f32, ``K_pad % 128 == 0``,
+    ``V % bv == 0``, rows past ``K`` zero); ``row0`` a ``(1, 1)`` int32 —
+    traced, so a shard_map'd worker passes ``axis_index * rows_per_worker``
+    and every shard shares one compilation.  Rows at global index ``>= K +
+    st.rows`` (output padding) come out exactly zero.  Returns ``(n_out,
+    V)`` f32, bit-identical to ``gather_encode`` on the corresponding
+    ``seeded_generator_rows`` table slice — but no table is ever
+    materialized anywhere.
+    """
+    interpret = detect_interpret(interpret)
+    K_pad, V = y.shape
+    if K_pad % 128 or V % bv or K_pad < st.cols or n_out % bo or bo % 8:
+        raise ValueError(
+            "encode operands must be pre-padded (ops.py wrappers do this): "
+            f"need K_pad % 128 == 0, V % bv == 0, K_pad >= st.cols, "
+            f"n_out % bo == 0, bo % 8 == 0; got K_pad={K_pad} "
+            f"(cols={st.cols}), V={V} bv={bv}, n_out={n_out} bo={bo}")
+    grid = (n_out // bo, V // bv)
+    return pl.pallas_call(
+        functools.partial(_encode_seeded_kernel, st=st, bo=bo),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),       # traced row0
+            pl.BlockSpec((K_pad, bv), lambda i, j: (0, j)),  # payload tile
+        ],
+        out_specs=[pl.BlockSpec((bo, bv), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((n_out, V), jnp.float32)],
+        interpret=interpret,
+    )(row0, y)

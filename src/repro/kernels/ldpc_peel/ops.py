@@ -35,6 +35,17 @@ The ``peel_decode*_seeded_pallas`` family wraps the SEEDED kernels: no H
 argument at all — the caller passes the hashable
 ``repro.core.ldpc.SeededStructure`` spec (a static argument) and each tile
 is regenerated in-register from the seed.  Only the payload is padded.
+Each wrapper takes ``mode`` ("dense_tile" | "gather", static) selecting the
+round implementation — dense regenerated-tile matmul vs the
+edge-proportional gather/segment-sum round (same erasure trajectory,
+O(p·r) instead of O(p·N) FLOPs per round).
+
+:func:`encode_seeded_fused_pallas` is the ENCODE-side twin: the seeded
+LDGM generator gather (``z = gather(G_rows, y)``) fused into one
+``pallas_call`` that regenerates each output row's (column, weight) pairs
+in-register — no ``(N, r+1)`` index tables materialized.  ``row0`` stays a
+traced operand so sharded workers can encode their own row window without
+recompiling per shard.
 """
 from __future__ import annotations
 
@@ -59,6 +70,7 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_seeded_batch,
     decode_seeded_batch_adaptive,
     detect_interpret,
+    encode_seeded_fused,
 )
 
 __all__ = ["peel_round_pallas", "peel_decode_pallas",
@@ -69,7 +81,8 @@ __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_batch_adaptive_tiled_pallas",
            "peel_decode_seeded_pallas", "peel_decode_batch_seeded_pallas",
            "peel_decode_adaptive_seeded_pallas",
-           "peel_decode_batch_adaptive_seeded_pallas"]
+           "peel_decode_batch_adaptive_seeded_pallas",
+           "encode_seeded_fused_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -414,9 +427,11 @@ def _pad_operands_seeded(vals, erased_f, bv):
     return vp, ep
 
 
-@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv"))
+@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv",
+                                   "mode"))
 def _peel_decode_seeded_impl(values, erased, *, spec, iters: int,
-                             interpret: bool, bp: int = 128, bv: int = 128):
+                             interpret: bool, bp: int = 128, bv: int = 128,
+                             mode: str = "dense_tile"):
     squeeze = values.ndim == 1
     vals = values[:, None] if squeeze else values
     N, V = vals.shape
@@ -425,7 +440,8 @@ def _peel_decode_seeded_impl(values, erased, *, spec, iters: int,
     vp, ep = _pad_operands_seeded(vals, erased.astype(jnp.float32)[:, None],
                                   bv)
     out_v, out_e = decode_seeded(spec, vp, ep, iters=iters, bp=bp_eff,
-                                 bv=min(bv, vp.shape[1]), interpret=interpret)
+                                 bv=min(bv, vp.shape[1]), interpret=interpret,
+                                 mode=mode)
     out_vals = out_v[:N, :V].astype(vals.dtype)
     out_erased = out_e[:N, 0] > 0.0
     if squeeze:
@@ -435,24 +451,28 @@ def _peel_decode_seeded_impl(values, erased, *, spec, iters: int,
 
 def peel_decode_seeded_pallas(spec, values, erased, iters: int, *,
                               interpret: bool | None = None, bp: int = 128,
-                              bv: int = 128):
+                              bv: int = 128, mode: str = "dense_tile"):
     """Fixed-D decode in ONE launch with H REGENERATED from the seed.
 
     ``spec`` is the static :class:`repro.core.ldpc.SeededStructure`; values
     (N,) or (N, V); erased (N,) bool.  Same erasure trajectory as every
     materialized backend on the same code and bit-identical VALUES to the
     tiled path (same tile-shaped summation); zero H operand traffic.
+    ``mode="gather"`` swaps the dense regenerated-tile round for the
+    edge-proportional gather round: identical trajectory, values equal up
+    to f32 summation order.
     """
     return _peel_decode_seeded_impl(values, erased, spec=spec,
                                     iters=int(iters),
                                     interpret=detect_interpret(interpret),
-                                    bp=bp, bv=bv)
+                                    bp=bp, bv=bv, mode=mode)
 
 
-@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv"))
+@partial(jax.jit, static_argnames=("spec", "iters", "interpret", "bp", "bv",
+                                   "mode"))
 def _peel_decode_batch_seeded_impl(values, erased, *, spec, iters: int,
                                    interpret: bool, bp: int = 128,
-                                   bv: int = 128):
+                                   bv: int = 128, mode: str = "dense_tile"):
     squeeze = values.ndim == 2  # (B, N) scalar payloads
     vals = values[:, :, None] if squeeze else values
     B, N, V = vals.shape
@@ -462,7 +482,7 @@ def _peel_decode_batch_seeded_impl(values, erased, *, spec, iters: int,
                                   erased.astype(jnp.float32)[:, :, None], bv)
     out_v, out_e = decode_seeded_batch(spec, vp, ep, iters=iters, bp=bp_eff,
                                        bv=min(bv, vp.shape[2]),
-                                       interpret=interpret)
+                                       interpret=interpret, mode=mode)
     out_vals = out_v[:, :N, :V].astype(vals.dtype)
     out_erased = out_e[:, :N, 0] > 0.0
     if squeeze:
@@ -472,20 +492,24 @@ def _peel_decode_batch_seeded_impl(values, erased, *, spec, iters: int,
 
 def peel_decode_batch_seeded_pallas(spec, values, erased, iters: int, *,
                                     interpret: bool | None = None,
-                                    bp: int = 128, bv: int = 128):
+                                    bp: int = 128, bv: int = 128,
+                                    mode: str = "dense_tile"):
     """Fixed-D decode of B independent patterns, H regenerated from the
     seed per grid step.  Same contract as
-    :func:`peel_decode_batch_tiled_pallas` minus the H operand."""
+    :func:`peel_decode_batch_tiled_pallas` minus the H operand;
+    ``mode="gather"`` selects the edge-proportional round."""
     return _peel_decode_batch_seeded_impl(
         values, erased, spec=spec, iters=int(iters),
-        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+        interpret=detect_interpret(interpret), bp=bp, bv=bv, mode=mode)
 
 
 @partial(jax.jit,
-         static_argnames=("spec", "max_iters", "interpret", "bp", "bv"))
+         static_argnames=("spec", "max_iters", "interpret", "bp", "bv",
+                          "mode"))
 def _peel_decode_adaptive_seeded_impl(values, erased, *, spec,
                                       max_iters: int, interpret: bool,
-                                      bp: int = 128, bv: int = 128):
+                                      bp: int = 128, bv: int = 128,
+                                      mode: str = "dense_tile"):
     squeeze = values.ndim == 1
     vals = values[:, None] if squeeze else values
     N, V = vals.shape
@@ -495,7 +519,7 @@ def _peel_decode_adaptive_seeded_impl(values, erased, *, spec,
                                   bv)
     out_v, out_e, rounds = decode_seeded_adaptive(
         spec, vp, ep, max_iters=max_iters, bp=bp_eff,
-        bv=min(bv, vp.shape[1]), interpret=interpret)
+        bv=min(bv, vp.shape[1]), interpret=interpret, mode=mode)
     out_vals = out_v[:N, :V].astype(vals.dtype)
     out_erased = out_e[:N, 0] > 0.0
     if squeeze:
@@ -505,19 +529,22 @@ def _peel_decode_adaptive_seeded_impl(values, erased, *, spec,
 
 def peel_decode_adaptive_seeded_pallas(spec, values, erased, max_iters: int,
                                        *, interpret: bool | None = None,
-                                       bp: int = 128, bv: int = 128):
+                                       bp: int = 128, bv: int = 128,
+                                       mode: str = "dense_tile"):
     """Early-exit decode in ONE launch, H regenerated from the seed.  Same
     stopping rule and contract as :func:`peel_decode_adaptive_tiled_pallas`
-    minus the H operand."""
+    minus the H operand; ``mode="gather"`` selects the edge-proportional
+    round (identical trajectory and round counts)."""
     return _peel_decode_adaptive_seeded_impl(
         values, erased, spec=spec, max_iters=int(max_iters),
-        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+        interpret=detect_interpret(interpret), bp=bp, bv=bv, mode=mode)
 
 
-@partial(jax.jit, static_argnames=("spec", "interpret", "bp", "bv"))
+@partial(jax.jit, static_argnames=("spec", "interpret", "bp", "bv", "mode"))
 def _peel_decode_batch_adaptive_seeded_impl(values, erased, budgets, *, spec,
                                             interpret: bool, bp: int = 128,
-                                            bv: int = 128):
+                                            bv: int = 128,
+                                            mode: str = "dense_tile"):
     squeeze = values.ndim == 2  # (B, N) scalar payloads
     vals = values[:, :, None] if squeeze else values
     B, N, V = vals.shape
@@ -527,7 +554,7 @@ def _peel_decode_batch_adaptive_seeded_impl(values, erased, budgets, *, spec,
                                   erased.astype(jnp.float32)[:, :, None], bv)
     out_v, out_e, rounds = decode_seeded_batch_adaptive(
         spec, vp, ep, budgets.astype(jnp.int32)[:, None], bp=bp_eff,
-        bv=min(bv, vp.shape[2]), interpret=interpret)
+        bv=min(bv, vp.shape[2]), interpret=interpret, mode=mode)
     out_vals = out_v[:, :N, :V].astype(vals.dtype)
     out_erased = out_e[:, :N, 0] > 0.0
     if squeeze:
@@ -537,10 +564,58 @@ def _peel_decode_batch_adaptive_seeded_impl(values, erased, budgets, *, spec,
 
 def peel_decode_batch_adaptive_seeded_pallas(spec, values, erased, budgets,
                                              *, interpret: bool | None = None,
-                                             bp: int = 128, bv: int = 128):
+                                             bp: int = 128, bv: int = 128,
+                                             mode: str = "dense_tile"):
     """Per-slot adaptive decode of B independent patterns in ONE launch, H
     regenerated from the seed per slot.  Same contract as
-    :func:`peel_decode_batch_adaptive_tiled_pallas` (budgets stay traced)."""
+    :func:`peel_decode_batch_adaptive_tiled_pallas` (budgets stay traced);
+    ``mode="gather"`` selects the edge-proportional round."""
     return _peel_decode_batch_adaptive_seeded_impl(
         values, erased, jnp.asarray(budgets), spec=spec,
-        interpret=detect_interpret(interpret), bp=bp, bv=bv)
+        interpret=detect_interpret(interpret), bp=bp, bv=bv, mode=mode)
+
+
+# ------------------------------------------------------- seeded encode --
+
+
+@partial(jax.jit, static_argnames=("st", "n_out", "interpret", "bo", "bv"))
+def _encode_seeded_fused_impl(y, row0, *, st, n_out: int, interpret: bool,
+                              bo: int = 128, bv: int = 128):
+    squeeze = y.ndim == 1
+    yv = y[:, None] if squeeze else y
+    V = yv.shape[1]
+
+    bo_eff = _effective_bp(n_out, bo)
+    n_pad = n_out + (-n_out) % bo_eff
+    yp = pad_axis_to(pad_axis_to(yv.astype(jnp.float32), 128, 0), bv, 1)
+    out = encode_seeded_fused(st, yp, row0, n_out=n_pad, bo=bo_eff,
+                              bv=min(bv, yp.shape[1]),
+                              interpret=interpret)[0]
+    out = out[:n_out, :V].astype(yv.dtype)
+    if squeeze:
+        out = out[:, 0]
+    return out
+
+
+def encode_seeded_fused_pallas(st, y, row0=0, *, n_out: int | None = None,
+                               interpret: bool | None = None,
+                               bo: int = 128, bv: int = 128):
+    """Seeded-LDGM codeword rows ``[row0, row0 + n_out)`` from payload ``y``,
+    generator gather fused into ONE kernel launch — no index tables.
+
+    ``st`` is the static :class:`repro.core.ldpc.SeededStructure` of the
+    generator's parity block (``st.cols == K``, ``st.rows == p``); ``y`` is
+    (K,) or (K, V); ``row0`` may be a traced int (sharded workers pass
+    ``axis_index * rows_per_worker``).  ``n_out`` defaults to the full
+    codeword length ``K + p``; rows past it are computed in padding and
+    sliced away, rows at global index ``>= K + p`` are exactly zero.  The
+    per-row gather-sum runs in TABLE order, bit-identical to the
+    (jit-compiled) :func:`repro.core.encoding.gather_encode` over
+    ``seeded_generator_rows``.
+    """
+    if n_out is None:
+        n_out = st.cols + st.rows
+    r0 = jnp.asarray(row0, jnp.int32).reshape(1, 1)
+    return _encode_seeded_fused_impl(y, r0, st=st, n_out=int(n_out),
+                                     interpret=detect_interpret(interpret),
+                                     bo=bo, bv=bv)

@@ -40,6 +40,15 @@ memory (e.g. ``--k 131072 --K 131072``: H alone would be 128 GiB f32).
   python -m repro.launch.paper_dryrun --k 131072 --K 131072 \\
       --decode pallas --seeded
 
+``--seeded-mode`` picks the seeded round kernel: ``dense_tile``
+regenerates dense check tiles, ``gather`` generates only the r (column,
+weight) pairs per check row (edge-proportional FLOPs — the artifact gains
+a ``-gather`` suffix), ``auto`` resolves via the
+:mod:`repro.core.hwcaps` crossover.
+
+  python -m repro.launch.paper_dryrun --k 131072 --K 131072 \\
+      --decode pallas --seeded --seeded-mode gather
+
 ``--pipeline`` additionally lowers and analyzes the pipelined runtime's
 LATE-FOLD program (:func:`repro.launch.steps.build_pipeline_fold_step`):
 the sparse re-decode of a stored survivor vector plus the
@@ -80,6 +89,11 @@ def main(argv=None):
                     help="seeded on-the-fly H decode (pallas only): no "
                          "(p, N) parity-check operand; compiles at K where "
                          "materializing H would exceed host memory")
+    ap.add_argument("--seeded-mode", default="dense_tile",
+                    choices=["auto", "dense_tile", "gather"],
+                    help="seeded round kernel: dense regenerated tiles, "
+                         "edge-proportional gather/segment-sum, or the "
+                         "hwcaps FLOPs-crossover auto dispatch")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--distributed", action="store_true",
                     help="master/worker runtime step: explicit "
@@ -121,7 +135,8 @@ def main(argv=None):
         mesh_desc = "2x16x16" if args.multi_pod else "16x16"
         jitted, specs = build_coded_gd_step(args.k, args.K, args.decode_iters,
                                             dtype, mesh, decode=args.decode,
-                                            seed=0 if args.seeded else None)
+                                            seed=0 if args.seeded else None,
+                                            seeded_mode=args.seeded_mode)
     lowered = jitted.lower(*specs)
     t_lower = time.time() - t0
     t0 = time.time()
@@ -134,6 +149,8 @@ def main(argv=None):
     mflops = 2 * N * args.k * nb + args.decode_iters * 2 * p * N * nb
     shape_tag = (f"scheme2-k{args.k}-D{args.decode_iters}-{args.dtype}"
                  f"-{args.decode}" + ("-seeded" if args.seeded else "")
+                 + ("-gather" if args.seeded
+                    and args.seeded_mode == "gather" else "")
                  + ("-dist" if args.distributed else ""))
     rep = analyze_compiled(compiled, arch="paper-coded-gd", shape=shape_tag,
                            mesh_desc=mesh_desc, chips=mesh.devices.size,

@@ -119,7 +119,8 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
                         mesh, *, decode: str = "dense", r: int = 6,
                         bp: int | None = None,
                         vmem_budget_bytes: int | None = None,
-                        seed: int | None = None):
+                        seed: int | None = None,
+                        seeded_mode: str = "dense_tile"):
     """Functional Scheme2Blocked step at scale, with explicit shardings.
 
     Shapes: N = 2K (rate-1/2), nb = k/K blocks, p = N - K checks.
@@ -162,7 +163,12 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
     materializing the (p, N) parity-check matrix would exceed host memory.
     The seeded ensemble is the (4, 8)-regular layered-permutation one
     (``repro.core.ldpc.seeded_structure``), which the rate-1/2 shape here
-    (p = K, N = 2K) satisfies for any K divisible by 4.
+    (p = K, N = 2K) satisfies for any K divisible by 4.  ``seeded_mode``
+    picks the round kernel: ``"dense_tile"`` regenerates dense ``bp × N``
+    H tiles per round, ``"gather"`` generates only the r (column, weight)
+    pairs per check row (edge-proportional FLOPs), ``"auto"`` resolves via
+    the :mod:`repro.core.hwcaps` FLOPs crossover — erasure trajectories
+    are bit-identical across all of them.
 
     Returns ``(jitted_step, arg_specs)`` ready for AOT lower/compile.
     """
@@ -231,14 +237,17 @@ def build_coded_gd_step(k: int, K: int, decode_iters: int, dtype,
 
         if seed is not None:
             # Seeded on-the-fly H: no (p, N) operand anywhere in the step.
+            from repro.core.decoder import _resolve_seeded_mode
             from repro.core.ldpc import seeded_structure
             spec = seeded_structure(p, N, 8, seed)
             bp_seeded = bp if bp is not None else 128
+            mode = _resolve_seeded_mode(seeded_mode, spec, nb, bp_seeded)
 
             def step_seeded(C_blocks, theta, b, mask, lr):
                 z = worker_products(C_blocks, theta, mask)
                 vals, erased = peel_decode_seeded_pallas(
-                    spec, z, mask, decode_iters, bp=bp_seeded, bv=8)
+                    spec, z, mask, decode_iters, bp=bp_seeded, bv=8,
+                    mode=mode)
                 return update(vals, erased, theta, b, lr)
 
             args = (c_spec, *common)

@@ -92,6 +92,26 @@ def test_paper_dryrun_pallas_variant():
     assert out["ok"] and out["shape"].endswith("-pallas")
 
 
+def test_paper_dryrun_seeded_gather_variant():
+    """``--seeded --seeded-mode gather`` lowers+compiles the seeded decode
+    with edge-proportional gather rounds and tags the roofline artifact
+    with the ``-gather`` suffix."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.paper_dryrun", "--k", "1024",
+         "--K", "512", "--decode-iters", "4", "--decode", "pallas",
+         "--seeded", "--seeded-mode", "gather"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert res.returncode == 0, f"paper_dryrun failed:\n{res.stdout}\n{res.stderr}"
+    assert "scheme2-k1024-D4-f32-pallas-seeded-gather" in res.stdout
+    out = json.loads((REPO / "artifacts" / "dryrun" /
+                      "paper-coded-gd__scheme2-k1024-D4-f32-pallas-seeded"
+                      "-gather__16_16.json").read_text())
+    assert out["ok"] and out["shape"].endswith("-gather")
+
+
 def test_paper_dryrun_pipeline_fold_step():
     """``--pipeline`` lowers+analyzes the late-fold program alongside the
     main step, on the distributed (workers, data) mesh layout."""

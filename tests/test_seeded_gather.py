@@ -1,0 +1,408 @@
+"""Edge-proportional seeded decode rounds (``seeded_mode="gather"``) and
+the fused seeded encode kernel.
+
+The gather round generates only the r (column, weight) pairs per check row
+from the seed — per-round FLOPs O(p·r) instead of the dense regenerated
+tile's O(p·N) — and merges resolutions with the same first-tile-wins rule.
+The trajectory (erasure masks + round counts) depends only on
+integer-exact quantities, so it is bit-identical to the dense-tile round
+and to every materialized backend; VALUES agree up to f32 summation order
+(repo convention), with originally-known coordinates untouched bit for bit.
+
+The fused encode kernel (``encode_seeded_fused_pallas`` /
+``repro.core.encoding.encode_seeded``) regenerates generator gather
+indices in-register and runs the per-row gather-sum in table order — bit
+identical to the JIT-COMPILED sequential :func:`gather_encode` (XLA
+contracts mul+add to FMA under jit on every backend, so the eager NumPy
+sum is NOT the reference; the kernel and the jitted sequential gather
+lower to the same FMA chain).
+
+These tests pin:
+
+* all four decode entry points at N = 8192 (interpret mode): gather
+  trajectories bit-identical to dense-tile AND to the sparse backend;
+* gather values allclose to dense-tile, known coordinates bit-equal;
+* ragged/padded tiles (bp not dividing p, bp > p, padded columns);
+* the one-``pallas_call`` property of every gather-mode decode and of the
+  fused encode;
+* the fused encode against the jitted table gather — full codeword,
+  row windows, 1-D payloads, and the moment encode — plus
+  ``Scheme2.build_seeded(encode_fused=True)``;
+* the hwcaps crossover behind ``seeded_mode="auto"`` (gather on CPU,
+  dense-tile where the modeled advantage is below ``mxu_advantage``) and
+  the modeled ≥8× per-round FLOPs ratio at N = 16384 that CI gates on;
+* the batched sparse decode's payload-lane layout: a (B, N, V) decode is
+  the per-lane (B, N, 1) decode bit for bit (check-side structure work is
+  per-pattern, broadcast over V).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Scheme2, second_moment
+from repro.core.decoder import (
+    SEEDED_MODES,
+    peel_decode,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    peel_decode_batch_adaptive,
+)
+from repro.core.encoding import (
+    encode_moment_seeded,
+    encode_seeded,
+    gather_encode,
+    generator_gather_tables,
+    generator_structure_of,
+)
+from repro.core.engine import CodedComputeEngine
+from repro.core.hwcaps import (
+    HardwareCaps,
+    pick_seeded_mode,
+    seeded_dense_round_flops,
+    seeded_gather_round_flops,
+)
+from repro.core.ldpc import (
+    make_seeded_ldgm,
+    make_seeded_ldpc,
+    seeded_generator_rows,
+    seeded_structure,
+)
+from repro.data import make_linear_problem
+
+D = 5
+
+
+@functools.lru_cache(maxsize=None)
+def _seeded_code(K):
+    return make_seeded_ldpc(K, l=4, r=8, seed=0)
+
+
+def _instance(code, *, q=0.25, seed=0, V=None):
+    rng = np.random.default_rng(seed)
+    shape = (code.N,) if V is None else (code.N, V)
+    vals = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    erased = jnp.asarray(rng.random(code.N) < q)
+    rx = jnp.where(erased if V is None else erased[:, None], 0.0, vals)
+    return rx, erased
+
+
+def _assert_same_trajectory(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+
+
+# ------------------------------------------------------- decode parity --
+
+
+def test_gather_all_four_variants_at_8192():
+    """The acceptance config: fixed, adaptive, batch, and batch-adaptive
+    gather-mode decodes at N = 8192 (interpret mode), erasure trajectories
+    bit-identical to the dense-tile seeded kernel AND to sparse."""
+    code = _seeded_code(4096)
+    kw = dict(backend="pallas_seeded", bp=512, bv=8)
+
+    # fixed
+    rx, erased = _instance(code, seed=2)
+    sparse = peel_decode(code, rx, erased, D, backend="sparse")
+    dense = peel_decode(code, rx, erased, D, seeded_mode="dense_tile", **kw)
+    gath = peel_decode(code, rx, erased, D, seeded_mode="gather", **kw)
+    _assert_same_trajectory(gath, sparse)
+    _assert_same_trajectory(gath, dense)
+    still = ~np.asarray(erased)  # originally-known coords: untouched bits
+    np.testing.assert_array_equal(np.asarray(gath.values)[still],
+                                  np.asarray(dense.values)[still])
+
+    # adaptive: same fixpoint, same real round count
+    sparse_a = peel_decode_adaptive(code, rx, erased, 16, backend="sparse")
+    dense_a = peel_decode_adaptive(code, rx, erased, 16,
+                                   seeded_mode="dense_tile", **kw)
+    gath_a = peel_decode_adaptive(code, rx, erased, 16,
+                                  seeded_mode="gather", **kw)
+    _assert_same_trajectory(gath_a, sparse_a)
+    _assert_same_trajectory(gath_a, dense_a)
+    assert (int(gath_a.rounds_used) == int(sparse_a.rounds_used)
+            == int(dense_a.rounds_used))
+
+    # batch of independent patterns
+    B = 3
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.standard_normal((B, code.N)), jnp.float32)
+    er_B = jnp.asarray(rng.random((B, code.N)) < 0.25)
+    rx_B = jnp.where(er_B, 0.0, vals)
+    sparse_b = peel_decode_batch(code, rx_B, er_B, D, backend="sparse")
+    dense_b = peel_decode_batch(code, rx_B, er_B, D,
+                                seeded_mode="dense_tile", **kw)
+    gath_b = peel_decode_batch(code, rx_B, er_B, D,
+                               seeded_mode="gather", **kw)
+    _assert_same_trajectory(gath_b, sparse_b)
+    _assert_same_trajectory(gath_b, dense_b)
+
+    # batch-adaptive with traced per-slot budgets
+    budgets = jnp.asarray([1, 3, 16], jnp.int32)
+    sparse_ba = peel_decode_batch_adaptive(code, rx_B, er_B, 16,
+                                           backend="sparse", budgets=budgets)
+    dense_ba = peel_decode_batch_adaptive(code, rx_B, er_B, 16,
+                                          budgets=budgets,
+                                          seeded_mode="dense_tile", **kw)
+    gath_ba = peel_decode_batch_adaptive(code, rx_B, er_B, 16,
+                                         budgets=budgets,
+                                         seeded_mode="gather", **kw)
+    _assert_same_trajectory(gath_ba, sparse_ba)
+    _assert_same_trajectory(gath_ba, dense_ba)
+    np.testing.assert_array_equal(np.asarray(gath_ba.rounds_used),
+                                  np.asarray(sparse_ba.rounds_used))
+    np.testing.assert_array_equal(np.asarray(gath_ba.rounds_used),
+                                  np.asarray(dense_ba.rounds_used))
+
+
+def test_gather_values_close_known_exact():
+    """Resolved VALUES agree with dense-tile up to f32 summation order
+    (the gather sums edges per row; the tile contracts over N) — allclose,
+    while the trajectory and the never-erased coordinates stay exact."""
+    code = _seeded_code(1024)
+    rx, erased = _instance(code, seed=1, V=4)
+    dense = peel_decode(code, rx, erased, D, backend="pallas_seeded",
+                        bv=8, seeded_mode="dense_tile")
+    gath = peel_decode(code, rx, erased, D, backend="pallas_seeded",
+                       bv=8, seeded_mode="gather")
+    _assert_same_trajectory(gath, dense)
+    np.testing.assert_allclose(np.asarray(gath.values),
+                               np.asarray(dense.values),
+                               rtol=1e-5, atol=1e-5)
+    still = ~np.asarray(erased)
+    np.testing.assert_array_equal(np.asarray(gath.values)[still],
+                                  np.asarray(dense.values)[still])
+
+
+@pytest.mark.parametrize("bp", [88, 128, 4096])
+def test_gather_ragged_and_oversized_tiles(bp):
+    """Tile heights that do not divide p (ragged last tile) and tiles
+    larger than p (single clamped tile) keep the exact trajectory —
+    padded check rows generate zero edges by construction."""
+    code = _seeded_code(512)  # p = 512, N = 1024
+    rx, erased = _instance(code, seed=7)
+    ref = peel_decode(code, rx, erased, D, backend="sparse")
+    got = peel_decode(code, rx, erased, D, backend="pallas_seeded",
+                      bp=bp, bv=8, seeded_mode="gather")
+    _assert_same_trajectory(got, ref)
+
+
+def test_gather_decodes_are_one_kernel_launch():
+    """Every gather-mode decode keeps the one-``pallas_call`` property —
+    edge generation and the segment-sum merge happen INSIDE the kernel."""
+    from repro.kernels.ldpc_peel.ops import (
+        _peel_decode_adaptive_seeded_impl,
+        _peel_decode_batch_adaptive_seeded_impl,
+        _peel_decode_batch_seeded_impl,
+        _peel_decode_seeded_impl,
+    )
+
+    spec = seeded_structure(64, 128, 8, 0)
+    v = jnp.zeros((128, 8), jnp.float32)
+    e = jnp.zeros((128,), bool)
+    vB = jnp.zeros((3, 128, 8), jnp.float32)
+    eB = jnp.zeros((3, 128), bool)
+    bud = jnp.full((3,), 5, jnp.int32)
+    kw = dict(spec=spec, interpret=True, bp=32, bv=8, mode="gather")
+    cases = [
+        (_peel_decode_seeded_impl,
+         lambda fn: fn(v, e, iters=D, **kw)),
+        (_peel_decode_batch_seeded_impl,
+         lambda fn: fn(vB, eB, iters=D, **kw)),
+        (_peel_decode_adaptive_seeded_impl,
+         lambda fn: fn(v, e, max_iters=16, **kw)),
+        (_peel_decode_batch_adaptive_seeded_impl,
+         lambda fn: fn(vB, eB, bud, **kw)),
+    ]
+    for impl, call in cases:
+        jaxpr = jax.make_jaxpr(lambda fn=impl.__wrapped__, c=call: c(fn))()
+        assert str(jaxpr).count("pallas_call") == 1, impl
+
+
+def test_unknown_seeded_mode_rejected():
+    code = _seeded_code(512)
+    rx, erased = _instance(code, seed=0)
+    with pytest.raises(ValueError):
+        peel_decode(code, rx, erased, D, backend="pallas_seeded",
+                    seeded_mode="bogus")
+    with pytest.raises(ValueError):
+        CodedComputeEngine(code, backend="pallas_seeded",
+                           seeded_mode="bogus")
+
+
+def test_engine_threads_seeded_mode():
+    """The engine's seeded_mode knob reaches the decode: auto resolves to
+    gather on CPU (mxu_advantage = 1), and the batched decode's trajectory
+    matches the sparse engine's bit for bit."""
+    code = _seeded_code(512)
+    eng = CodedComputeEngine(code, decode_iters=D, backend="pallas_seeded",
+                             bp=128, bv=8, seeded_mode="auto")
+    assert eng.debug_info()["seeded_mode"] == "auto"
+    ref = CodedComputeEngine(code, decode_iters=D, backend="sparse")
+    rx, erased = _instance(code, seed=3)
+    got = eng.decode(rx, erased)
+    want = ref.decode(rx, erased)
+    _assert_same_trajectory(got, want)
+
+
+# ------------------------------------------------------- auto crossover --
+
+
+def test_auto_crossover_follows_mxu_advantage():
+    """CPU caps (advantage 1.0) always pick gather for real codes; a TPU-
+    like advantage larger than the modeled ratio flips back to dense."""
+    spec = seeded_structure(4096, 8192, 8, 0)
+    assert pick_seeded_mode(
+        spec, 8, caps=HardwareCaps("cpu", 1.0)) == "gather"
+    # tiny code: dense/gather ratio ~2x < the 8x TPU placeholder advantage
+    tiny = seeded_structure(8, 16, 8, 0)
+    ratio = (seeded_dense_round_flops(tiny, 1)
+             / seeded_gather_round_flops(tiny, 1))
+    assert ratio < 8.0
+    assert pick_seeded_mode(
+        tiny, 1, caps=HardwareCaps("tpu", 8.0)) == "dense_tile"
+    assert "auto" in SEEDED_MODES
+
+
+def test_modeled_flops_ratio_at_16384():
+    """The CI-gated claim: at N = 16384 (p = 8192, V = 8, bp = 128) the
+    dense-tile round models ≥ 8x the gather round's FLOPs."""
+    spec = seeded_structure(8192, 16384, 8, 0)
+    dense = seeded_dense_round_flops(spec, 8, bp=128)
+    gather = seeded_gather_round_flops(spec, 8, bp=128)
+    assert dense / gather >= 8.0
+
+
+# --------------------------------------------------------- fused encode --
+
+
+def test_fused_encode_matches_jitted_gather():
+    """Full-codeword fused encode, bit-identical to the jit-compiled
+    sequential table gather — 2-D payloads and 1-D vectors."""
+    code = make_seeded_ldgm(128, 64, row_weight=8, seed=0)
+    idx, coeff = generator_gather_tables(code)
+    ref_fn = jax.jit(gather_encode)
+    rng = np.random.default_rng(0)
+    Y = jnp.asarray(rng.standard_normal((128, 5)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(encode_seeded(code, Y)),
+                                  np.asarray(ref_fn(idx, coeff, Y)))
+    y = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(encode_seeded(code, y)),
+                                  np.asarray(ref_fn(idx, coeff, y)))
+    # systematic prefix is an exact copy
+    np.testing.assert_array_equal(np.asarray(encode_seeded(code, y))[:128],
+                                  np.asarray(y))
+
+
+def test_fused_encode_row_windows():
+    """A worker's row window [row0, row0 + n_out) — including windows not
+    aligned to any tile size — matches the jitted gather over the same
+    regenerated table rows bit for bit."""
+    code = make_seeded_ldgm(128, 64, row_weight=8, seed=3)
+    rng = np.random.default_rng(4)
+    y = jnp.asarray(rng.standard_normal((128, 3)), jnp.float32)
+    ref_fn = jax.jit(gather_encode)
+    for row0, n_out in [(0, 24), (84, 12), (128, 64), (160, 32)]:
+        idx, coeff = seeded_generator_rows(code, row0, row0 + n_out)
+        ref = ref_fn(jnp.asarray(idx), jnp.asarray(coeff), y)
+        got = encode_seeded(code, y, row0, n_out=n_out)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fused_encode_matches_encode_moment_seeded():
+    """The in-process acceptance claim: the fused kernel reproduces the
+    jitted ``encode_moment_seeded`` (table gather) bit for bit."""
+    code = make_seeded_ldgm(64, 32, row_weight=8, seed=0)
+    rng = np.random.default_rng(1)
+    M = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    ref = jax.jit(lambda m: encode_moment_seeded(code, m))(M)
+    got = encode_seeded(code, M)
+    assert got.shape == ref.shape == (code.N, 64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fused_encode_is_one_kernel_launch():
+    from repro.kernels.ldpc_peel.ops import _encode_seeded_fused_impl
+
+    code = make_seeded_ldgm(128, 64, row_weight=8, seed=0)
+    st = generator_structure_of(code)
+    y = jnp.zeros((128, 3), jnp.float32)
+    r0 = jnp.zeros((1, 1), jnp.int32)
+    fn = _encode_seeded_fused_impl.__wrapped__
+    jaxpr = jax.make_jaxpr(
+        lambda y, r0: fn(y, r0, st=st, n_out=code.N, interpret=True))(y, r0)
+    assert str(jaxpr).count("pallas_call") == 1
+
+
+def test_generator_structure_requires_seeded_ldgm():
+    with pytest.raises(ValueError):
+        generator_structure_of(_seeded_code(512))  # parity code, not LDGM
+
+
+def test_scheme2_encode_fused_matches_tables():
+    """``Scheme2.build_seeded(encode_fused=True)``: the per-step codeword
+    is bit-identical to the table-gather scheme's under jit, and the
+    gradients track to f32 summation order with identical unresolved
+    sets."""
+    K = 64
+    code = make_seeded_ldgm(K, 32, row_weight=8, seed=0)
+    prob = make_linear_problem(m=4 * K, k=K, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    tab = Scheme2.build_seeded(code, mom, lr=prob.lr, decode_iters=8,
+                               decode_backend="sparse")
+    fus = Scheme2.build_seeded(code, mom, lr=prob.lr, decode_iters=8,
+                               decode_backend="sparse", encode_fused=True)
+    assert fus.seeded_encode and fus.encode_fused
+    rng = np.random.default_rng(2)
+    theta = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(fus._encode)(y)),
+        np.asarray(jax.jit(tab._encode)(y)))
+    mask = jnp.asarray(rng.random(code.N) < 0.25)
+    g_t, u_t = tab.gradient(theta, mask)
+    g_f, u_f = fus.gradient(theta, mask)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_t),
+                               rtol=2e-4, atol=2e-4)
+    assert int(u_f) == int(u_t)
+
+
+# -------------------------------------------- sparse-batch payload lanes --
+
+
+def test_sparse_batch_payload_lanes_bit_identical():
+    """The batched sparse decode computes check-side structure work once
+    per pattern and broadcasts it over V — a (B, N, V) decode must equal
+    the per-lane (B, N, 1) decodes bit for bit (masks, values, rounds)."""
+    code = _seeded_code(512)
+    B, V = 3, 4
+    rng = np.random.default_rng(11)
+    vals = jnp.asarray(rng.standard_normal((B, code.N, V)), jnp.float32)
+    er_B = jnp.asarray(rng.random((B, code.N)) < 0.3)
+    rx_B = jnp.where(er_B[:, :, None], 0.0, vals)
+
+    dec = peel_decode_batch(code, rx_B, er_B, D, backend="sparse")
+    for v in range(V):
+        lane = peel_decode_batch(code, rx_B[:, :, v:v + 1], er_B, D,
+                                 backend="sparse")
+        np.testing.assert_array_equal(np.asarray(dec.erased),
+                                      np.asarray(lane.erased))
+        np.testing.assert_array_equal(np.asarray(dec.values)[:, :, v],
+                                      np.asarray(lane.values)[:, :, 0])
+
+    budgets = jnp.asarray([1, 4, 16], jnp.int32)
+    dec_a = peel_decode_batch_adaptive(code, rx_B, er_B, 16,
+                                       backend="sparse", budgets=budgets)
+    for v in range(V):
+        lane = peel_decode_batch_adaptive(code, rx_B[:, :, v:v + 1], er_B,
+                                          16, backend="sparse",
+                                          budgets=budgets)
+        np.testing.assert_array_equal(np.asarray(dec_a.erased),
+                                      np.asarray(lane.erased))
+        np.testing.assert_array_equal(np.asarray(dec_a.values)[:, :, v],
+                                      np.asarray(lane.values)[:, :, 0])
+        np.testing.assert_array_equal(np.asarray(dec_a.rounds_used),
+                                      np.asarray(lane.rounds_used))
