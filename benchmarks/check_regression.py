@@ -52,6 +52,15 @@ the ratio alone, while a code change that erodes the win moves it directly:
   ``host_steps_per_sec_ratio`` is gated only relative to its own baseline
   (single-core runners serialize the overlapped device programs and keep
   only the control-plane savings).
+* ``obs`` (``obs-overhead``, schema v9) — the observability layer's
+  instrumented-vs-plain pipelined run.  Baseline-independent floors only:
+  ``sim_steps_per_sec_ratio`` ≥ 0.95 (the ≤5% instrumented-overhead bound
+  on the deterministic simulated clock), ``bit_identical`` must hold (a
+  recording that leaked into a traced program diverges the trajectory),
+  and the run must be non-vacuous (``metrics_recorded`` > 0,
+  ``trace_events`` > 0 — a silently-disabled registry would otherwise
+  pass trivially).  ``host_overhead_pct`` is recorded but never gated
+  (wall-clock recording cost is machine-dependent).
 
 ``--sections`` selects which gates run (CI's tier-1 job gates
 batched+serving+large_n+seeded+seeded_gather; the fake-8-device
@@ -230,6 +239,37 @@ def _pipeline_floors(new: dict[tuple, dict], *, floor_ratio: float = 1.5,
     return failed
 
 
+def _obs_floors(new: dict[tuple, dict], *,
+                min_sim_ratio: float = 0.95) -> bool:
+    """Absolute gates on the FRESH obs-overhead records
+    (baseline-independent): instrumented sim steps/sec within 5% of plain,
+    bit-identical trajectories, and non-vacuous metric/trace counts.
+    Returns True iff any floor failed."""
+    failed = False
+    if not new:
+        print("check_regression [obs]: no obs-overhead records to hold "
+              "to the overhead floor")
+        return True
+    for key, rec in sorted(new.items()):
+        ratio = rec["sim_steps_per_sec_ratio"]
+        ok = ratio >= min_sim_ratio
+        print(f"  {key}: sim_steps_per_sec_ratio {ratio:.3f}x (floor "
+              f"{min_sim_ratio:.2f}x)  {'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+        ok = bool(rec.get("bit_identical"))
+        print(f"  {key}: bit_identical {rec.get('bit_identical')}  "
+              f"{'OK' if ok else 'PARITY FAILED'}")
+        failed |= not ok
+        nm, ne = rec.get("metrics_recorded", 0), rec.get("trace_events", 0)
+        ok = nm > 0 and ne > 0
+        print(f"  {key}: metrics_recorded {nm}, trace_events {ne}  "
+              f"{'OK' if ok else 'VACUOUS (instrumentation off?)'}"
+              f"  [host_overhead {rec.get('host_overhead_pct', 0.0):+.1f}% "
+              "ungated]")
+        failed |= not ok
+    return failed
+
+
 def _gate(name: str, metric: str, base: dict, new: dict, tol: float,
           context_key: str = "per_query_us") -> bool | None:
     """Compare shared records on ``metric``.
@@ -271,14 +311,14 @@ def main(argv=None) -> int:
                          "speedup ratios (default 25%%)")
     ap.add_argument("--sections",
                     default="batched,serving,distributed,large_n,seeded,"
-                            "seeded_gather,pipeline",
+                            "seeded_gather,pipeline,obs",
                     help="comma-separated gates to run "
                          "(batched|serving|distributed|large_n|seeded|"
-                         "seeded_gather|pipeline)")
+                         "seeded_gather|pipeline|obs)")
     args = ap.parse_args(argv)
     sections = [s for s in args.sections.split(",") if s]
     unknown = set(sections) - {"batched", "serving", "distributed", "large_n",
-                               "seeded", "seeded_gather", "pipeline"}
+                               "seeded", "seeded_gather", "pipeline", "obs"}
     if unknown:
         print(f"check_regression: unknown sections {sorted(unknown)}")
         return 1
@@ -343,6 +383,11 @@ def main(argv=None) -> int:
                   _distributed_records(args.baseline, "pipeline"),
                   new_pipe, args.tol, context_key="sync_per_step_us"))
         results.append(_pipeline_floors(new_pipe))
+    if "obs" in sections:
+        # baseline-independent floors only: the obs record is fresh-run
+        # self-contained (sim ratio, bit-identity, non-vacuousness)
+        results.append(
+            _obs_floors(_distributed_records(args.new, "obs-overhead")))
     if any(r is None for r in results):
         print("check_regression: FAILED (a gated section had no "
               "overlapping records — regenerate the committed baseline?)")

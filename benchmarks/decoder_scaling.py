@@ -698,7 +698,17 @@ def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
 
 
 def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
-         backend: str | None = None):
+         backend: str | None = None, obs_out: str | Path | None = None):
+    from repro.obs import ObsSession
+    session = ObsSession.start(obs_out)
+    try:
+        return _main(quick=quick, json_path=json_path, backend=backend)
+    finally:
+        session.finish()
+
+
+def _main(quick: bool = False, json_path: str | Path = BENCH_JSON,
+          backend: str | None = None):
     if backend:
         # Forced-backend run (the VMEM-failover bugfix path): resolve the
         # request with a clear message and run ONE size past the limit
@@ -836,5 +846,8 @@ if __name__ == "__main__":
                          "sweep (failover-resolved past the VMEM limit — "
                          "or past a missing seed — instead of crashing); "
                          "skips the JSON rewrite")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="export obs metrics JSONL (+ .trace.json spans) "
+                         "from the instrumented sweeps to PATH")
     a = ap.parse_args()
-    main(quick=a.quick, backend=a.backend)
+    main(quick=a.quick, backend=a.backend, obs_out=a.obs_out)

@@ -56,6 +56,7 @@ sweep: the master decode backend is resolved through
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import time
 from pathlib import Path
@@ -396,8 +397,151 @@ def run_pipeline_section(*, K=512, W=8, steps=48, max_rounds=10, depth=2,
     return [trow], [record]
 
 
+def run_obs_overhead_section(*, K=256, W=8, steps=24, max_rounds=8,
+                             depth=2, max_staleness=1, decay=0.5,
+                             reps=3, seed=0, quick=False):
+    """Observability overhead: the SAME pipelined run, instrumentation off
+    vs on (metrics registry + span tracer both active), alternating reps.
+
+    Three claims, two gated (schema v9):
+
+      * ``bit_identical`` — the obs-on run's theta bits, per-step rounds,
+        and unresolved counts equal the obs-off run's.  Instrumentation
+        only ever touches already-fetched host values, so any divergence
+        means a recording leaked into a traced program.
+      * ``sim_steps_per_sec_ratio`` — obs-off / obs-on makespan on the
+        deterministic simulated clock (identical trajectories ⇒ exactly
+        1.0).  Gated ≥ 0.95: the ≤5% bound on instrumented sim overhead.
+      * ``host_overhead_pct`` — measured wall-clock cost of recording
+        (machine-dependent, recorded but NOT gated; CI runners are too
+        noisy for a hard host-time floor).
+
+    Non-vacuousness travels in the record: ``metrics_recorded`` and
+    ``trace_events`` must be > 0 or the gate fails — a silently-disabled
+    registry would otherwise make the overhead test pass trivially.
+    """
+    if quick:
+        steps, reps = 16, 2
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    code = make_regular_ldpc(K, l=3, r=6, seed=seed)
+    backend, msg = resolve_bench_backend(code, "sparse")
+    if msg:
+        print(f"[obs-overhead K={K}] {msg}")
+    prob = make_linear_problem(m=2 * K, k=K, seed=seed)
+    scheme = Scheme2.build(code, second_moment(prob.X, prob.y),
+                           lr=prob.lr * 0.5, decode_iters=max_rounds,
+                           decode_backend=backend)
+    topo = WorkerTopology(W, code.N)
+    n_dev = jax.device_count()
+    mesh_dev = max(d for d in range(1, min(W, n_dev) + 1) if W % d == 0)
+    mesh = make_worker_mesh(mesh_dev)
+    pipe = AsyncDistributedCodedGD(scheme, topo, mesh, depth=depth,
+                                   max_staleness=max_staleness,
+                                   staleness_decay=decay,
+                                   budget_mode="fixed",
+                                   estimator=StragglerRateEstimator())
+    row_fold = np.full(W, 1.0)
+    row_fold[W - 3] = 1.5
+    row_fold[W - 2:] = 9.0
+    row_drop = np.full(W, 1.0)
+    row_drop[W - 3:] = 9.0
+    sched = np.stack([np.roll(row_fold if t % 3 != 2 else row_drop, t)
+                      for t in range(steps)])
+    theta0 = jnp.zeros(K)
+    key = jax.random.PRNGKey(seed)
+
+    def reset():
+        # Identical telemetry state every run: wait-for and fold-window
+        # choices read the estimators, so bit-parity needs a clean slate.
+        est, lag = pipe.estimator, pipe.lag_estimator
+        est._ema, est._norm, est.steps = 0.0, 0.0, 0
+        lag._mass[:] = 0.0
+        lag._norm, lag.steps = 0.0, 0
+
+    def run_once():
+        reset()
+        return pipe.run(theta0, None, steps, key=key,
+                        theta_star=prob.theta_star,
+                        delay_model=ScheduledDelays.build(sched))
+
+    @contextlib.contextmanager
+    def obs_off():
+        # The "plain" leg must be sink-free even when the whole benchmark
+        # runs under a global --obs-out session.
+        prev_reg = obs_metrics.disable()
+        prev_tr = obs_trace.disable_tracing()
+        try:
+            yield
+        finally:
+            if prev_reg is not None:
+                obs_metrics.enable(prev_reg)
+            if prev_tr is not None:
+                obs_trace.enable_tracing(prev_tr)
+
+    run_once()                                     # compile + warm
+    t_plain, t_obs = [], []
+    r_plain = r_obs = None
+    metrics_recorded = trace_events = 0
+    for _ in range(reps):
+        with obs_off():
+            t0 = time.perf_counter()
+            r_plain = run_once(); r_plain.theta.block_until_ready()
+            t_plain.append(time.perf_counter() - t0)
+        reg, tracer = obs_metrics.MetricsRegistry(), obs_trace.Tracer()
+        with obs_metrics.recording(reg), obs_trace.tracing(tracer):
+            t0 = time.perf_counter()
+            r_obs = run_once(); r_obs.theta.block_until_ready()
+            t_obs.append(time.perf_counter() - t0)
+        metrics_recorded = len(reg)
+        trace_events = len(tracer.events)
+    tp, to = float(np.median(t_plain)), float(np.median(t_obs))
+
+    bit_identical = bool(
+        np.asarray(r_plain.theta).tobytes() == np.asarray(r_obs.theta).tobytes()
+        and np.array_equal(r_plain.rounds, r_obs.rounds)
+        and np.array_equal(r_plain.unresolved, r_obs.unresolved))
+    c_round = float(r_plain.step_times.mean()) / max_rounds
+    _, m_plain = pipeline_timeline(
+        r_plain.step_times, (r_plain.rounds + r_plain.fold_rounds) * c_round,
+        depth)
+    _, m_obs = pipeline_timeline(
+        r_obs.step_times, (r_obs.rounds + r_obs.fold_rounds) * c_round,
+        depth)
+    sim_ratio = float(m_plain[-1] / m_obs[-1])
+    host_overhead_pct = (to - tp) / tp * 100.0
+
+    record = {
+        "mode": "obs-overhead", "W": W, "N": code.N, "K": K,
+        "devices": int(mesh.devices.size), "steps": steps, "depth": depth,
+        "max_rounds": max_rounds,
+        "sim_steps_per_sec_ratio": sim_ratio,
+        "bit_identical": bit_identical,
+        "host_overhead_pct": host_overhead_pct,
+        "metrics_recorded": int(metrics_recorded),
+        "trace_events": int(trace_events),
+        "per_step_us_plain": tp / steps * 1e6,
+        "per_step_us_obs": to / steps * 1e6,
+        "jax_backend": jax.default_backend(),
+    }
+    row = [W, code.N, steps, f"{sim_ratio:.3f}x",
+           "yes" if bit_identical else "NO",
+           f"{host_overhead_pct:+.1f}%", metrics_recorded, trace_events]
+    return [row], [record]
+
+
 def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
-         backend: str | None = None):
+         backend: str | None = None, obs_out: str | Path | None = None):
+    from repro.obs import ObsSession
+    session = ObsSession.start(obs_out)
+    try:
+        return _main(quick=quick, json_path=json_path, backend=backend)
+    finally:
+        session.finish()
+
+
+def _main(quick: bool = False, json_path: str | Path = BENCH_JSON,
+          backend: str | None = None):
     n_dev = jax.device_count()
     if backend:
         # Forced-backend run (VMEM-failover path): only the overhead sweep,
@@ -436,14 +580,23 @@ def main(quick: bool = False, json_path: str | Path = BENCH_JSON,
                  "sync_unres", "pipe_unres", "sync_err", "pipe_err",
                  "folded"], prows)
 
-    records = orecs + trecs + srecs + precs
+    obrows, obrecs = run_obs_overhead_section(quick=quick)
+    print_table("Observability overhead — pipelined run, instrumentation "
+                "off vs on (metrics + tracer)",
+                ["W", "N", "steps", "sim_ratio", "bit_identical",
+                 "host_overhead", "metrics", "trace_events"], obrows)
+
+    records = orecs + trecs + srecs + precs + obrecs
     path = Path(json_path)
     try:
         out = json.loads(path.read_text())
     except (FileNotFoundError, json.JSONDecodeError):
         out = {"benchmark": "decoder_scaling"}
     # v7: the pipeline section's records join distributed_scaling
-    out["schema_version"] = max(7, int(out.get("schema_version", 5)))
+    # v9: adds the "obs-overhead" record (instrumented-vs-plain pipelined
+    # run: bit-identity, sim steps/sec ratio ≥ 0.95, non-vacuous
+    # metric/trace counts — gated by check_regression --sections obs).
+    out["schema_version"] = max(9, int(out.get("schema_version", 5)))
     out["distributed_scaling"] = records
     path.write_text(json.dumps(out, indent=2))
     print(f"\nappended distributed_scaling ({len(records)} records) "
@@ -461,5 +614,8 @@ if __name__ == "__main__":
                     help="FORCE the master decode backend (failover-resolved "
                          "past the VMEM limit instead of crashing); skips "
                          "the JSON rewrite")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="export obs metrics JSONL (+ .trace.json spans) "
+                         "from the instrumented sweeps to PATH")
     a = ap.parse_args()
-    main(quick=a.quick, backend=a.backend)
+    main(quick=a.quick, backend=a.backend, obs_out=a.obs_out)

@@ -147,6 +147,7 @@ from repro.core.ldpc import (
     SeededStructure,
     seeded_structure_of,
 )
+from repro.obs import metrics as _obs_metrics
 
 __all__ = [
     "DecodeResult",
@@ -264,6 +265,7 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False,
     del adaptive  # kept for call-site compatibility; all modes have kernels
     if backend not in BACKENDS:
         raise ValueError(f"unknown decode backend {backend!r}; want one of {BACKENDS}")
+    requested = backend
     is_code = isinstance(code, LDPCCode)
     seeded_h = isinstance(code, SeededLDPC) or (
         is_code and code.kind == "ldpc-seeded")
@@ -271,10 +273,10 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False,
         if isinstance(code, SeededLDPC):
             # Structure-only: no H exists at any size — the seeded kernel
             # is the only backend that can run it (interpret off-TPU).
-            return "pallas_seeded"
-        if not is_code:
-            return "dense"
-        if jax.default_backend() == "tpu":
+            backend = "pallas_seeded"
+        elif not is_code:
+            backend = "dense"
+        elif jax.default_backend() == "tpu":
             if seeded_h:
                 backend = "pallas_seeded"
             else:
@@ -299,6 +301,12 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False,
             f"backend={backend!r} needs an LDPCCode (neighbor table); "
             "raw (H, Hb) tuples only support backend='dense'"
         )
+    reg = _obs_metrics.active()
+    if reg is not None:
+        # One increment per RESOLUTION (construction/trace), not per decode:
+        # jit-cache hits re-run nothing, so counts track dispatch decisions.
+        reg.counter("decoder.resolve_total",
+                    requested=requested, resolved=backend).inc()
     return backend
 
 

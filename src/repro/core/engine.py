@@ -50,6 +50,7 @@ import logging
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.decoder import (
     SEEDED_MODES,
@@ -63,6 +64,7 @@ from repro.core.decoder import (
     vmem_bytes_estimate,
 )
 from repro.core.ldpc import LDPCCode
+from repro.obs import metrics as _obs_metrics
 
 __all__ = ["CodedComputeEngine", "blocked_epilogue"]
 
@@ -126,6 +128,17 @@ class CodedComputeEngine:
         if self.seeded_mode not in SEEDED_MODES:
             raise ValueError(f"unknown seeded_mode {self.seeded_mode!r}; "
                              f"want one of {SEEDED_MODES}")
+        reg = _obs_metrics.active()
+        if reg is not None:
+            # The dispatch decision, discoverable at runtime: the full
+            # debug_info() dict lands in the registry snapshot (one info
+            # series per distinct resolved config), not just a DEBUG log
+            # line that is lost unless logging was pre-configured.
+            info = self.debug_info()
+            reg.counter("engine.built_total", backend=self.backend,
+                        resolved=info["resolved_backend"]).inc()
+            reg.info("engine.dispatch", info, backend=self.backend,
+                     resolved=info["resolved_backend"], N=self.code.N)
         if logger.isEnabledFor(logging.DEBUG):
             logger.debug("CodedComputeEngine: %s", self.debug_info())
 
@@ -154,6 +167,28 @@ class CodedComputeEngine:
         return {"bp": self.bp, "bv": self.bv,
                 "vmem_budget_bytes": self.vmem_budget_bytes,
                 "seeded_mode": self.seeded_mode}
+
+    def _record_decode(self, dec: DecodeResult) -> DecodeResult:
+        """Feed eager decode outcomes into the obs registry.
+
+        Strictly a host-side side channel: under jit/vmap the results are
+        tracers and recording is skipped entirely (no new traced operands,
+        no cache-key changes — the jitted consumers stay bit-identical).
+        Eager callers pay one host fetch of the tiny stats arrays.
+        """
+        reg = _obs_metrics.active()
+        if reg is None or isinstance(dec.erased, jax.core.Tracer):
+            return dec
+        rounds = np.atleast_1d(np.asarray(dec.rounds_used))
+        erased = np.asarray(dec.erased)
+        unres = (erased.sum(axis=-1) if erased.ndim > 1
+                 else np.atleast_1d(erased.sum()))
+        reg.histogram("engine.decode.rounds", bins=_obs_metrics.ROUND_BINS,
+                      backend=self.backend).observe_many(rounds)
+        reg.histogram("engine.decode.unresolved",
+                      bins=_obs_metrics.COUNT_BINS,
+                      backend=self.backend).observe_many(unres)
+        return dec
 
     # -------------------------------------------------------------- stages
 
@@ -185,12 +220,12 @@ class CodedComputeEngine:
         if self.adaptive:
             # decode_iters doubles as the adaptive round budget (max_iters),
             # matching the pre-engine Scheme2 semantics.
-            return peel_decode_adaptive(self.code, values, erased,
-                                        self.decode_iters,
-                                        backend=self.backend,
-                                        **self._tile_kw())
-        return peel_decode(self.code, values, erased, self.decode_iters,
-                           backend=self.backend, **self._tile_kw())
+            return self._record_decode(peel_decode_adaptive(
+                self.code, values, erased, self.decode_iters,
+                backend=self.backend, **self._tile_kw()))
+        return self._record_decode(peel_decode(
+            self.code, values, erased, self.decode_iters,
+            backend=self.backend, **self._tile_kw()))
 
     def decode_batch(self, values: jax.Array, erased: jax.Array, *,
                      adaptive: bool | None = None,
@@ -209,16 +244,17 @@ class CodedComputeEngine:
         ``budgets`` is only meaningful for adaptive decodes."""
         use_adaptive = self.adaptive if adaptive is None else adaptive
         if use_adaptive:
-            return peel_decode_batch_adaptive(
+            return self._record_decode(peel_decode_batch_adaptive(
                 self.code, values, erased, self.decode_iters,
-                backend=self.backend, budgets=budgets, **self._tile_kw())
+                backend=self.backend, budgets=budgets, **self._tile_kw()))
         if budgets is not None:
             raise ValueError(
                 "budgets= requires the adaptive batched decode (engine "
                 "adaptive=True or decode_batch(adaptive=True)); the fixed-D "
                 "path would silently ignore the per-slot round budgets")
-        return peel_decode_batch(self.code, values, erased, self.decode_iters,
-                                 backend=self.backend, **self._tile_kw())
+        return self._record_decode(peel_decode_batch(
+            self.code, values, erased, self.decode_iters,
+            backend=self.backend, **self._tile_kw()))
 
     def systematic(self, dec: DecodeResult) -> tuple[jax.Array, jax.Array]:
         """Epilogue: zero-filled systematic part + its unresolved mask.

@@ -83,6 +83,8 @@ from repro.distributed.worker import (
     shard_encoded_rows,
     shard_generator_tables,
 )
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _span
 
 __all__ = ["DistributedRunResult", "DistributedCodedGD",
            "DistributedCodedAggregator", "build_distributed_gd_step",
@@ -91,6 +93,54 @@ __all__ = ["DistributedRunResult", "DistributedCodedGD",
 BUDGET_MODES = ("fixed", "telemetry")
 MASTER_DECODES = ("single", "sharded")
 WORKER_ENCODES = ("materialized", "seeded", "seeded-fused")
+
+
+def _record_step_metrics(driver: str, *, rounds: int, unresolved: int,
+                         budget: int) -> None:
+    """Per-step decode outcome, recorded from ALREADY-FETCHED host ints at
+    the point every driver blocks anyway (the ``int(...)`` pulls) — shared
+    by the sync driver (``driver="sync"``) and the pipelined one
+    (``driver="pipeline"``) so the two emit comparable metric streams."""
+    reg = _obs_metrics.active()
+    if reg is None:
+        return
+    reg.counter("distributed.steps_total", driver=driver).inc()
+    reg.histogram("distributed.step.rounds", bins=_obs_metrics.ROUND_BINS,
+                  driver=driver).observe(rounds)
+    reg.histogram("distributed.step.unresolved",
+                  bins=_obs_metrics.COUNT_BINS,
+                  driver=driver).observe(unresolved)
+    reg.histogram("distributed.step.budget", bins=_obs_metrics.ROUND_BINS,
+                  driver=driver).observe(budget)
+    reg.histogram("distributed.step.budget_headroom",
+                  bins=_obs_metrics.ROUND_BINS,
+                  driver=driver).observe(max(budget - rounds, 0))
+
+
+def _record_plan_metrics(driver: str, *, wait_for: int | None = None,
+                         rate: float | None = None,
+                         observed: float | None = None) -> None:
+    """Per-step control-plane decision vs realized straggling: the wait-for
+    cut, the EMA estimate ENTERING the step, the observed fraction, and
+    their gap (the straggler-rate tracking error)."""
+    reg = _obs_metrics.active()
+    if reg is None:
+        return
+    if wait_for is not None:
+        reg.histogram("distributed.wait_for", bins=_obs_metrics.COUNT_BINS,
+                      driver=driver).observe(wait_for)
+    if rate is not None:
+        reg.histogram("distributed.straggler.rate_estimate",
+                      bins=_obs_metrics.FRACTION_BINS,
+                      driver=driver).observe(rate)
+    if observed is not None:
+        reg.histogram("distributed.straggler.observed",
+                      bins=_obs_metrics.FRACTION_BINS,
+                      driver=driver).observe(observed)
+    if rate is not None and observed is not None:
+        reg.histogram("distributed.straggler.tracking_error",
+                      bins=_obs_metrics.FRACTION_BINS,
+                      driver=driver).observe(abs(rate - observed))
 
 
 def delay_step_control(delays: np.ndarray, wait_for: int,
@@ -365,10 +415,13 @@ class DistributedCodedGD:
             if observed_fraction is None:
                 observed_fraction = float(
                     self.topology.observed_fraction(worker_mask))
+            rate_in = self.estimator.rate   # estimate ENTERING the step
             rate = self.estimator.observe(observed_fraction)
             code = self.scheme.code
             budget = decode_budget(rate, code.l, code.r,
                                    max_rounds=self.max_rounds)
+            _record_plan_metrics("sync", rate=rate_in,
+                                 observed=observed_fraction)
         else:
             budget = int(self.scheme.decode_iters)
         # broadcast θ + mask to the workers, one SPMD partial-product
@@ -379,22 +432,29 @@ class DistributedCodedGD:
         theta_rep = jax.device_put(theta, self._replicated)
         mask_rep = jax.device_put(worker_mask, self._replicated)
         budget_arr = np.asarray([budget], np.int32)
-        z = self._launch_workers(theta_rep, mask_rep)
-        if self.master_decode == "sharded":
-            # decode over the mesh: check tiles stay sharded; z/θ/mask are
-            # already replicated (z is the worker program's output sharding)
-            idx_sh, coeff_sh = self._sharded_tables
-            theta2, n_unres, rounds = self._master_program(
-                idx_sh, coeff_sh, z, mask_rep, theta_rep,
-                jax.device_put(jnp.asarray(budget_arr), self._replicated))
-            return theta2, int(n_unres), int(rounds), budget
-        # master-local decode + update: operands are the master device's
-        # OWN shards of the replicated worker output / broadcast (zero-copy
-        # views), plus the budget scalar which jit places alongside them.
-        theta2, n_unres, rounds = self._master_program(
-            self._mshard(z), self._mshard(mask_rep), self._mshard(theta_rep),
-            budget_arr)
-        return theta2, int(n_unres), int(rounds), budget
+        with _span("worker/launch", lane="worker"):
+            z = self._launch_workers(theta_rep, mask_rep)
+        with _span("master/decode", lane="master", budget=budget):
+            if self.master_decode == "sharded":
+                # decode over the mesh: check tiles stay sharded; z/θ/mask
+                # are already replicated (z is the worker program's output
+                # sharding)
+                idx_sh, coeff_sh = self._sharded_tables
+                theta2, n_unres, rounds = self._master_program(
+                    idx_sh, coeff_sh, z, mask_rep, theta_rep,
+                    jax.device_put(jnp.asarray(budget_arr), self._replicated))
+            else:
+                # master-local decode + update: operands are the master
+                # device's OWN shards of the replicated worker output /
+                # broadcast (zero-copy views), plus the budget scalar which
+                # jit places alongside them.
+                theta2, n_unres, rounds = self._master_program(
+                    self._mshard(z), self._mshard(mask_rep),
+                    self._mshard(theta_rep), budget_arr)
+            n_unres, rounds = int(n_unres), int(rounds)
+        _record_step_metrics("sync", rounds=rounds, unresolved=n_unres,
+                             budget=budget)
+        return theta2, n_unres, rounds, budget
 
     def run(
         self,
@@ -456,6 +516,7 @@ class DistributedCodedGD:
                 worker_mask = straggler_model.sample(keys[t], W)
                 times.append(0.0)
             rates.append(self.estimator.rate)
+            _record_plan_metrics("sync", wait_for=int(wait))
             theta, n_unres, spent, budget = self.step(
                 theta, worker_mask, observed_fraction=observed)
             tbar = (tbar * t + theta) / (t + 1.0)
@@ -464,6 +525,10 @@ class DistributedCodedGD:
             rounds.append(spent)
             budgets.append(budget)
             waits.append(int(wait))
+        reg = _obs_metrics.active()
+        if reg is not None:
+            reg.info("telemetry.straggler_estimator",
+                     self.estimator.snapshot(), driver="sync")
         return DistributedRunResult(
             theta, tbar, np.asarray(errors), np.asarray(unresolved),
             np.asarray(rounds), np.asarray(budgets), np.asarray(rates),

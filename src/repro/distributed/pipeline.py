@@ -66,6 +66,8 @@ from repro.core.coded_step import Scheme2
 from repro.core.straggler import DelayModel
 from repro.distributed.master import (
     DistributedCodedGD,
+    _record_plan_metrics,
+    _record_step_metrics,
     delay_step_control,
 )
 from repro.distributed.telemetry import (
@@ -76,6 +78,9 @@ from repro.distributed.telemetry import (
     pick_wait_for_cached,
 )
 from repro.distributed.topology import WorkerTopology
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+from repro.obs.trace import span as _span
 
 __all__ = ["AsyncDistributedCodedGD", "PipelineRunResult",
            "pipeline_timeline"]
@@ -140,6 +145,42 @@ class _FoldEntry:
     cut_mask: np.ndarray     # (W,) workers missed at the cutoff
     lags: np.ndarray         # (W,) arrival lags in step units
     window: int              # fold window in force at the source step
+
+
+@dataclasses.dataclass
+class _StepPlan:
+    """One step's control-plane decision, fixed before any device work.
+
+    This is the pipeline's per-step control record (formerly an internal
+    ``ctrl`` dict): everything the host decided — the wait-for cut, the
+    fold window, the decode budget, the telemetry estimate it acted on —
+    lives here, is recorded into the obs registry at PLAN time (it is all
+    host data; nothing waits on a device), and is reported back through
+    :class:`PipelineRunResult`'s tail arrays.
+    """
+    cut: np.ndarray            # (W,) workers missed at the wait-for cutoff
+    never: np.ndarray          # (W,) rows zeroed outright (outside window)
+    lags: np.ndarray | None    # (W,) arrival lags (delay runs)
+    wait: int                  # workers waited for
+    window: int                # fold window in force
+    budget: int                # decode round budget granted
+    rate: float                # telemetry estimate q̂ ENTERING the step
+    cutoff: float              # simulated wall-clock at the cutoff
+    observed: float | None     # realized straggler fraction (telemetry obs)
+
+    def record(self) -> None:
+        """Feed the plan into the obs registry (host data only)."""
+        _record_plan_metrics("pipeline", wait_for=self.wait, rate=self.rate,
+                             observed=self.observed)
+        reg = _obs_metrics.active()
+        if reg is None:
+            return
+        reg.histogram("pipeline.staleness_window",
+                      bins=_obs_metrics.LAG_BINS).observe(self.window)
+        if self.lags is not None:
+            reg.histogram("pipeline.arrival_lag",
+                          bins=_obs_metrics.LAG_BINS).observe_many(
+                              self.lags[self.cut])
 
 
 @dataclasses.dataclass
@@ -329,7 +370,7 @@ class AsyncDistributedCodedGD:
                 np.asarray(straggler_model.sample(keys[t], W))
                 for t in range(steps)])
 
-        ctrl = []
+        ctrl: list[_StepPlan] = []
         for t in range(steps):
             if delay_model is not None:
                 if self.auto_staleness:
@@ -358,12 +399,15 @@ class AsyncDistributedCodedGD:
                                        max_rounds=self.max_rounds)
             else:
                 budget = int(self.scheme.decode_iters)
-            ctrl.append(dict(
-                cut=cut, never=never, lags=lags, wait=wait, window=window,
-                budget=budget, rate=rate, cutoff=cutoff))
+            plan = _StepPlan(cut=cut, never=never, lags=lags, wait=int(wait),
+                             window=int(window), budget=int(budget),
+                             rate=float(rate), cutoff=float(cutoff),
+                             observed=observed)
+            plan.record()
+            ctrl.append(plan)
 
         use_folds = (delay_model is not None and self.staleness_decay > 0.0
-                     and any(c["window"] > 0 for c in ctrl))
+                     and any(c.window > 0 for c in ctrl))
         master = self._get_master_program(with_folds=use_folds,
                                           loss_fn=loss_fn)
 
@@ -394,10 +438,25 @@ class AsyncDistributedCodedGD:
         rounds = np.zeros(steps, int)
 
         def drain_one():
-            t, nu, r, err = pend.popleft()
+            # THE queue-pull point: the host blocks on step t's already-
+            # dispatched scalars here, so recording/stamping from them adds
+            # zero synchronization to the critical path.
+            t, nu, r, err, ts_disp = pend.popleft()
             unres[t] = int(nu)
             rounds[t] = int(r)
             errors[t] = float(err)
+            _record_step_metrics("pipeline", rounds=int(rounds[t]),
+                                 unresolved=int(unres[t]),
+                                 budget=ctrl[t].budget)
+            tr = _obs_trace.active_tracer()
+            if tr is not None:
+                # Async-safe stamping: dispatch-time → drain-time span of
+                # step t's in-flight window, from host clocks captured when
+                # the entry was enqueued (no block_until_ready added).
+                tr.complete("pipeline/step", ts_disp,
+                            _obs_trace.now_us() - ts_disp, lane="pipeline",
+                            step=t, rounds=int(rounds[t]),
+                            unresolved=int(unres[t]), budget=ctrl[t].budget)
 
         for t in range(steps):
             c = ctrl[t]
@@ -406,13 +465,15 @@ class AsyncDistributedCodedGD:
             # (depth > 1) and the two programs overlap on the devices.
             ti = t - 1 - tau
             theta_in = theta_rep[ti] if ti >= 0 else theta0_rep
-            never_rep = jax.device_put(c["never"], rep)
-            z = sync._launch_workers(theta_in, never_rep)
+            never_rep = jax.device_put(c.never, rep)
+            with _span("worker/launch", lane="worker", step=t):
+                z = sync._launch_workers(theta_in, never_rep)
 
             # 2. folds whose arrivals land THIS step (independent of the
             # current θ, so they overlap the worker launch like the decode)
             fold_dg = zero_dg
             if use_folds:
+                reg = _obs_metrics.active()
                 still = []
                 for entry in live_folds:
                     lag = t - entry.step
@@ -420,14 +481,27 @@ class AsyncDistributedCodedGD:
                     if arriving.any():
                         remaining = entry.cut_mask & (entry.lags > lag)
                         w_tau = np.float32(self.staleness_decay ** lag)
-                        delta, u2, n_new, fr = self._fold_program(
-                            entry.z_m, remaining, entry.u, fold_budget,
-                            w_tau)
+                        with _span("fold/dispatch", lane="fold", step=t,
+                                   source_step=entry.step, lag=lag):
+                            delta, u2, n_new, fr = self._fold_program(
+                                entry.z_m, remaining, entry.u, fold_budget,
+                                w_tau)
                         entry.u = u2
                         fold_newly.setdefault(entry.step, []).append(n_new)
                         fold_rounds_at.setdefault(t, []).append(fr)
                         fold_dg = (delta if fold_dg is zero_dg
                                    else self._add(fold_dg, delta))
+                        if reg is not None:
+                            # dispatch-side host facts only — n_new/fr stay
+                            # un-fetched device scalars until the end of run
+                            reg.counter("pipeline.folds_total").inc()
+                            reg.histogram(
+                                "pipeline.fold_lag",
+                                bins=_obs_metrics.LAG_BINS).observe(lag)
+                            reg.histogram(
+                                "pipeline.staleness_weight",
+                                bins=_obs_metrics.FRACTION_BINS).observe(
+                                    float(w_tau))
                     if lag < entry.window and (
                             entry.cut_mask & (entry.lags > lag)).any():
                         still.append(entry)
@@ -435,10 +509,12 @@ class AsyncDistributedCodedGD:
 
             # 3. fused master launch (decode + update + average + metric);
             # θ̄ is donated through the chain, z/mask arrive zero-copy
-            theta_m, tbar_m, nu, r, err, u_mask = master(
-                sync._mshard(z), np.asarray(c["cut"]), theta_m, tbar_m,
-                fold_dg, np.float32(t), np.asarray([c["budget"]], np.int32),
-                tstar_m)
+            with _span("master/dispatch", lane="master", step=t,
+                       budget=c.budget):
+                theta_m, tbar_m, nu, r, err, u_mask = master(
+                    sync._mshard(z), np.asarray(c.cut), theta_m, tbar_m,
+                    fold_dg, np.float32(t),
+                    np.asarray([c.budget], np.int32), tstar_m)
 
             # 4. broadcast the new iterate (zero-copy on the master device:
             # the replicated put reuses θ's buffer for the master shard)
@@ -451,14 +527,14 @@ class AsyncDistributedCodedGD:
 
             # 5. remember this step's survivors if its cut workers can
             # still land inside the fold window
-            if use_folds and c["window"] > 0 and (
-                    c["cut"] & (c["lags"] > 0)
-                    & (c["lags"] <= c["window"])).any():
+            if use_folds and c.window > 0 and (
+                    c.cut & (c.lags > 0)
+                    & (c.lags <= c.window)).any():
                 live_folds.append(_FoldEntry(
                     step=t, z_m=sync._mshard(z), u=u_mask,
-                    cut_mask=c["cut"], lags=c["lags"], window=c["window"]))
+                    cut_mask=c.cut, lags=c.lags, window=c.window))
 
-            pend.append((t, nu, r, err))
+            pend.append((t, nu, r, err, _obs_trace.now_us()))
             while len(pend) > self.depth:
                 drain_one()
 
@@ -473,13 +549,27 @@ class AsyncDistributedCodedGD:
         for t, counts in fold_rounds_at.items():
             fold_rounds[t] = sum(int(r) for r in counts)
 
+        reg = _obs_metrics.active()
+        if reg is not None:
+            # End-of-run totals from the fold scalars that were device
+            # values during the loop (fetching them mid-run would have
+            # serialized the pipeline), plus the estimator states.
+            reg.counter("pipeline.resolved_late_total").inc(
+                int(resolved_late.sum()))
+            reg.counter("pipeline.fold_rounds_total").inc(
+                int(fold_rounds.sum()))
+            reg.info("telemetry.straggler_estimator", est.snapshot(),
+                     driver="pipeline")
+            reg.info("telemetry.arrival_lag_estimator",
+                     self.lag_estimator.snapshot(), driver="pipeline")
+
         thetas = None
         if record_thetas:
             thetas = np.stack([np.asarray(x) for x in rec_thetas])
         return PipelineRunResult(
             theta_m, tbar_m, errors, unres, resolved_late, rounds,
-            fold_rounds, np.asarray([c["budget"] for c in ctrl]),
-            np.asarray([c["rate"] for c in ctrl]),
-            np.asarray([c["wait"] for c in ctrl]),
-            np.asarray([c["window"] for c in ctrl]),
-            np.asarray([c["cutoff"] for c in ctrl]), thetas)
+            fold_rounds, np.asarray([c.budget for c in ctrl]),
+            np.asarray([c.rate for c in ctrl]),
+            np.asarray([c.wait for c in ctrl]),
+            np.asarray([c.window for c in ctrl]),
+            np.asarray([c.cutoff for c in ctrl]), thetas)

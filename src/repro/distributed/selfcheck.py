@@ -34,6 +34,8 @@ armed-but-idle change no bit.
 from __future__ import annotations
 
 import argparse
+import functools
+import json
 
 import jax
 import jax.numpy as jnp
@@ -252,43 +254,93 @@ def main(argv=None) -> int:
                     help="check the depth-1 / zero-fold-window asynchronous "
                          "pipeline against the synchronous driver (straggler "
                          "and delay-model legs) instead of the GD step")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable result: one JSON object on stdout "
+                         "({ok, devices, workers, checks: [...]}) with "
+                         "per-check pass/fail instead of human parity lines; "
+                         "failures are collected (exit 1), not raised")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="export obs metrics JSONL (+ .trace.json spans) "
+                         "from the instrumented parity runs to PATH")
     args = ap.parse_args(argv)
+    from repro.obs import ObsSession
+    session = ObsSession.start(args.obs_out)
     n_dev = jax.device_count()
+
+    # (kind, backend, extra-detail, runner, human success line) per check —
+    # one uniform loop so --json and the human output cannot drift.
+    checks = []
     if args.pipeline:
         for backend in args.backends.split(","):
-            steps = check_pipeline_parity(K=args.K, n_workers=args.workers,
-                                          steps=args.steps, q0=args.q0,
-                                          backend=backend,
-                                          worker_encode=args.worker_encode)
-            print(f"parity OK: pipeline backend={backend} "
-                  f"worker_encode={args.worker_encode} W={args.workers} "
-                  f"devices={n_dev} steps={steps} (bit-identical iterates)")
-        return 0
-    if args.grad_agg:
+            checks.append((
+                "pipeline", backend,
+                {"worker_encode": args.worker_encode},
+                functools.partial(check_pipeline_parity, K=args.K,
+                                  n_workers=args.workers, steps=args.steps,
+                                  q0=args.q0, backend=backend,
+                                  worker_encode=args.worker_encode),
+                lambda steps, backend=backend: (
+                    f"parity OK: pipeline backend={backend} "
+                    f"worker_encode={args.worker_encode} W={args.workers} "
+                    f"devices={n_dev} steps={steps} "
+                    "(bit-identical iterates)")))
+    elif args.grad_agg:
         for backend in args.backends.split(","):
-            steps = check_grad_agg_parity(n_shards=args.K,
-                                          n_workers=args.workers,
-                                          steps=args.steps, q0=args.q0,
-                                          backend=backend)
-            print(f"parity OK: grad-agg backend={backend} W={args.workers} "
-                  f"devices={n_dev} masks={steps} (bit-identical sums)")
-        return 0
-    if args.master_decode == "sharded":
-        # The sharded rounds ARE the sparse neighbor-table rounds, so the
-        # bit-parity reference is the sparse single-device decode.
-        backends = ["sparse"]
+            checks.append((
+                "grad-agg", backend, {},
+                functools.partial(check_grad_agg_parity, n_shards=args.K,
+                                  n_workers=args.workers, steps=args.steps,
+                                  q0=args.q0, backend=backend),
+                lambda steps, backend=backend: (
+                    f"parity OK: grad-agg backend={backend} W={args.workers} "
+                    f"devices={n_dev} masks={steps} (bit-identical sums)")))
     else:
-        backends = args.backends.split(",")
-    for backend in backends:
-        steps = check_parity(K=args.K, n_workers=args.workers,
-                             steps=args.steps, q0=args.q0, backend=backend,
-                             master_decode=args.master_decode,
-                             worker_encode=args.worker_encode)
-        print(f"parity OK: backend={backend} "
-              f"master_decode={args.master_decode} "
-              f"worker_encode={args.worker_encode} W={args.workers} "
-              f"devices={n_dev} steps={steps} (bit-identical iterates)")
-    return 0
+        if args.master_decode == "sharded":
+            # The sharded rounds ARE the sparse neighbor-table rounds, so
+            # the bit-parity reference is the sparse single-device decode.
+            backends = ["sparse"]
+        else:
+            backends = args.backends.split(",")
+        for backend in backends:
+            checks.append((
+                "gd-step", backend,
+                {"master_decode": args.master_decode,
+                 "worker_encode": args.worker_encode},
+                functools.partial(check_parity, K=args.K,
+                                  n_workers=args.workers, steps=args.steps,
+                                  q0=args.q0, backend=backend,
+                                  master_decode=args.master_decode,
+                                  worker_encode=args.worker_encode),
+                lambda steps, backend=backend: (
+                    f"parity OK: backend={backend} "
+                    f"master_decode={args.master_decode} "
+                    f"worker_encode={args.worker_encode} W={args.workers} "
+                    f"devices={n_dev} steps={steps} "
+                    "(bit-identical iterates)")))
+
+    records, ok_all = [], True
+    try:
+        for kind, backend, detail, run, ok_line in checks:
+            rec = {"kind": kind, "backend": backend, **detail}
+            try:
+                steps = run()
+            except AssertionError as e:
+                if not args.json:
+                    raise     # legacy behavior: fail loudly on first diverge
+                rec.update(ok=False, error=str(e))
+                ok_all = False
+            else:
+                rec.update(ok=True, steps=int(steps))
+                if not args.json:
+                    print(ok_line(steps))
+            records.append(rec)
+    finally:
+        # ObsSession prints its status to stderr, keeping --json stdout pure.
+        session.finish()
+    if args.json:
+        print(json.dumps({"ok": ok_all, "devices": n_dev,
+                          "workers": args.workers, "checks": records}))
+    return 0 if ok_all else 1
 
 
 if __name__ == "__main__":

@@ -91,6 +91,20 @@ class StragglerRateEstimator:
         self.steps += 1
         return self.rate
 
+    def snapshot(self) -> dict:
+        """JSON-ready estimator state (fed to the obs registry as an info
+        metric by the distributed drivers)."""
+        return {
+            "kind": "straggler_rate",
+            "rate": float(self.rate),
+            "decay": float(self.decay),
+            "prior": float(self.prior),
+            "steps": int(self.steps),
+            "ema": float(self._ema),
+            "norm": float(self._norm),
+            "bias_corrected": bool(self._norm > 0.0),
+        }
+
 
 def rounds_to_clear(q0: float, l: int, r: int, *, max_rounds: int = 64,
                     tol: float = 1e-3) -> int:
@@ -188,6 +202,21 @@ class ArrivalLagEstimator:
             return 1.0
         s = int(min(max(staleness, 0), self.max_lag))
         return float(p[1:s + 1].sum() / late)
+
+    def snapshot(self) -> dict:
+        """JSON-ready estimator state: the lag pmf (bins ``0..max_lag+1``,
+        last bin = "effectively never") and the fold-window coverage curve
+        the policy in :func:`pick_wait_and_staleness` walks."""
+        return {
+            "kind": "arrival_lag",
+            "decay": float(self.decay),
+            "max_lag": int(self.max_lag),
+            "steps": int(self.steps),
+            "norm": float(self._norm),
+            "pmf": [float(x) for x in self.pmf],
+            "coverage": [float(self.coverage(s))
+                         for s in range(self.max_lag + 1)],
+        }
 
 
 def pick_wait_for(q_hat: float, w: int, l: int, r: int, *,

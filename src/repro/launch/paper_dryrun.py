@@ -73,8 +73,19 @@ import jax.numpy as jnp
 from repro.launch.analysis import analyze_compiled
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.steps import build_coded_gd_step
+from repro.obs import ObsSession, metrics as _obs_metrics
+from repro.obs.trace import span as _span
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _record_aot(shape_tag: str, out: dict) -> None:
+    reg = _obs_metrics.active()
+    if reg is None:
+        return
+    reg.gauge("aot.lower_s", shape=shape_tag).set(out["lower_s"])
+    reg.gauge("aot.compile_s", shape=shape_tag).set(out["compile_s"])
+    reg.info("aot.report", out, shape=shape_tag)
 
 
 def main(argv=None):
@@ -103,7 +114,11 @@ def main(argv=None):
                     help="also lower+analyze the pipelined runtime's "
                          "late-fold program (sparse re-decode + weighted "
                          "delta) on the same mesh")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="export obs metrics JSONL (+ .trace.json with "
+                         "aot/lower and aot/compile spans) to PATH")
     args = ap.parse_args(argv)
+    session = ObsSession.start(args.obs_out)
 
     dtype = jnp.bfloat16 if args.dtype == "bf16" else jnp.float32
 
@@ -137,10 +152,12 @@ def main(argv=None):
                                             dtype, mesh, decode=args.decode,
                                             seed=0 if args.seeded else None,
                                             seeded_mode=args.seeded_mode)
-    lowered = jitted.lower(*specs)
+    with _span("aot/lower", lane="aot"):
+        lowered = jitted.lower(*specs)
     t_lower = time.time() - t0
     t0 = time.time()
-    compiled = lowered.compile()
+    with _span("aot/compile", lane="aot"):
+        compiled = lowered.compile()
     t_compile = time.time() - t0
 
     # MODEL_FLOPS for this workload: the useful work is z = Cθ (2·N·k·nb)
@@ -181,6 +198,7 @@ def main(argv=None):
     }
     (ARTIFACTS / f"paper-coded-gd__{shape_tag}__{mesh_desc.replace('x','_')}.json"
      ).write_text(json.dumps(out, indent=2))
+    _record_aot(shape_tag, out)
 
     if args.pipeline:
         from repro.launch.steps import build_pipeline_fold_step
@@ -188,10 +206,12 @@ def main(argv=None):
         t0 = time.time()
         fold_jitted, fold_specs = build_pipeline_fold_step(
             args.k, args.K, args.decode_iters, dtype, mesh)
-        fold_lowered = fold_jitted.lower(*fold_specs)
+        with _span("aot/lower", lane="aot", shape="fold"):
+            fold_lowered = fold_jitted.lower(*fold_specs)
         tf_lower = time.time() - t0
         t0 = time.time()
-        fold_compiled = fold_lowered.compile()
+        with _span("aot/compile", lane="aot", shape="fold"):
+            fold_compiled = fold_lowered.compile()
         tf_compile = time.time() - t0
         # useful work of a fold: the decode matmuls only (no worker matvec)
         fold_mflops = args.decode_iters * 2 * p * N * nb
@@ -223,6 +243,9 @@ def main(argv=None):
         (ARTIFACTS / f"paper-coded-gd__{fold_tag}__"
          f"{mesh_desc.replace('x', '_')}.json"
          ).write_text(json.dumps(fold_out, indent=2))
+        _record_aot(fold_tag, fold_out)
+
+    session.finish()
 
 
 if __name__ == "__main__":

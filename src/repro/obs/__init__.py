@@ -1,0 +1,122 @@
+"""`repro.obs` — dependency-free observability: metrics, spans, export.
+
+Three pieces:
+
+* :mod:`repro.obs.metrics` — process-local :class:`MetricsRegistry`
+  (counters / gauges / fixed-bin histograms / info facts) that every layer
+  records into when enabled, with ``snapshot()`` and JSONL export.
+* :mod:`repro.obs.trace` — host-side span tracer emitting Chrome/Perfetto
+  ``trace_event`` JSON, with async-safe stamping for the pipelined driver.
+* :mod:`repro.obs.report` — ``python -m repro.obs.report out.jsonl``
+  renders a run summary from an exported JSONL.
+
+:class:`ObsSession` is the one-liner the CLI surfaces use behind their
+``--obs-out`` flags: it enables both sinks, and ``finish()`` writes
+``<path>`` (metrics JSONL) plus ``<path stem>.trace.json`` (Chrome trace)
+and restores the disabled state.  ``ObsSession.start(None)`` returns an
+inert session, so callers never branch::
+
+    session = ObsSession.start(args.obs_out)
+    try:
+        ...                      # instrumented run
+    finally:
+        session.finish()
+
+Everything here is off-by-default free: no registry/tracer enabled means
+instrumentation sites cost one attribute read and a None check, and jitted
+programs see no new operands (recording only touches already-fetched host
+values).
+"""
+from __future__ import annotations
+
+import logging
+import sys
+from pathlib import Path
+
+from . import metrics, trace
+from .metrics import MetricsRegistry, active, disable, enable, recording
+from .trace import (Tracer, active_tracer, disable_tracing, enable_tracing,
+                    span, tracing)
+
+__all__ = [
+    "metrics", "trace", "MetricsRegistry", "Tracer", "ObsSession",
+    "enable", "disable", "active", "recording",
+    "enable_tracing", "disable_tracing", "active_tracer", "tracing", "span",
+    "enable_default_logging",
+]
+
+
+class ObsSession:
+    """Paired metrics registry + tracer with one-call JSONL/trace export."""
+
+    def __init__(self, metrics_path, *, jax_annotations: bool = False):
+        self.metrics_path = Path(metrics_path)
+        self.trace_path = self.metrics_path.with_suffix(".trace.json")
+        self.registry = metrics.enable()
+        self.tracer = trace.enable_tracing(jax_annotations=jax_annotations)
+        self.finished = False
+
+    @classmethod
+    def start(cls, metrics_path=None, **kw) -> "ObsSession | _NullSession":
+        """Live session when a path is given, inert no-op otherwise."""
+        if metrics_path is None:
+            return _NullSession()
+        return cls(metrics_path, **kw)
+
+    def finish(self, *, quiet: bool = False) -> Path:
+        """Export both files, disable the sinks, return the JSONL path.
+
+        Status lines go to **stderr** so callers with machine-readable
+        stdout (``selfcheck --json``) stay parseable.
+        """
+        if self.finished:
+            return self.metrics_path
+        self.finished = True
+        if metrics.active() is self.registry:
+            metrics.disable()
+        if trace.active_tracer() is self.tracer:
+            trace.disable_tracing()
+        self.registry.export_jsonl(self.metrics_path)
+        self.tracer.export(self.trace_path)
+        if not quiet:
+            print(f"[obs] metrics -> {self.metrics_path} "
+                  f"({len(self.registry)} metrics); "
+                  f"trace -> {self.trace_path} "
+                  f"({len(self.tracer.events)} events)", file=sys.stderr)
+        return self.metrics_path
+
+
+class _NullSession:
+    """Inert stand-in returned by ``ObsSession.start(None)``."""
+
+    registry = None
+    tracer = None
+    metrics_path = None
+    trace_path = None
+    finished = True
+
+    def finish(self, *, quiet: bool = False):
+        return None
+
+
+_DEFAULT_HANDLER: logging.Handler | None = None
+
+
+def enable_default_logging(level: int = logging.DEBUG) -> logging.Logger:
+    """Make ``repro`` loggers visible without hand-rolled logging config.
+
+    Attaches one stderr handler to the ``"repro"`` logger (idempotent) so
+    e.g. ``CodedComputeEngine``'s construction-time dispatch line —
+    ``debug_info()``: resolved backend, seeded mode, VMEM estimate — shows
+    up immediately.  Returns the configured logger.
+    """
+    global _DEFAULT_HANDLER
+    logger = logging.getLogger("repro")
+    if _DEFAULT_HANDLER is None or _DEFAULT_HANDLER not in logger.handlers:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter(
+            "%(asctime)s %(name)s %(levelname)s: %(message)s"))
+        logger.addHandler(handler)
+        _DEFAULT_HANDLER = handler
+    logger.setLevel(level)
+    return logger

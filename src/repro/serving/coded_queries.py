@@ -43,12 +43,15 @@ tracking realized stragglers) are observable, and tested.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _span
 from repro.serving.slot_lifecycle import SlotPool
 
 __all__ = ["CodedQuery", "CodedQueryBatcher"]
@@ -79,6 +82,7 @@ class CodedQuery:
     launches: int = 0            # batched launches this query rode in
     admitted_launch: int = -1    # launch index at slot admission
     finished_launch: int = -1    # launch index at retirement
+    submitted_s: float = -1.0    # host clock at submit() (-1: never queued)
 
 
 class CodedQueryBatcher:
@@ -196,7 +200,40 @@ class CodedQueryBatcher:
         if query.straggler_mask.shape != (self._N,):
             raise ValueError(
                 f"straggler_mask must be ({self._N},); got {query.straggler_mask.shape}")
+        query.submitted_s = time.perf_counter()
+        reg = _obs_metrics.active()
+        if reg is not None:
+            reg.counter("serving.submitted_total", mode=self.mode).inc()
         self.queue.append(query)
+
+    def _record_finished(self, queries) -> None:
+        """Retirement-time accounting (host data only: the per-query stats
+        were already pulled to fill the CodedQuery fields)."""
+        reg = _obs_metrics.active()
+        if reg is None:
+            return
+        reg.counter("serving.finished_total",
+                    mode=self.mode).inc(len(queries))
+        h_launch = reg.histogram("serving.query.launches",
+                                 bins=_obs_metrics.COUNT_BINS, mode=self.mode)
+        h_rounds = reg.histogram("serving.query.rounds",
+                                 bins=_obs_metrics.ROUND_BINS, mode=self.mode)
+        for q in queries:
+            h_launch.observe(q.launches)
+            if q.rounds >= 0:   # -1: adaptive lockstep, per-slot unknown
+                h_rounds.observe(q.rounds)
+
+    def _record_admitted(self, queries) -> None:
+        """Queue→slot admission latency (host wall-clock since submit)."""
+        reg = _obs_metrics.active()
+        if reg is None:
+            return
+        now = time.perf_counter()
+        h = reg.histogram("serving.admission_wait_s",
+                          bins=_obs_metrics.LATENCY_BINS, mode=self.mode)
+        for q in queries:
+            if q.submitted_s >= 0.0:
+                h.observe(now - q.submitted_s)
 
     @property
     def active(self) -> bool:
@@ -213,8 +250,10 @@ class CodedQueryBatcher:
         for s, q in enumerate(wave):
             theta_B[s] = q.theta
             mask_B[s] = q.straggler_mask
-        grads, unresolved = self._flush(jnp.asarray(theta_B),
-                                        jnp.asarray(mask_B))
+        self._record_admitted(wave)
+        with _span("serving/launch", lane="serving", mode="lockstep"):
+            grads, unresolved = self._flush(jnp.asarray(theta_B),
+                                            jnp.asarray(mask_B))
         # Fixed-budget waves charge every query the full budget; a scheme
         # built with adaptive=True early-exits per slot inside the flush,
         # so the actual per-slot rounds are unknown at this layer (-1).
@@ -233,6 +272,7 @@ class CodedQueryBatcher:
             q.unresolved = int(unresolved[s])
             q.done = True
             self.finished.append(q)
+        self._record_finished(wave)
 
     # ----------------------------------------------------------- continuous
 
@@ -244,6 +284,7 @@ class CodedQueryBatcher:
         spend their budget in fewer launches, everyone's TOTAL budget is
         the same.
         """
+        admitted = []
         for s in self.pool.free_slots():
             if not self.queue:
                 break
@@ -254,19 +295,29 @@ class CodedQueryBatcher:
             self._mask[s] = q.straggler_mask
             self._fresh[s] = True
             q.admitted_launch = self.launches
+            admitted.append(q)
+        if admitted:
+            self._record_admitted(admitted)
 
     def _step_continuous(self) -> None:
         budgets = self.pool.launch_budgets()
-        if self._fresh.any():   # encode newly admitted slots' worker products
-            self._vals, self._erased = self._init(
-                jnp.asarray(self._theta), jnp.asarray(self._mask),
-                self._vals, self._erased, jnp.asarray(self._fresh))
-        self._vals, self._erased, rounds_d, g, unres_d, ecnt_d = \
-            self._launch(self._vals, self._erased, jnp.asarray(budgets))
-        launch_idx = self.launches
-        self.launches += 1
-        rounds, unres, ecnt = (np.asarray(rounds_d), np.asarray(unres_d),
-                               np.asarray(ecnt_d))
+        reg = _obs_metrics.active()
+        if reg is not None:
+            reg.histogram("serving.slot_occupancy",
+                          bins=_obs_metrics.FRACTION_BINS,
+                          mode=self.mode).observe(
+                              float(self.pool.occupied.mean()))
+        with _span("serving/launch", lane="serving", mode="continuous"):
+            if self._fresh.any():   # encode newly admitted slots' products
+                self._vals, self._erased = self._init(
+                    jnp.asarray(self._theta), jnp.asarray(self._mask),
+                    self._vals, self._erased, jnp.asarray(self._fresh))
+            self._vals, self._erased, rounds_d, g, unres_d, ecnt_d = \
+                self._launch(self._vals, self._erased, jnp.asarray(budgets))
+            launch_idx = self.launches
+            self.launches += 1
+            rounds, unres, ecnt = (np.asarray(rounds_d), np.asarray(unres_d),
+                                   np.asarray(ecnt_d))
         self._fresh[:] = False
         for s, q in self.pool.owners():
             q.launches += 1
@@ -274,12 +325,16 @@ class CodedQueryBatcher:
         # The pool applies THE retire rule (early exit / fully resolved /
         # budget exhausted — see SlotPool.account, incl. the chunk-boundary
         # probe-round note); retired slots' rows are the only device pulls.
+        retired_q = []
         for s, q in self.pool.account(rounds, ecnt):
             q.gradient = np.asarray(g[s])
             q.unresolved = int(unres[s])
             q.finished_launch = launch_idx
             q.done = True
             self.finished.append(q)
+            retired_q.append(q)
+        if retired_q:
+            self._record_finished(retired_q)
 
     # ------------------------------------------------------------------ run
 

@@ -29,6 +29,8 @@ from typing import Any, Iterator
 
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+
 __all__ = ["SlotPool"]
 
 
@@ -140,6 +142,13 @@ class SlotPool:
                          or int(unresolved[s]) == 0)
             if converged or int(self._used[s]) >= self.budget:
                 retired.append((s, owner))
+        reg = _obs_metrics.active()
+        if reg is not None and retired:
+            reg.counter("serving.slots_retired_total").inc(len(retired))
+            h = reg.histogram("serving.slot_rounds",
+                              bins=_obs_metrics.ROUND_BINS)
+            for s, _ in retired:
+                h.observe(int(self._used[s]))
         for s, _ in retired:
             self._owner[s] = None
         return retired

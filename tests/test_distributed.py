@@ -351,3 +351,24 @@ def test_seeded_and_grad_agg_parity_subprocess():
     assert res.returncode == 0, f"selfcheck failed:\n{res.stdout}\n{res.stderr}"
     assert "parity OK: grad-agg" in res.stdout
     assert "devices=8" in res.stdout
+
+
+def test_selfcheck_json_mode_in_process(capsys, tmp_path):
+    """--json puts one machine-readable object on stdout (the obs status
+    line goes to stderr, keeping it parseable) and exports --obs-out."""
+    import json
+
+    from repro.distributed.selfcheck import main
+
+    obs = tmp_path / "sc.jsonl"
+    rc = main(["--K", "32", "--workers", "8", "--steps", "2",
+               "--backends", "dense", "--json", "--obs-out", str(obs)])
+    cap = capsys.readouterr()
+    assert rc == 0
+    doc = json.loads(cap.out)                  # stdout is pure JSON
+    assert doc["ok"] is True and doc["workers"] == 8
+    assert doc["checks"] == [{
+        "kind": "gd-step", "backend": "dense", "master_decode": "single",
+        "worker_encode": "materialized", "ok": True, "steps": 2}]
+    assert "[obs]" in cap.err
+    assert obs.exists() and obs.with_suffix(".trace.json").exists()

@@ -1,0 +1,226 @@
+"""Observability layer: metrics registry semantics, span tracer export,
+ObsSession lifecycle, and the JSONL report renderer."""
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    ObsSession,
+    enable_default_logging,
+    metrics,
+    report,
+    trace,
+)
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_counter_gauge_info_semantics():
+    reg = metrics.MetricsRegistry()
+    c = reg.counter("x.total", driver="sync")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+    g = reg.gauge("x.gauge")
+    assert not g.updated
+    g.set(1.0)
+    g.set(2.0)                          # last write wins
+    assert g.value == 2.0 and g.updated
+    i = reg.info("x.info", {"a": 1})
+    reg.info("x.info", {"b": 2})        # last write wins
+    assert i.info == {"b": 2}
+
+
+def test_labels_make_distinct_series_and_render_sorted():
+    reg = metrics.MetricsRegistry()
+    reg.counter("steps", driver="sync").inc()
+    reg.counter("steps", driver="pipeline").inc(2)
+    assert reg.counter("steps", driver="sync").value == 1.0
+    snap = reg.snapshot()
+    assert snap["steps{driver=sync}"]["value"] == 1.0
+    assert snap["steps{driver=pipeline}"]["value"] == 2.0
+    # label values are stringified; keys render sorted
+    reg.gauge("g", b=2, a=1)
+    assert "g{a=1,b=2}" in reg.snapshot()
+
+
+def test_kind_mismatch_rejected():
+    reg = metrics.MetricsRegistry()
+    reg.counter("m")
+    with pytest.raises(ValueError, match="already"):
+        reg.gauge("m")
+    with pytest.raises(ValueError, match="already"):
+        reg.histogram("m", bins=(0, 1))
+
+
+def test_histogram_buckets_and_bin_contract():
+    reg = metrics.MetricsRegistry()
+    h = reg.histogram("rounds", bins=(0, 1, 2, 4))
+    # edges E define E+1 buckets: (-inf,0], (0,1], (1,2], (2,4], (4,inf)
+    h.observe_many([0, 1, 2, 3, 5])
+    assert h.counts.tolist() == [1, 1, 1, 1, 1]
+    assert h.count == 5 and h.total == pytest.approx(11.0)
+    assert h.min == 0.0 and h.max == 5.0
+    assert h.mean == pytest.approx(11.0 / 5)
+    # re-fetch without bins returns the same series; different bins reject
+    assert reg.histogram("rounds") is h
+    with pytest.raises(ValueError, match="different bin edges"):
+        reg.histogram("rounds", bins=(0, 1))
+    with pytest.raises(ValueError, match="needs bins"):
+        reg.histogram("fresh")
+    # 'name' stays usable as a label key (positional-only metric name)
+    reg.counter("c", name="x").inc()
+
+
+def test_recording_scopes_and_restores():
+    assert metrics.active() is None
+    with metrics.recording() as outer:
+        assert metrics.active() is outer
+        inner = metrics.MetricsRegistry()
+        with metrics.recording(inner):
+            assert metrics.active() is inner
+        assert metrics.active() is outer
+    assert metrics.active() is None
+
+
+def test_export_jsonl_round_trips(tmp_path):
+    reg = metrics.MetricsRegistry()
+    reg.counter("a.total").inc(3)
+    reg.histogram("a.h", bins=metrics.ROUND_BINS, driver="sync").observe(4)
+    path = reg.export_jsonl(tmp_path / "obs" / "m.jsonl")
+    meta, entries = report.load_jsonl(path)
+    assert meta["schema"] == 1 and meta["n_metrics"] == 2
+    by_kind = {e["kind"] for e in entries}
+    assert by_kind == {"counter", "histogram"}
+    h = next(e for e in entries if e["kind"] == "histogram")
+    assert h["labels"] == {"driver": "sync"}
+    assert sum(h["counts"]) == 1 and h["sum"] == 4.0
+    # every line is plain JSON (the export IS the wire format)
+    for line in path.read_text().splitlines():
+        json.loads(line)
+
+
+# --------------------------------------------------------------- tracer
+
+
+def test_tracer_spans_lanes_and_metric_feed(tmp_path):
+    tr = trace.Tracer()
+    with metrics.recording() as reg, trace.tracing(tr):
+        with trace.span("master/decode", lane="master", step=3):
+            pass
+        tr.complete("pipeline/step", trace.now_us() - 50, 50,
+                    lane="pipeline", step=0)
+    assert [e["name"] for e in tr.events] == ["master/decode",
+                                              "pipeline/step"]
+    assert all(e["ph"] == "X" and e["dur"] >= 0 for e in tr.events)
+    # distinct lanes -> distinct synthetic tids
+    assert tr.events[0]["tid"] != tr.events[1]["tid"]
+    assert tr.events[0]["args"]["step"] == 3
+    # finished spans feed per-phase counters into the active registry
+    assert reg.counter("trace.span_count", name="master/decode").value == 1
+    assert reg.counter("trace.span_seconds",
+                       name="pipeline/step").value > 0
+    doc = json.loads(tr.export(tmp_path / "t.trace.json").read_text())
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names == {"master", "pipeline"}
+
+
+def test_span_is_null_context_when_tracing_off():
+    assert trace.active_tracer() is None
+    cm = trace.span("anything", lane="x")
+    with cm:
+        pass                        # shared null context: free, reusable
+    assert cm is trace.span("other")
+
+
+# ------------------------------------------------------------ ObsSession
+
+
+def test_obs_session_exports_both_files(tmp_path, capsys):
+    path = tmp_path / "run.jsonl"
+    session = ObsSession.start(path)
+    reg, tr = metrics.active(), trace.active_tracer()
+    assert reg is not None and tr is not None
+    reg.counter("x").inc()
+    with trace.span("phase/a"):
+        pass
+    session.finish()
+    session.finish()                      # idempotent
+    assert metrics.active() is None and trace.active_tracer() is None
+    meta, entries = report.load_jsonl(path)
+    assert any(e["name"] == "x" for e in entries)
+    doc = json.loads(path.with_suffix(".trace.json").read_text())
+    assert any(e["name"] == "phase/a" for e in doc["traceEvents"])
+    # status line goes to stderr — stdout stays pure for --json surfaces
+    out = capsys.readouterr()
+    assert "[obs]" in out.err and out.out == ""
+
+
+def test_null_session_is_inert():
+    session = ObsSession.start(None)
+    assert metrics.active() is None and trace.active_tracer() is None
+    session.finish()                      # no-op, no files
+
+
+def test_report_renders_summary(tmp_path, capsys):
+    path = tmp_path / "run.jsonl"
+    session = ObsSession.start(path)
+    reg = metrics.active()
+    reg.counter("distributed.steps_total", driver="pipeline").inc(4)
+    reg.histogram("distributed.step.rounds", bins=metrics.ROUND_BINS,
+                  driver="pipeline").observe_many([3, 4, 5, 6])
+    reg.histogram("distributed.straggler.tracking_error",
+                  bins=metrics.FRACTION_BINS,
+                  driver="pipeline").observe_many([0.1, 0.2])
+    reg.info("engine.dispatch", {"resolved_backend": "sparse"},
+             backend="auto", resolved="sparse", N=128)
+    with trace.span("master/decode"):
+        pass
+    session.finish(quiet=True)
+    assert report.main([str(path),
+                        "--trace", str(path.with_suffix(".trace.json"))]) == 0
+    out = capsys.readouterr().out
+    assert "distributed.steps_total" in out or "steps" in out
+    assert "master/decode" in out
+    assert "tracking" in out
+
+
+def test_enable_default_logging_idempotent():
+    logger = logging.getLogger("repro")
+    before_handlers = list(logger.handlers)
+    before_level = logger.level
+    try:
+        assert enable_default_logging() is logger
+        n = len(logger.handlers)
+        assert n == len(before_handlers) + 1
+        enable_default_logging()              # idempotent: no second handler
+        assert len(logger.handlers) == n
+        assert logger.level == logging.DEBUG
+    finally:
+        logger.handlers = before_handlers
+        logger.setLevel(before_level)
+
+
+# ------------------------------------- engine dispatch discoverability
+
+
+def test_engine_debug_info_surfaces_in_snapshot():
+    from repro.core import make_regular_ldpc
+    from repro.core.engine import CodedComputeEngine
+
+    code = make_regular_ldpc(64, l=3, r=6, seed=0)
+    with metrics.recording() as reg:
+        CodedComputeEngine(code, backend="sparse", decode_iters=4)
+    snap = reg.snapshot()
+    infos = [v for v in snap.values() if v["name"] == "engine.dispatch"]
+    assert len(infos) == 1
+    assert infos[0]["info"]["resolved_backend"] == "sparse"
+    resolves = [v for v in snap.values()
+                if v["name"] == "decoder.resolve_total"]
+    assert resolves and resolves[0]["labels"]["resolved"] == "sparse"

@@ -331,3 +331,77 @@ def test_pipeline_timeline_depth2_overlaps():
 def test_pipeline_timeline_validates():
     with pytest.raises(ValueError, match="depth"):
         pipeline_timeline([1.0], [1.0], 0)
+
+
+# ----------------------------------------------------------- observability
+
+
+def _reset_estimators(pipe):
+    est, lag = pipe.estimator, pipe.lag_estimator
+    est._ema, est._norm, est.steps = 0.0, 0.0, 0
+    lag._mass[:] = 0.0
+    lag._norm, lag.steps = 0.0, 0
+
+
+def test_obs_instrumentation_preserves_trajectory_and_caches():
+    """Obs on vs off: bit-identical iterates/rounds/unresolved, the
+    compile-once invariants hold, and the streams are non-vacuous."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    scheme = _scheme(decode_iters=16)
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=2, max_staleness=2,
+                                   staleness_decay=0.5,
+                                   budget_mode="telemetry", max_rounds=16)
+    dm = ScheduledDelays.build(_fold_schedule(6))
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        _reset_estimators(pipe)
+        return pipe.run(jnp.zeros(K), None, 6, key=key,
+                        theta_star=PROB.theta_star, delay_model=dm)
+
+    r_plain = run()
+    with obs_metrics.recording() as reg, obs_trace.tracing() as tr:
+        r_obs = run()
+    assert (np.asarray(r_plain.theta) == np.asarray(r_obs.theta)).all()
+    assert (r_plain.rounds == r_obs.rounds).all()
+    assert (r_plain.unresolved == r_obs.unresolved).all()
+    assert (r_plain.budgets == r_obs.budgets).all()
+    assert pipe._cache_size() == 1
+    assert pipe._fold_program._cache_size() == 1
+    assert reg.counter("distributed.steps_total",
+                       driver="pipeline").value == 6
+    assert reg.get("distributed.step.rounds", driver="pipeline").count == 6
+    names = {e["name"] for e in tr.events}
+    assert {"worker/launch", "master/dispatch", "pipeline/step"} <= names
+
+
+def test_sync_and_pipeline_metric_streams_agree_at_depth1():
+    """depth=1 / zero window walks the synchronous trajectory, so the two
+    drivers' per-step metric streams must be identical histograms —
+    distinguished only by the driver label."""
+    from repro.obs import metrics as obs_metrics
+
+    scheme = _scheme(decode_iters=8)
+    sync = DistributedCodedGD(scheme, TOPO, budget_mode="fixed")
+    pipe = AsyncDistributedCodedGD(scheme, TOPO, depth=1, max_staleness=0,
+                                   budget_mode="fixed")
+    key = jax.random.PRNGKey(1)
+    theta0 = jnp.zeros(K)
+    with obs_metrics.recording() as reg:
+        sync.run(theta0, None, 5, key=key, theta_star=PROB.theta_star,
+                 delay_model=DelayModel(tau=1.0, mu=1.0))
+        pipe.run(theta0, None, 5, key=key, theta_star=PROB.theta_star,
+                 delay_model=DelayModel(tau=1.0, mu=1.0))
+    for name in ("distributed.step.rounds", "distributed.step.unresolved",
+                 "distributed.step.budget",
+                 "distributed.step.budget_headroom"):
+        hs = reg.get(name, driver="sync")
+        hp = reg.get(name, driver="pipeline")
+        assert hs.count == hp.count == 5, name
+        assert hs.counts.tolist() == hp.counts.tolist(), name
+        assert hs.total == hp.total, name
+    assert reg.counter("distributed.steps_total", driver="sync").value == 5
+    assert reg.counter("distributed.steps_total",
+                       driver="pipeline").value == 5

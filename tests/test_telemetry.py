@@ -247,3 +247,39 @@ def test_topology_validation():
         topo.worker_rows(4)
     assert float(topo.observed_fraction(jnp.array([True, False, True, False]))
                  ) == pytest.approx(0.5)
+
+
+# ----------------------------------------------------- estimator snapshots
+
+
+def test_straggler_estimator_snapshot_json_round_trips():
+    import json
+
+    est = StragglerRateEstimator(decay=0.9, prior=0.3)
+    snap = est.snapshot()
+    assert snap["kind"] == "straggler_rate"
+    assert not snap["bias_corrected"]          # prior only, no observations
+    assert snap["rate"] == pytest.approx(0.3)
+    est.observe(0.5)
+    est.observe(0.25)
+    snap = est.snapshot()
+    assert snap["bias_corrected"] and snap["steps"] == 2
+    assert snap["rate"] == pytest.approx(est.rate)
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_lag_estimator_snapshot_pmf_sums_to_one():
+    import json
+
+    lag = ArrivalLagEstimator(decay=0.5, max_lag=4)
+    snap = lag.snapshot()                      # prior pmf is a distribution
+    assert snap["kind"] == "arrival_lag"
+    assert sum(snap["pmf"]) == pytest.approx(1.0)
+    lag.observe([0, 0, 1, 99])                 # 99 clips into the never bin
+    lag.observe([0, 2, 2, 0])
+    snap = lag.snapshot()
+    assert sum(snap["pmf"]) == pytest.approx(1.0)
+    assert len(snap["pmf"]) == lag.max_lag + 2
+    assert snap["coverage"] == pytest.approx(
+        [lag.coverage(s) for s in range(lag.max_lag + 1)])
+    assert json.loads(json.dumps(snap)) == snap
