@@ -61,12 +61,26 @@ the ratio alone, while a code change that erodes the win moves it directly:
   ``trace_events`` > 0 — a silently-disabled registry would otherwise
   pass trivially).  ``host_overhead_pct`` is recorded but never gated
   (wall-clock recording cost is machine-dependent).
+* ``replay`` (schema v10) — pattern-compiled peeling on a recurring
+  straggler stream: the cache-hit schedule-replay decode vs the flooding
+  sparse decode, same run, same queries.  Gated relatively:
+  ``cache_hit_speedup_vs_sparse`` (timed) and ``modeled_work_ratio``
+  (flooding edge-ops / replayed edge-ops, deterministic).  HARD floors on
+  the fresh record at N = 8192: speedup ≥ 2×, realized
+  ``schedule_cache_hit_rate`` ≥ 0.8 (read back from the obs
+  ``sched_cache.hit_rate`` gauge), and ``bit_identical`` — the replay
+  must reproduce the flooding decode's values and erasure trajectory
+  exactly, or the speedup is vacuous.
 
-``--sections`` selects which gates run (CI's tier-1 job gates
-batched+serving+large_n+seeded+seeded_gather; the fake-8-device
-distributed job gates distributed+pipeline).  Every record present in both files is compared
+Every gate lives in the ``SECTIONS`` registry (name → description +
+runner); ``--sections`` selects which ones run (CI's tier-1 job gates
+batched+serving+large_n+seeded+seeded_gather+replay; the fake-8-device
+distributed job gates distributed+pipeline), ``--list-sections`` prints
+the registry, and an unknown name fails loudly rather than silently
+gating nothing.  Every record present in both files is compared
 (batched records key on (mode, N, B, D); serving on (mode, N, B, budget,
-chunk, n_queries); distributed/pipeline on (mode, W, N); large_n on (backend, N, D)); the
+chunk, n_queries); distributed/pipeline on (mode, W, N); large_n on
+(backend, N, D); replay on (N, n_queries, n_patterns, budget)); the
 run fails if any fresh ratio drops more than ``--tol`` (relative) below
 the baseline's.  Interpret-mode Pallas records are skipped (interpret-mode
 latency is not a tracked quantity).  Absolute per-query/per-step times are
@@ -74,7 +88,7 @@ printed for context but never gate.
 
   python benchmarks/check_regression.py \
       --baseline BENCH_baseline.json --new BENCH_decoder_scaling.json \
-      --sections batched,serving,large_n,seeded
+      --sections batched,serving,large_n,seeded,replay
 """
 from __future__ import annotations
 
@@ -270,6 +284,50 @@ def _obs_floors(new: dict[tuple, dict], *,
     return failed
 
 
+def _replay_records(path: Path) -> dict[tuple, dict]:
+    data = json.loads(path.read_text())
+    out = {}
+    for rec in data.get("replay", []):
+        out[(rec["N"], rec["n_queries"], rec["n_patterns"],
+             rec["budget"])] = rec
+    return out
+
+
+def _replay_floors(new: dict[tuple, dict], *, floor_n: int = 8192,
+                   floor_speedup: float = 2.0,
+                   min_hit_rate: float = 0.8) -> bool:
+    """Absolute gates on the FRESH replay records (baseline-independent):
+    cache-hit replay ≥2× faster than flooding sparse at N=8192, realized
+    schedule-cache hit rate ≥0.8 on the recurring stream, and the
+    bit-identical trajectory tripwire.  Returns True iff any floor
+    failed."""
+    failed = False
+    floor_recs = [r for (n, *_), r in sorted(new.items()) if n == floor_n]
+    if not floor_recs:
+        print(f"check_regression [replay]: no N={floor_n} record to hold "
+              "to the speedup floor")
+        return True
+    for rec in floor_recs:
+        sp = rec["cache_hit_speedup_vs_sparse"]
+        ok = sp >= floor_speedup
+        print(f"  (N={floor_n}, Q={rec['n_queries']}): "
+              f"cache_hit_speedup_vs_sparse {sp:.2f}x (floor "
+              f"{floor_speedup:.1f}x)  {'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+        hr = rec["schedule_cache_hit_rate"]
+        ok = hr >= min_hit_rate
+        print(f"  (N={floor_n}, Q={rec['n_queries']}): "
+              f"schedule_cache_hit_rate {hr:.3f} (floor {min_hit_rate:.2f})"
+              f"  {'OK' if ok else 'FLOOR FAILED'}")
+        failed |= not ok
+        ok = bool(rec.get("bit_identical"))
+        print(f"  (N={floor_n}, Q={rec['n_queries']}): bit_identical "
+              f"{rec.get('bit_identical')}  "
+              f"{'OK' if ok else 'PARITY FAILED'}")
+        failed |= not ok
+    return failed
+
+
 def _gate(name: str, metric: str, base: dict, new: dict, tol: float,
           context_key: str = "per_query_us") -> bool | None:
     """Compare shared records on ``metric``.
@@ -302,92 +360,145 @@ def _gate(name: str, metric: str, base: dict, new: dict, tol: float,
     return failed
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True, type=Path)
-    ap.add_argument("--new", required=True, type=Path)
-    ap.add_argument("--tol", type=float, default=0.25,
-                    help="allowed relative drop in the gated same-run "
-                         "speedup ratios (default 25%%)")
-    ap.add_argument("--sections",
-                    default="batched,serving,distributed,large_n,seeded,"
-                            "seeded_gather,pipeline,obs",
-                    help="comma-separated gates to run "
-                         "(batched|serving|distributed|large_n|seeded|"
-                         "seeded_gather|pipeline|obs)")
-    args = ap.parse_args(argv)
-    sections = [s for s in args.sections.split(",") if s]
-    unknown = set(sections) - {"batched", "serving", "distributed", "large_n",
-                               "seeded", "seeded_gather", "pipeline", "obs"}
-    if unknown:
-        print(f"check_regression: unknown sections {sorted(unknown)}")
-        return 1
-
-    results = []
-    if "batched" in sections:
-        results.append(
-            _gate("batched", "speedup_vs_sequential",
+def _run_batched(args) -> list:
+    return [_gate("batched", "speedup_vs_sequential",
                   _batched_records(args.baseline),
-                  _batched_records(args.new), args.tol))
-    if "serving" in sections:
-        results.append(
-            _gate("serving", "speedup_vs_lockstep",
+                  _batched_records(args.new), args.tol)]
+
+
+def _run_serving(args) -> list:
+    return [_gate("serving", "speedup_vs_lockstep",
                   _serving_records(args.baseline),
-                  _serving_records(args.new), args.tol))
-    if "large_n" in sections:
-        results.append(
-            _gate("large_n", "speedup_vs_dense",
+                  _serving_records(args.new), args.tol)]
+
+
+def _run_large_n(args) -> list:
+    return [_gate("large_n", "speedup_vs_dense",
                   _large_n_records(args.baseline),
                   _large_n_records(args.new), args.tol,
-                  context_key="per_round_us"))
-    if "seeded" in sections:
-        new_seeded = _seeded_records(args.new)
-        results.append(
-            _gate("seeded", "traffic_ratio_vs_tiled",
+                  context_key="per_round_us")]
+
+
+def _run_seeded(args) -> list:
+    new_seeded = _seeded_records(args.new)
+    return [_gate("seeded", "traffic_ratio_vs_tiled",
                   _seeded_records(args.baseline), new_seeded, args.tol,
-                  context_key="modeled_seeded_bytes"))
-        results.append(_seeded_floors(new_seeded))
-    if "seeded_gather" in sections:
-        new_sg = _seeded_gather_records(args.new)
-        results.append(
-            _gate("seeded_gather", "flops_ratio_vs_dense_tile",
+                  context_key="modeled_seeded_bytes"),
+            _seeded_floors(new_seeded)]
+
+
+def _run_seeded_gather(args) -> list:
+    new_sg = _seeded_gather_records(args.new)
+    return [_gate("seeded_gather", "flops_ratio_vs_dense_tile",
                   _seeded_gather_records(args.baseline), new_sg, args.tol,
-                  context_key="modeled_gather_flops_per_round"))
-        results.append(_seeded_gather_floors(new_sg))
-    if "distributed" in sections:
-        results.append(
-            _gate("dist-overhead", "single_vs_distributed",
+                  context_key="modeled_gather_flops_per_round"),
+            _seeded_gather_floors(new_sg)]
+
+
+def _run_replay(args) -> list:
+    new_replay = _replay_records(args.new)
+    return [_gate("replay", "cache_hit_speedup_vs_sparse",
+                  _replay_records(args.baseline), new_replay, args.tol,
+                  context_key="per_query_us_replay"),
+            _gate("replay-work", "modeled_work_ratio",
+                  _replay_records(args.baseline), new_replay, args.tol,
+                  context_key="modeled_replay_edge_ops"),
+            _replay_floors(new_replay)]
+
+
+def _run_distributed(args) -> list:
+    # round savings must not be bought by giving up on recovery: the
+    # fixed/telemetry mean-unresolved ratio is gated alongside the savings
+    return [_gate("dist-overhead", "single_vs_distributed",
                   _distributed_records(args.baseline, "distributed-overhead"),
                   _distributed_records(args.new, "distributed-overhead"),
-                  args.tol, context_key="per_step_us"))
-        results.append(
+                  args.tol, context_key="per_step_us"),
             _gate("dist-telemetry", "round_savings",
                   _distributed_records(args.baseline, "telemetry"),
                   _distributed_records(args.new, "telemetry"), args.tol,
-                  context_key="telemetry_mean_rounds"))
-        # round savings must not be bought by giving up on recovery:
-        # fixed/telemetry mean-unresolved is gated the same way
-        results.append(
+                  context_key="telemetry_mean_rounds"),
             _gate("dist-quality", "quality_preservation",
                   _distributed_records(args.baseline, "telemetry"),
                   _distributed_records(args.new, "telemetry"), args.tol,
-                  context_key="telemetry_mean_unresolved"))
-    if "pipeline" in sections:
-        new_pipe = _distributed_records(args.new, "pipeline")
-        results.append(
-            _gate("pipeline-sim", "sim_steps_per_sec_ratio",
+                  context_key="telemetry_mean_unresolved")]
+
+
+def _run_pipeline(args) -> list:
+    new_pipe = _distributed_records(args.new, "pipeline")
+    return [_gate("pipeline-sim", "sim_steps_per_sec_ratio",
                   _distributed_records(args.baseline, "pipeline"),
-                  new_pipe, args.tol, context_key="pipeline_per_step_us"))
-        results.append(
+                  new_pipe, args.tol, context_key="pipeline_per_step_us"),
             _gate("pipeline-host", "host_steps_per_sec_ratio",
                   _distributed_records(args.baseline, "pipeline"),
-                  new_pipe, args.tol, context_key="sync_per_step_us"))
-        results.append(_pipeline_floors(new_pipe))
-    if "obs" in sections:
-        # baseline-independent floors only: the obs record is fresh-run
-        # self-contained (sim ratio, bit-identity, non-vacuousness)
-        results.append(
-            _obs_floors(_distributed_records(args.new, "obs-overhead")))
+                  new_pipe, args.tol, context_key="sync_per_step_us"),
+            _pipeline_floors(new_pipe)]
+
+
+def _run_obs(args) -> list:
+    # baseline-independent floors only: the obs record is fresh-run
+    # self-contained (sim ratio, bit-identity, non-vacuousness)
+    return [_obs_floors(_distributed_records(args.new, "obs-overhead"))]
+
+
+# Gate registry: section name -> (one-line description, runner).  The
+# runner returns a list of per-gate outcomes (True = regressed, None = no
+# overlapping records).  ``--sections`` defaults, the unknown-name check,
+# and ``--list-sections`` all derive from this dict — adding a section
+# here is the whole registration.
+SECTIONS: dict[str, tuple[str, object]] = {
+    "batched": ("batched-decode speedup vs B sequential single-pattern "
+                "decodes", _run_batched),
+    "serving": ("continuous-admission serving speedup vs lockstep waves",
+                _run_serving),
+    "distributed": ("distributed step overhead, telemetry round savings, "
+                    "and recovery-quality preservation", _run_distributed),
+    "large_n": ("scalable-decode speedup vs dense past the VMEM regime",
+                _run_large_n),
+    "seeded": ("seeded-kernel modeled HBM traffic vs tiled (≥10x floor at "
+               "N=16384)", _run_seeded),
+    "seeded_gather": ("gather-round modeled FLOPs vs dense tile (≥8x floor "
+                      "at N=16384)", _run_seeded_gather),
+    "replay": ("cache-hit schedule replay vs flooding sparse (≥2x floor at "
+               "N=8192, hit-rate ≥0.8, bit-identical)", _run_replay),
+    "pipeline": ("pipelined runtime speedup and quality floors vs the sync "
+                 "driver", _run_pipeline),
+    "obs": ("observability overhead, bit-identity, and non-vacuousness "
+            "floors", _run_obs),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=Path)
+    ap.add_argument("--new", type=Path)
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed relative drop in the gated same-run "
+                         "speedup ratios (default 25%%)")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help="comma-separated gates to run "
+                         f"({'|'.join(SECTIONS)})")
+    ap.add_argument("--list-sections", action="store_true",
+                    help="print the gate registry (name + description) "
+                         "and exit")
+    args = ap.parse_args(argv)
+    if args.list_sections:
+        for name, (desc, _) in SECTIONS.items():
+            print(f"{name:14s} {desc}")
+        return 0
+    if args.baseline is None or args.new is None:
+        ap.error("--baseline and --new are required "
+                 "(unless --list-sections)")
+    sections = [s for s in args.sections.split(",") if s]
+    unknown = set(sections) - set(SECTIONS)
+    if unknown:
+        print(f"check_regression: unknown sections {sorted(unknown)} "
+              f"(known: {','.join(SECTIONS)})")
+        return 1
+
+    results = []
+    for name, (_, runner) in SECTIONS.items():
+        if name in sections:
+            results.extend(runner(args))
     if any(r is None for r in results):
         print("check_regression: FAILED (a gated section had no "
               "overlapping records — regenerate the committed baseline?)")

@@ -64,6 +64,20 @@ Sections:
      never-erased values bit-equal (resolved VALUES agree only up to f32
      summation order — the two rounds sum in different shapes).
 
+  9. REPLAY sweep (schema v10): pattern-compiled peeling on a RECURRING
+     straggler stream at N = 8192 — the ``backend="replay"`` +
+     :class:`repro.core.schedule_cache.ScheduleCache` serving loop vs the
+     flooding sparse adaptive decode, per query.  Records the MODELED work
+     ratio (flooding touches every check row's r_max edges every round;
+     replay touches only the schedule's resolving rows once), the TIMED
+     same-run ``cache_hit_speedup_vs_sparse`` over the warm-cache stream,
+     the realized ``schedule_cache_hit_rate`` of a cold cache over the
+     same stream (read back from the obs ``sched_cache.hit_rate`` gauge),
+     and a bit-identity tripwire: every pattern's replay must reproduce
+     the flooding decode's values and erasure trajectory exactly.
+     ``check_regression.py --sections replay`` gates the speedup (hard
+     ≥2× floor), the hit rate (≥0.8), and the tripwire.
+
 Forcing ``--backend pallas`` (CLI) past the VMEM limit no longer crashes:
 ``benchmarks.common.resolve_bench_backend`` fails over with a clear message
 (to "pallas_tiled" on TPU, "sparse" off-TPU), and the quick CI run
@@ -655,6 +669,133 @@ def run_seeded_gather_sweep(*, Ns=(2048, 4096, 8192, 16384, 32768), D=8,
     return rows, records
 
 
+def run_replay_sweep(*, N=8192, n_patterns=8, n_queries=64, q=0.25,
+                     budget=32, reps=3, seed=0):
+    """Pattern-compiled replay vs flooding sparse on a recurring stream.
+
+    ``n_queries`` coded queries cycle through ``n_patterns`` distinct
+    erasure patterns (straggler patterns are sticky in practice — that is
+    the schedule cache's premise), so a cold :class:`ScheduleCache` over
+    the stream realizes a hit rate of ``1 - n_patterns / n_queries``
+    (0.875 at the defaults).  Three quantities per config:
+
+    * modeled work — flooding runs every check row's ``r_max`` edges every
+      round until fixpoint (+1 probe round); replay runs each resolving
+      row's edges exactly once.  ``modeled_work_ratio`` is their quotient.
+    * timed — per-query decode over the whole stream, flooding sparse
+      adaptive vs warm-cache schedule replay (both jitted, same queries,
+      same machine): ``cache_hit_speedup_vs_sparse`` is the same-run ratio
+      ``check_regression.py --sections replay`` gates (hard ≥2× floor at
+      N=8192).
+    * tripwire — per pattern, the replay's values AND erasure trajectory
+      must be bit-identical to the flooding sparse decode's (the "hi"
+      tie-break rule exists for exactly this).
+
+    The hit rate is read back from the obs ``sched_cache.hit_rate`` gauge
+    (a scoped registry around the cold pass), so the gate also covers the
+    cache's instrumentation path.  Returns (table_rows, json_records).
+    """
+    from repro.core import compile_peel_schedule
+    from repro.core.schedule_cache import ScheduleCache
+    from repro.obs import metrics as obs_metrics
+
+    code = make_parity_only_ldpc(N // 2, l=3, r=6, seed=seed)
+    assert code.N == N, (code.N, N)
+    p = code.p
+    r_max = code.check_idx.shape[1]
+    rng = np.random.default_rng(seed)
+    pats = rng.random((n_patterns, N)) < q                   # (P, N)
+    # Any payload traces the same schedule (parity-only code: the decode
+    # trajectory depends only on H and the mask, same as the large-N sweep).
+    vals = rng.standard_normal((n_queries, N)).astype(np.float32)
+    erased_np = pats[np.arange(n_queries) % n_patterns]      # (Q, N)
+    rx_np = np.where(erased_np, 0.0, vals)
+    rx = jnp.asarray(rx_np)
+    er = jnp.asarray(erased_np)
+
+    # modeled work: edge-ops per decode, averaged over the pattern set
+    scheds = [compile_peel_schedule(code, pats[i]) for i in range(n_patterns)]
+    flood_edges = float(np.mean(
+        [(s.n_rounds + (0 if s.fully_resolved else 1)) * p * r_max
+         for s in scheds]))
+    replay_edges = float(np.mean(
+        [max(s.n_resolved, 1) * r_max for s in scheds]))
+
+    # bit-identity tripwire: replay ("hi" rule) vs single-pattern sparse
+    sparse_fn = jax.jit(lambda v, e: tuple(peel_decode_adaptive(
+        code, v, e, budget, backend="sparse")[:3]))
+    for i in range(n_patterns):
+        sv, se, sd = (np.asarray(x) for x in sparse_fn(rx[i], er[i]))
+        dec = peel_decode_adaptive(code, rx[i], er[i], budget,
+                                   backend="replay", schedule=scheds[i])
+        if (np.asarray(dec.values) != sv).any() \
+                or (np.asarray(dec.erased) != se).any() \
+                or int(dec.rounds_used) != int(sd):
+            raise AssertionError(
+                f"replay N={N} pattern {i}: replay diverged from the "
+                "flooding sparse decode (values, erasure trajectory, or "
+                "round count)")
+
+    # realized hit rate: a COLD cache over the stream, read back from the
+    # obs gauge the cache maintains
+    with obs_metrics.recording() as reg:
+        cache = ScheduleCache()
+        for i in range(n_queries):
+            cache.get(code, erased_np[i])
+        hit_rate = reg.gauge("sched_cache.hit_rate").value
+
+    # timed: per-query decode over the whole stream (the cache is warm now
+    # — every lookup hits, which is the steady state the gate is about)
+    def serve_sparse():
+        for i in range(n_queries):
+            sparse_fn(rx[i], er[i])[0].block_until_ready()
+
+    def serve_replay():
+        for i in range(n_queries):
+            s = cache.get(code, erased_np[i])
+            peel_decode_adaptive(code, rx[i], er[i], budget,
+                                 backend="replay", schedule=s
+                                 ).values.block_until_ready()
+
+    results = {}
+    for mode, serve in (("sparse", serve_sparse), ("replay", serve_replay)):
+        serve()  # compile + warm (one executable per distinct segment shape)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            serve()
+            ts.append(time.perf_counter() - t0)
+        results[mode] = float(np.median(ts))
+
+    speedup = results["sparse"] / results["replay"]
+    rec = {
+        "N": N, "K": N // 2, "p": p, "r_max": r_max,
+        "n_patterns": n_patterns, "n_queries": n_queries,
+        "budget": budget, "erasure_q": q,
+        "mean_flood_rounds": float(np.mean(
+            [s.n_rounds + (0 if s.fully_resolved else 1) for s in scheds])),
+        "mean_resolved": float(np.mean([s.n_resolved for s in scheds])),
+        "modeled_flooding_edge_ops": flood_edges,
+        "modeled_replay_edge_ops": replay_edges,
+        "modeled_work_ratio": flood_edges / replay_edges,
+        "median_s_sparse": results["sparse"],
+        "median_s_replay": results["replay"],
+        "per_query_us_sparse": results["sparse"] / n_queries * 1e6,
+        "per_query_us_replay": results["replay"] / n_queries * 1e6,
+        "cache_hit_speedup_vs_sparse": speedup,
+        "schedule_cache_hit_rate": float(hit_rate),
+        "cache_stats": cache.stats(),
+        "bit_identical": True,      # the tripwire above raises otherwise
+        "jax_backend": jax.default_backend(),
+    }
+    rows = [[N, n_patterns, n_queries,
+             f"{rec['modeled_work_ratio']:.0f}x",
+             f"{rec['per_query_us_sparse']:.0f}",
+             f"{rec['per_query_us_replay']:.0f}",
+             f"{speedup:.2f}x", f"{hit_rate:.3f}"]]
+    return rows, [rec]
+
+
 def run(*, Ks=(64, 256, 1024), ss=(2, 8, 24), reps=10):
     rows = []
     for K in Ks:
@@ -782,6 +923,16 @@ def _main(quick: bool = False, json_path: str | Path = BENCH_JSON,
                 ["N", "dense_MFLOP", "gather_MFLOP", "flops_ratio",
                  "wallclock_ratio", ""], sgrows)
 
+    # 9. replay sweep — pattern-compiled peeling on a recurring stream.
+    # Config is FIXED in quick mode (reps trimmed only): the gate needs a
+    # matching (N, n_queries, n_patterns, budget) record, and the hard
+    # speedup floor is a same-run ratio either way.
+    rrows, replay_records = run_replay_sweep(reps=2 if quick else 3)
+    print_table("Replay sweep — cache-hit schedule replay vs flooding "
+                "sparse, recurring straggler stream",
+                ["N", "P", "Q", "work_ratio", "sparse_us", "replay_us",
+                 "speedup", "hit_rate"], rrows)
+
     # 3+5. adaptivity & vs-lstsq
     rows = run(Ks=(64, 256) if quick else (64, 256, 1024))
     print_table("Decoder scaling — adaptive peeling vs least-squares recovery",
@@ -807,7 +958,12 @@ def _main(quick: bool = False, json_path: str | Path = BENCH_JSON,
         # rounds: modeled per-round FLOPs ratio vs the dense regenerated
         # tile — the hwcaps crossover model — gated ≥8× at N=16384, plus a
         # timed interpret record with a trajectory tripwire).
-        "schema_version": 8,
+        # v10: adds the "replay" section (pattern-compiled peeling: modeled
+        # flooding/replay work ratio, the timed cache-hit replay speedup on
+        # a recurring straggler stream — gated ≥2× at N=8192 — the realized
+        # schedule-cache hit rate via the obs gauge, and the bit-identity
+        # tripwire).
+        "schema_version": 10,
         "jax_backend": jax.default_backend(),
         "fused_decode_single_kernel_launch": True,  # see ldpc_peel/ops.py
         "backend_scaling": records,
@@ -816,6 +972,7 @@ def _main(quick: bool = False, json_path: str | Path = BENCH_JSON,
         "large_n": large_records,
         "seeded": seeded_records,
         "seeded_gather": seeded_gather_records,
+        "replay": replay_records,
         "adaptive_vs_lstsq": [
             dict(zip(["N", "K", "s", "rounds", "unresolved",
                       "ldpc_us", "lstsq_us", "speedup"], r)) for r in rows

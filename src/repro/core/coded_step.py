@@ -77,6 +77,13 @@ class Scheme2:
     # chain) — and to the ``worker_encode="seeded-fused"`` distributed
     # runtime, which runs the same kernel per shard.
     encode_fused: bool = False
+    # ``decode_backend="replay"`` only: the cross-step LRU of compiled
+    # peeling schedules (:class:`repro.core.schedule_cache.ScheduleCache`),
+    # threaded into every engine the scheme constructs so recurring
+    # straggler patterns pay the symbolic solve once.  ``None`` with the
+    # replay backend means concrete-mask decodes solve per call (still
+    # bit-correct, just uncached); other backends ignore it.
+    schedule_cache: object | None = None
 
     @classmethod
     def build(cls, code: LDPCCode, moments: Moments, *, lr: float, **kw) -> "Scheme2":
@@ -110,7 +117,8 @@ class Scheme2:
     def engine(self) -> CodedComputeEngine:
         return CodedComputeEngine(self.code, decode_iters=self.decode_iters,
                                   backend=self.decode_backend,
-                                  adaptive=self.adaptive)
+                                  adaptive=self.adaptive,
+                                  schedule_cache=self.schedule_cache)
 
     def worker_mask_to_erasure(self, mask: jax.Array) -> jax.Array:
         return mask  # N == w: row j <-> worker j

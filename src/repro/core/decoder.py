@@ -88,6 +88,25 @@ backend    what runs
              ``mxu_advantage ×`` the gather round's (advantage 1.0 on
              CPU/interpret — gather always wins; 8.0 placeholder on TPU
              until ROADMAP item 5's profiling replaces it).
+"replay"   straight-line numeric REPLAY of a pattern-compiled
+           :class:`PeelSchedule` — no round loop, no convergence test, no
+           solvability counting: the elimination order is a pure function
+           of ``(code, erasure pattern)``, so :func:`compile_peel_schedule`
+           solves it ONCE symbolically (host-side numpy) and the replay
+           executors run only the resolving checks' gather/FMA arithmetic,
+           O(resolved edges) total.  Pass the schedule explicitly
+           (``schedule=`` / per-slot ``schedules=``, e.g. from a
+           :class:`repro.core.schedule_cache.ScheduleCache` hit — required
+           under jit, where the mask is a tracer) or let a concrete mask
+           solve on the fly.  Values are BIT-IDENTICAL to the flooding
+           backends: single-pattern replay applies the "hi" duplicate-check
+           tie-break (matching dense/sparse last-write-wins scatters),
+           batched replay the "lo" rule (matching the batch-major scan and
+           the Pallas kernels); adaptive round counts reproduce the
+           while_loop's stopping rule, probe round included.  On TPU the
+           batched replay can also run as ONE fused ``pallas_call``
+           (:func:`repro.kernels.ldpc_peel.peel_decode_replay_pallas`).
+           Requires an :class:`LDPCCode`.
 "auto"     "dense" for raw tuples and small codes (N < 256); "sparse" for
            large codes off-TPU; on TPU, "pallas_seeded" whenever the code
            carries a regenerable seed, else "pallas" when
@@ -151,6 +170,9 @@ from repro.obs import metrics as _obs_metrics
 
 __all__ = [
     "DecodeResult",
+    "PeelSchedule",
+    "compile_peel_schedule",
+    "erasure_mask_key",
     "peel_round",
     "peel_round_sparse",
     "peel_round_sparse_batch",
@@ -168,7 +190,7 @@ __all__ = [
 ]
 
 BACKENDS = ("auto", "dense", "sparse", "pallas", "pallas_tiled",
-            "pallas_seeded")
+            "pallas_seeded", "replay")
 # Sub-dispatch of "pallas_seeded": how each flooding round is computed.
 SEEDED_MODES = ("auto", "dense_tile", "gather")
 
@@ -296,7 +318,7 @@ def resolve_backend(backend: str, code, *, adaptive: bool = False,
             f"backend={backend!r} needs a materialized H, but a SeededLDPC "
             "is structure-only; use backend='pallas_seeded'/'auto' or build "
             "the code with make_seeded_ldpc")
-    if backend in ("sparse", "pallas", "pallas_tiled") and not is_code:
+    if backend in ("sparse", "pallas", "pallas_tiled", "replay") and not is_code:
         raise ValueError(
             f"backend={backend!r} needs an LDPCCode (neighbor table); "
             "raw (H, Hb) tuples only support backend='dense'"
@@ -359,6 +381,42 @@ def peel_fixed_dense(H, Hb, values, erased, iters: int):
 # -------------------------------------------------------------- sparse round
 
 
+def _edge_sum(nv: jax.Array, w: jax.Array) -> jax.Array:
+    """Known-neighbor contribution sum over the r_max slot axis (axis 1).
+
+    ``nv (rows, r_max, ...)`` gathered neighbor values, ``w (rows, r_max)``
+    pre-masked edge weights (0 on erased/padding slots).  Evaluated as the
+    canonical left-to-right multiply-add chain with the ADDS inside a
+    ``lax.scan`` and the products outside it.  Two codegen hazards make a
+    plain reduce/unrolled chain produce different last-ulp bits for the
+    SAME row depending on how many rows the operands carry: XLA re-blocks
+    reductions by shape, and LLVM contracts mul+add pairs into FMAs
+    shape-dependently inside fused loops (``optimization_barrier`` is
+    removed by the CPU pipeline before fusion, so it cannot pin either).
+    Fusion never crosses a while-loop boundary, so the scan body holds
+    only adds/subs/compares with no multiply to contract, and the
+    products are lone muls — every output element is the same fixed IEEE
+    op sequence at ANY row count.  This shape-stability is what lets
+    ``backend="replay"`` recompute only the resolving checks' rows
+    bit-identically to the full flooding rounds.  The body runs Neumaier
+    compensated summation, so the sum is also ~1 ulp from exact — tighter
+    than the reduce it replaces, keeping the cross-backend (dense/pallas)
+    agreement tolerances comfortable.
+    """
+    wx = w.reshape(w.shape + (1,) * (nv.ndim - w.ndim))
+    pt = jnp.moveaxis(nv * wx, 1, 0)                # (r_max, rows, ...)
+
+    def body(carry, x):
+        s, c = carry
+        t = s + x
+        big = jnp.abs(s) >= jnp.abs(x)
+        c = c + jnp.where(big, (s - t) + x, (x - t) + s)
+        return (t, c), None
+
+    (s, c), _ = jax.lax.scan(body, (pt[0], jnp.zeros_like(pt[0])), pt[1:])
+    return s + c
+
+
 def peel_round_sparse(
     check_idx: jax.Array,
     check_coeff: jax.Array,
@@ -383,7 +441,7 @@ def peel_round_sparse(
     cnt = nef.sum(axis=1)  # (p,)
     nv = v_pad[check_idx]  # (p, r_max, V)
     # Known-neighbour contribution: coeff * value, erased slots zeroed.
-    sums = jnp.einsum("prv,pr->pv", nv, check_coeff.astype(dt) * (1.0 - nef))
+    sums = _edge_sum(nv, check_coeff.astype(dt) * (1.0 - nef))
     # First erased neighbour slot (ascending column order == dense argmax).
     slot = jnp.argmax(ne, axis=1)  # (p,)
     pos = jnp.take_along_axis(check_idx, slot[:, None], axis=1)[:, 0]
@@ -410,6 +468,316 @@ def peel_fixed_sparse(check_idx, check_coeff, values, erased, iters: int):
 
     values, erased = jax.lax.fori_loop(0, iters, body, (values, erased))
     return values, erased
+
+
+# ------------------------------------------------- pattern-compiled replay
+
+
+class PeelSchedule:
+    """Pre-solved peeling elimination order for ONE ``(code, erasure)`` pair.
+
+    The flooding trajectory — which check resolves which variable in which
+    round — is a pure function of the code structure and the erasure mask,
+    never of the payload values.  :func:`compile_peel_schedule` runs that
+    trajectory ONCE symbolically (host-side numpy, to fixpoint) and records,
+    per resolved variable: its flooding round (``offsets`` delimits the
+    per-round segments, so replay parallelizes within a round), its gathered
+    neighbor columns, and the pre-masked edge weights — under BOTH duplicate
+    -check tie-break rules, since the existing backends differ:
+
+    * ``idx_hi``/``w_hi``/``coeff_hi`` — HIGHEST check row wins, matching
+      the single-pattern dense/sparse rounds (``.at[pos].set`` duplicate
+      scatters are last-write-wins, and check rows scatter in ascending
+      order);
+    * ``idx_lo``/``w_lo``/``coeff_lo`` — LOWEST check row wins, matching
+      the batch-major round's first-match candidate scan and the Pallas
+      kernels' ``min``-row merges.
+
+    Duplicate winners write consistent values (parity checks of one
+    codeword), so the choice only pins f32 rounding — keeping both rules
+    lets replay reproduce each backend family bit-for-bit.
+
+    Because flooding is monotone (a round that resolves nothing ends the
+    decode), the resolving rounds form a prefix: replay under a smaller
+    round budget is simply a prefix slice of the same schedule.
+
+    Instances hash/compare by IDENTITY (the arrays are frozen after
+    construction).  The replay executors receive the schedule's numeric
+    arrays as RUNTIME operands (:func:`_sched_ops`), so jit specializes on
+    the per-round segment SHAPES only: patterns that resolve the same
+    number of variables per round share one compiled executable, and XLA
+    cannot constant-fold the replay arithmetic into different roundings
+    than the flooding rounds it must match bit-for-bit.  That protection
+    covers the library's own jitted executors; under a USER'S outer
+    ``jax.jit`` the closed-over schedule arrays are necessarily trace
+    constants, so the reciprocal fold may cost the last ulp on resolved
+    values there (the erasure trajectory is exact regardless).
+    """
+
+    __slots__ = ("N", "r_max", "n_erased", "n_rounds", "n_resolved",
+                 "fully_resolved", "offsets", "target",
+                 "idx_lo", "w_lo", "coeff_lo",
+                 "idx_hi", "w_hi", "coeff_hi", "mask_key", "_ops")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PeelSchedule(N={self.N}, n_erased={self.n_erased}, "
+                f"n_resolved={self.n_resolved}, n_rounds={self.n_rounds}, "
+                f"fully_resolved={self.fully_resolved})")
+
+
+def erasure_mask_key(erased) -> bytes:
+    """Canonical packed-bitmask key of a concrete erasure mask — the
+    schedule-cache key and the schedule/mask consistency fingerprint."""
+    e = np.asarray(erased, bool)
+    return np.packbits(e).tobytes()
+
+
+def compile_peel_schedule(code: LDPCCode, erased) -> PeelSchedule:
+    """Symbolically solve the peeling decode for ``(code, erased)``.
+
+    Runs the flooding schedule on the erasure mask alone (host-side numpy,
+    no payload arithmetic) until fixpoint and returns the
+    :class:`PeelSchedule` that :func:`peel_decode` et al. replay under
+    ``backend="replay"``.  Work is O(rounds · edges) once per pattern;
+    every replay of the result is O(resolved edges).
+    """
+    if not isinstance(code, LDPCCode):
+        raise ValueError(
+            "compile_peel_schedule needs an LDPCCode (neighbor table); got "
+            f"{type(code).__name__!r}")
+    if isinstance(erased, jax.core.Tracer):
+        raise ValueError(
+            "compile_peel_schedule needs a CONCRETE erasure mask — the "
+            "schedule is solved host-side from the pattern. Under jit, "
+            "solve outside (e.g. via repro.core.schedule_cache) and pass "
+            "the schedule in as a static argument.")
+    idx = np.asarray(code.check_idx)          # (p, r_max), sentinel N
+    coeff = np.asarray(code.check_coeff)      # (p, r_max), 0-padded
+    N = int(code.N)
+    e0 = np.asarray(erased, bool)
+    if e0.shape != (N,):
+        raise ValueError(f"erased must be ({N},); got {e0.shape}")
+    e = np.zeros(N + 1, bool)
+    e[:N] = e0
+
+    offsets = [0]
+    tgt_parts: list[np.ndarray] = []
+    lo_parts: list[np.ndarray] = []
+    hi_parts: list[np.ndarray] = []
+    while True:
+        ne = e[idx]                           # (p, r_max)
+        rows = np.flatnonzero(ne.sum(axis=1) == 1)
+        if rows.size == 0:
+            break
+        slot = ne[rows].argmax(axis=1)
+        tgts = idx[rows, slot]
+        # Per duplicate-resolved variable: lowest and highest check row
+        # (``rows`` ascends, so first/last occurrence = lowest/highest).
+        uniq, first = np.unique(tgts, return_index=True)
+        _, first_rev = np.unique(tgts[::-1], return_index=True)
+        last = tgts.size - 1 - first_rev
+        tgt_parts.append(uniq.astype(np.int32))
+        lo_parts.append(rows[first].astype(np.int32))
+        hi_parts.append(rows[last].astype(np.int32))
+        offsets.append(offsets[-1] + uniq.size)
+        e[uniq] = False
+
+    def _cat(parts):
+        return (np.concatenate(parts) if parts
+                else np.zeros((0,), np.int32))
+
+    target = _cat(tgt_parts)
+    n = int(target.size)
+    sched = PeelSchedule.__new__(PeelSchedule)
+    sched.N = N
+    sched.r_max = int(idx.shape[1])
+    sched.n_erased = int(e0.sum())
+    sched.n_rounds = len(offsets) - 1
+    sched.n_resolved = n
+    sched.fully_resolved = not e[:N].any()
+    sched.offsets = np.asarray(offsets, np.int32)
+    sched.target = target
+    for rule, rows_all in (("lo", _cat(lo_parts)), ("hi", _cat(hi_parts))):
+        nidx = idx[rows_all]                  # (n, r_max)
+        ncoeff = coeff[rows_all]
+        tslot = (nidx == target[:, None]).argmax(axis=1)
+        # Known-neighbor weights exactly as the runtime rounds compute them
+        # (coeff * (1 - erased)): the target slot is the ONLY erased
+        # neighbor of a firing check, so the multiply — not an overwrite —
+        # preserves signed zeros bit-for-bit.
+        known_f = np.ones_like(ncoeff)
+        known_f[np.arange(n), tslot] = 0.0
+        setattr(sched, f"idx_{rule}", nidx.astype(np.int32))
+        setattr(sched, f"w_{rule}", ncoeff * known_f)
+        setattr(sched, f"coeff_{rule}", ncoeff[np.arange(n), tslot])
+    sched.mask_key = erasure_mask_key(e0)
+    sched._ops = {}
+    return sched
+
+
+def _check_schedule(sched: PeelSchedule, code, erased) -> None:
+    if not isinstance(sched, PeelSchedule):
+        raise ValueError(f"schedule must be a PeelSchedule; got "
+                         f"{type(sched).__name__!r}")
+    N = code.N if isinstance(code, (LDPCCode, SeededLDPC)) else None
+    if N is not None and sched.N != N:
+        raise ValueError(f"schedule was solved for N={sched.N}, code has "
+                         f"N={N}")
+    # With a concrete mask the fingerprint check is cheap; under jit the
+    # mask is a tracer and the caller (cache / driver) owns consistency.
+    if not isinstance(erased, jax.core.Tracer):
+        if sched.mask_key != erasure_mask_key(erased):
+            raise ValueError(
+                "schedule does not match the erasure mask being decoded "
+                "(stale cache entry or wrong pattern)")
+
+
+def _replay_rounds_used(sched: PeelSchedule, budget: int | jax.Array):
+    """Round count matching the adaptive while_loop's stopping rule
+    ``(d < budget) & progressed & e.any()``, from the schedule alone:
+    0 if nothing was erased, else min(budget, R) when the pattern fully
+    resolves in R rounds, else min(budget, R+1) — one probe round past the
+    fixpoint observes no progress.  ``budget`` may be traced."""
+    if sched.n_erased == 0:
+        return jnp.int32(0)
+    probe = sched.n_rounds + (0 if sched.fully_resolved else 1)
+    b = jnp.asarray(budget, jnp.int32)
+    return jnp.maximum(0, jnp.minimum(b, probe)).astype(jnp.int32)
+
+
+def _sched_ops(sched: PeelSchedule, rule: str) -> tuple:
+    """Per-round replay operands ``(nidx, w, coeff, target)`` as device
+    arrays, built lazily once per (schedule, tie-break rule) and cached on
+    the schedule.
+
+    The executors take these as RUNTIME operands, never as jit constants:
+    baked-in constants invite precision-changing folds (XLA rewrites
+    divide-by-constant into multiply-by-reciprocal, breaking bit-parity
+    with the flooding rounds' runtime divide), and operand-passing means
+    jit specializes on segment shapes only, so recurring straggler
+    patterns of the same size share one compiled executable.
+    """
+    ops = sched._ops.get(rule)
+    if ops is None:
+        off = sched.offsets
+        idx = getattr(sched, f"idx_{rule}")
+        w = getattr(sched, f"w_{rule}")
+        cf = getattr(sched, f"coeff_{rule}")
+        # ensure_compile_time_eval keeps these CONCRETE even when the
+        # first use is under a caller's jit trace — otherwise jnp.asarray
+        # lifts the host arrays to that trace's tracers and caching them
+        # on the schedule would poison every later eager replay
+        with jax.ensure_compile_time_eval():
+            ops = tuple(
+                (jnp.asarray(idx[s0:s1]), jnp.asarray(w[s0:s1]),
+                 jnp.asarray(cf[s0:s1]), jnp.asarray(sched.target[s0:s1]))
+                for s0, s1 in ((int(off[k]), int(off[k + 1]))
+                               for k in range(sched.n_rounds)))
+        sched._ops[rule] = ops
+    return ops
+
+
+def _replay_round(v, e, nidx, w, cf, tgt):
+    """One replay round's arithmetic on the resolving checks only —
+    exactly the flooding rounds' op sequence (:func:`_edge_sum` chain,
+    then negate / guarded divide) restricted to ``len(tgt)`` rows."""
+    dt = v.dtype
+    v_pad = jnp.concatenate([v, jnp.zeros((1, v.shape[1]), dt)])
+    nv = v_pad[nidx]                                     # (s, r_max, V)
+    sums = _edge_sum(nv, w.astype(dt))
+    cfd = cf.astype(dt)
+    return -sums / jnp.where(cfd == 0.0, 1.0, cfd)[:, None]
+
+
+@jax.jit
+def _replay_fixed_ops(ops: tuple, values, erased):
+    """Replay pre-sliced schedule rounds on one pattern.
+
+    Mirrors :func:`peel_round_sparse`'s arithmetic exactly — the same
+    :func:`_edge_sum` chain over the same r_max slots with the same
+    pre-masked weights, restricted to the resolving checks ("high" winner
+    = the duplicate scatter's last write) — so values are bit-identical
+    to the sparse flooding decode while doing O(resolved edges) work with
+    no while_loop or convergence mask.
+    """
+    v, e = values, erased
+    for nidx, w, cf, tgt in ops:
+        new_val = _replay_round(v, e, nidx, w, cf, tgt)
+        v = v.at[tgt].set(new_val)
+        e = e.at[tgt].set(False)
+    return v, e
+
+
+def _replay_fixed(sched: PeelSchedule, values, erased, rounds: int):
+    return _replay_fixed_ops(_sched_ops(sched, "hi")[:rounds],
+                             values, erased)
+
+
+def _replay_slot_lo(slot_ops: tuple, v, e, budget):
+    """One batch slot's replay mirroring :func:`peel_round_sparse_batch`'s
+    arithmetic (the same :func:`_edge_sum` chain, "low" winner = the
+    candidate scan's lowest-check-row first match).  ``budget`` is a
+    traced per-slot round budget (writes beyond it are masked off — the
+    state they would have read is still the correct prefix state), or
+    None for the fixed-D batch decode."""
+    for k, (nidx, w, cf, tgt) in enumerate(slot_ops):
+        new_val = _replay_round(v, e, nidx, w, cf, tgt)
+        if budget is None:
+            v = v.at[tgt].set(new_val)
+            e = e.at[tgt].set(False)
+        else:
+            apply = k < budget
+            v = v.at[tgt].set(jnp.where(apply, new_val, v[tgt]))
+            e = e.at[tgt].set(jnp.where(apply, False, e[tgt]))
+    return v, e
+
+
+@jax.jit
+def _replay_batch_fixed_ops(ops_by_slot: tuple, values, erased):
+    outs = [_replay_slot_lo(ops, values[b], erased[b], None)
+            for b, ops in enumerate(ops_by_slot)]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
+
+
+def _replay_batch_fixed(scheds: tuple, values, erased, iters: int):
+    ops = tuple(_sched_ops(s, "lo")[:min(iters, s.n_rounds)]
+                for s in scheds)
+    return _replay_batch_fixed_ops(ops, values, erased)
+
+
+@jax.jit
+def _replay_batch_adaptive_ops(ops_by_slot: tuple, values, erased, budgets):
+    outs = [_replay_slot_lo(ops, values[b], erased[b], budgets[b])
+            for b, ops in enumerate(ops_by_slot)]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
+
+
+def _replay_batch_adaptive(scheds: tuple, values, erased, budgets):
+    ops = tuple(_sched_ops(s, "lo") for s in scheds)
+    v, e = _replay_batch_adaptive_ops(ops, values, erased, budgets)
+    d = jnp.stack([_replay_rounds_used(s, budgets[b])
+                   for b, s in enumerate(scheds)])
+    return v, e, d
+
+
+def _replay_schedules(code, erased, schedules, B: int) -> tuple:
+    """Per-slot schedules for the batched replay: validate the given ones
+    or solve from the (necessarily concrete) per-slot masks."""
+    if schedules is not None:
+        scheds = tuple(schedules)
+        if len(scheds) != B:
+            raise ValueError(f"schedules must have length {B}; got "
+                             f"{len(scheds)}")
+        for b, s in enumerate(scheds):
+            _check_schedule(s, code, erased[b])
+        return scheds
+    if isinstance(erased, jax.core.Tracer):
+        raise ValueError(
+            "backend='replay' under jit needs schedules= precompiled from "
+            "the concrete per-slot masks (see repro.core.schedule_cache)")
+    return tuple(compile_peel_schedule(code, erased[b]) for b in range(B))
 
 
 # ----------------------------------------------------------------- dispatch
@@ -460,6 +828,7 @@ def peel_decode(
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
     seeded_mode: str = "dense_tile",
+    schedule: PeelSchedule | None = None,
 ) -> DecodeResult:
     """Run exactly ``iters`` flooding rounds (the paper's fixed-D decode).
 
@@ -471,14 +840,25 @@ def peel_decode(
     ``bv`` are the tiled kernels' check/payload tile knobs (``bp`` defaults
     to :func:`pick_tile_bp`'s budget-sized tile).  ``seeded_mode``
     sub-dispatches the "pallas_seeded" round — "dense_tile" | "gather" |
-    "auto" (hwcaps crossover); ignored by other backends.
+    "auto" (hwcaps crossover); ignored by other backends.  ``schedule``
+    feeds ``backend="replay"`` a pre-solved :class:`PeelSchedule` (e.g. a
+    :mod:`repro.core.schedule_cache` hit); without it the pattern is
+    solved on the fly, which requires a concrete ``erased``.
     """
     backend = resolve_backend(backend, code,
                               vmem_budget_bytes=vmem_budget_bytes)
+    if schedule is not None and backend != "replay":
+        raise ValueError("schedule= is only meaningful with "
+                         "backend='replay'")
     v, squeeze = _expand(jnp.asarray(values))
     e = jnp.asarray(erased, bool)
     iters = int(iters)
-    if backend == "sparse":
+    if backend == "replay":
+        sched = (schedule if schedule is not None
+                 else compile_peel_schedule(code, e))
+        _check_schedule(sched, code, e)
+        v, e = _replay_fixed(sched, v, e, min(iters, sched.n_rounds))
+    elif backend == "sparse":
         idx, coeff = _tables(code)
         v, e = peel_fixed_sparse(idx, coeff, v, e, iters)
     elif backend == "pallas":
@@ -549,7 +929,7 @@ def peel_round_sparse_batch(check_idx, check_coeff, var_idx, vb, eb):
     cnt = ne.sum(axis=1)                            # (p, B) — exact counts
     c3 = check_coeff.astype(dt)[:, :, None]
     known = (1.0 - ne) * c3                         # (p, r_max, B)
-    sums = (nv * known[..., None]).sum(axis=1)      # (p, B, V)
+    sums = _edge_sum(nv, known)                     # (p, B, V)
     posf = (check_idx.astype(dt)[:, :, None] * ne).sum(axis=1)
     coeff = (c3 * ne).sum(axis=1)                   # (p, B)
     solvable = cnt == 1.0
@@ -611,6 +991,7 @@ def peel_decode_batch(
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
     seeded_mode: str = "dense_tile",
+    schedules=None,
 ) -> DecodeResult:
     """Decode ``B`` INDEPENDENT erasure patterns in one launch.
 
@@ -625,7 +1006,10 @@ def peel_decode_batch(
     * "pallas": ``peel_decode_batch_pallas`` — ONE ``pallas_call`` whose
       grid runs over the batch with the H tile resident in VMEM and shared;
     * "pallas_tiled": ``peel_decode_batch_tiled_pallas`` — one launch, H
-      streamed over check tiles per slot (beyond the VMEM cap).
+      streamed over check tiles per slot (beyond the VMEM cap);
+    * "replay": per-slot pre-solved schedules (``schedules=``, one
+      :class:`PeelSchedule` per slot, or solved on the fly from concrete
+      masks) replayed as straight-line gather/FMA work.
 
     This is the serving primitive: many concurrent coded matvec/gradient
     queries, each with its own straggler mask, one decode launch
@@ -633,6 +1017,9 @@ def peel_decode_batch(
     """
     backend = resolve_backend(backend, code,
                               vmem_budget_bytes=vmem_budget_bytes)
+    if schedules is not None and backend != "replay":
+        raise ValueError("schedules= is only meaningful with "
+                         "backend='replay'")
     v = jnp.asarray(values)
     if v.ndim not in (2, 3):
         raise ValueError(f"batched values must be (B, N) or (B, N, V); "
@@ -642,7 +1029,10 @@ def peel_decode_batch(
         v = v[:, :, None]
     e = jnp.asarray(erased, bool)
     iters = int(iters)
-    if backend == "sparse":
+    if backend == "replay":
+        scheds = _replay_schedules(code, e, schedules, v.shape[0])
+        v, e = _replay_batch_fixed(scheds, v, e, iters)
+    elif backend == "sparse":
         idx, coeff = _tables(code)
         v, e = _peel_fixed_sparse_batch(idx, coeff,
                                         jnp.asarray(code.var_idx), v, e,
@@ -722,6 +1112,7 @@ def peel_decode_adaptive(
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
     seeded_mode: str = "dense_tile",
+    schedule: PeelSchedule | None = None,
 ) -> DecodeResult:
     """Decode until fixpoint (no check resolves) or ``max_iters`` rounds.
 
@@ -730,16 +1121,30 @@ def peel_decode_adaptive(
     runs the early-exit loop INSIDE the fused kernel (one launch, in-kernel
     while_loop on the unresolved count) — same trajectory and round count as
     the dense/sparse while_loops; ``"pallas_tiled"`` additionally stops the
-    H streaming at the early exit.
+    H streaming at the early exit.  ``backend="replay"`` already knows the
+    fixpoint from the schedule, so "adaptivity" costs nothing: the replay
+    is sliced to ``min(max_iters, R)`` rounds and the round count is
+    computed from the schedule, matching the while_loop's stopping rule
+    (including the one probe round a non-fully-resolving pattern pays).
     """
     backend = resolve_backend(backend, code, adaptive=True,
                               vmem_budget_bytes=vmem_budget_bytes)
+    if schedule is not None and backend != "replay":
+        raise ValueError("schedule= is only meaningful with "
+                         "backend='replay'")
     if max_iters is None:
         max_iters = int(code.N if isinstance(code, (LDPCCode, SeededLDPC))
                         else code[0].shape[1])
     v, squeeze = _expand(jnp.asarray(values))
     e = jnp.asarray(erased, bool)
-    if backend == "sparse":
+    if backend == "replay":
+        sched = (schedule if schedule is not None
+                 else compile_peel_schedule(code, e))
+        _check_schedule(sched, code, e)
+        v, e = _replay_fixed(sched, v, e,
+                             min(int(max_iters), sched.n_rounds))
+        d = _replay_rounds_used(sched, int(max_iters))
+    elif backend == "sparse":
         idx, coeff = _tables(code)
         v, e, d = _peel_adaptive_sparse(idx, coeff, v, e, int(max_iters))
     elif backend == "pallas":
@@ -864,6 +1269,7 @@ def peel_decode_batch_adaptive(
     bv: int | None = None,
     vmem_budget_bytes: int | None = None,
     seeded_mode: str = "dense_tile",
+    schedules=None,
 ) -> DecodeResult:
     """Decode ``B`` independent patterns with PER-SLOT early exit, one launch.
 
@@ -884,9 +1290,17 @@ def peel_decode_batch_adaptive(
     (default ``N``).  This is the primitive behind continuous-admission
     serving (:mod:`repro.serving.coded_queries`): in-flight slots carry
     their remaining budgets across chunked launches.
+
+    ``backend="replay"`` takes per-slot pre-solved ``schedules=`` (or
+    solves them from concrete masks); budgets stay traced — writes past a
+    slot's budget are masked off and the per-slot round counts come from
+    the schedules.
     """
     backend = resolve_backend(backend, code, adaptive=True,
                               vmem_budget_bytes=vmem_budget_bytes)
+    if schedules is not None and backend != "replay":
+        raise ValueError("schedules= is only meaningful with "
+                         "backend='replay'")
     v = jnp.asarray(values)
     if v.ndim not in (2, 3):
         raise ValueError(f"batched values must be (B, N) or (B, N, V); "
@@ -905,7 +1319,10 @@ def peel_decode_batch_adaptive(
         budgets = jnp.asarray(budgets, jnp.int32)
         if budgets.shape != (B,):
             raise ValueError(f"budgets must be ({B},); got {budgets.shape}")
-    if backend == "sparse":
+    if backend == "replay":
+        scheds = _replay_schedules(code, e, schedules, B)
+        v, e, d = _replay_batch_adaptive(scheds, v, e, budgets)
+    elif backend == "sparse":
         idx, coeff = _tables(code)
         v, e, d = _peel_adaptive_sparse_batch(idx, coeff,
                                               jnp.asarray(code.var_idx),

@@ -106,9 +106,17 @@ class CodedComputeEngine:
 
     code: LDPCCode
     decode_iters: int = 10
-    # dense | sparse | pallas | pallas_tiled | pallas_seeded | auto
+    # dense | sparse | pallas | pallas_tiled | pallas_seeded | replay | auto
     backend: str = "auto"
     adaptive: bool = False
+    # backend="replay" only: the cross-pattern LRU of compiled peeling
+    # schedules (repro.core.schedule_cache.ScheduleCache).  With a cache,
+    # recurring straggler patterns pay the symbolic solve once and every
+    # later decode is pure replay; without one the decode entry points
+    # solve per call.  Replay dispatch needs CONCRETE erasure masks (the
+    # schedule is a function of the pattern) — eager engine calls qualify,
+    # jitted callers must pre-solve at dispatch time instead.
+    schedule_cache: object | None = None
     # Tile plumbing for the check-axis-tiled fused kernels: bp (check-tile
     # height; None = sized from the VMEM budget) and bv (payload tile), plus
     # the VMEM budget "auto" dispatches on (None = decoder default, 8 MiB).
@@ -161,12 +169,28 @@ class CodedComputeEngine:
             "decode_iters": self.decode_iters,
             "adaptive": self.adaptive,
             "seeded_mode": self.seeded_mode,
+            "schedule_cache_capacity": (
+                None if self.schedule_cache is None
+                else getattr(self.schedule_cache, "capacity", None)),
         }
 
     def _tile_kw(self) -> dict:
         return {"bp": self.bp, "bv": self.bv,
                 "vmem_budget_bytes": self.vmem_budget_bytes,
                 "seeded_mode": self.seeded_mode}
+
+    def _schedule_kw(self, erased, *, batch: bool) -> dict:
+        """``schedule=``/``schedules=`` operands for replay dispatch, from
+        the engine's cache.  Only consulted for ``backend="replay"`` with a
+        concrete mask — under jit the mask is a tracer and the decoder's
+        own error message points the caller at pre-solving."""
+        if (self.backend != "replay" or self.schedule_cache is None
+                or isinstance(erased, jax.core.Tracer)):
+            return {}
+        if batch:
+            return {"schedules": self.schedule_cache.get_batch(self.code,
+                                                               erased)}
+        return {"schedule": self.schedule_cache.get(self.code, erased)}
 
     def _record_decode(self, dec: DecodeResult) -> DecodeResult:
         """Feed eager decode outcomes into the obs registry.
@@ -217,15 +241,16 @@ class CodedComputeEngine:
 
     def decode(self, values: jax.Array, erased: jax.Array) -> DecodeResult:
         """One erasure pattern; values (N,) or (N, V) (payload axis)."""
+        kw = {**self._tile_kw(), **self._schedule_kw(erased, batch=False)}
         if self.adaptive:
             # decode_iters doubles as the adaptive round budget (max_iters),
             # matching the pre-engine Scheme2 semantics.
             return self._record_decode(peel_decode_adaptive(
                 self.code, values, erased, self.decode_iters,
-                backend=self.backend, **self._tile_kw()))
+                backend=self.backend, **kw))
         return self._record_decode(peel_decode(
             self.code, values, erased, self.decode_iters,
-            backend=self.backend, **self._tile_kw()))
+            backend=self.backend, **kw))
 
     def decode_batch(self, values: jax.Array, erased: jax.Array, *,
                      adaptive: bool | None = None,
@@ -243,10 +268,11 @@ class CodedComputeEngine:
         per-slot unresolved counts are ``result.erased.sum(axis=1)``.
         ``budgets`` is only meaningful for adaptive decodes."""
         use_adaptive = self.adaptive if adaptive is None else adaptive
+        kw = {**self._tile_kw(), **self._schedule_kw(erased, batch=True)}
         if use_adaptive:
             return self._record_decode(peel_decode_batch_adaptive(
                 self.code, values, erased, self.decode_iters,
-                backend=self.backend, budgets=budgets, **self._tile_kw()))
+                backend=self.backend, budgets=budgets, **kw))
         if budgets is not None:
             raise ValueError(
                 "budgets= requires the adaptive batched decode (engine "
@@ -254,7 +280,7 @@ class CodedComputeEngine:
                 "path would silently ignore the per-slot round budgets")
         return self._record_decode(peel_decode_batch(
             self.code, values, erased, self.decode_iters,
-            backend=self.backend, **self._tile_kw()))
+            backend=self.backend, **kw))
 
     def systematic(self, dec: DecodeResult) -> tuple[jax.Array, jax.Array]:
         """Epilogue: zero-filled systematic part + its unresolved mask.

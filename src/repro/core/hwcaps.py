@@ -15,7 +15,10 @@ On CPU (interpret-mode CI) both paths run scalar code, so
 lower (N/r ≫ 1: always, for real codes).  On TPU the placeholder advantage
 is 8.0 — a deliberately conservative stand-in until ROADMAP item 5's
 profiling replaces it with measured per-(N, r) counters; the dispatch rule
-and every caller stay unchanged when that lands.
+and every caller stay unchanged when that lands.  Until then the
+``REPRO_MXU_ADVANTAGE`` environment variable overrides the TPU placeholder
+(a positive float, e.g. from a one-off microbenchmark on the actual part),
+so deployments can correct the crossover without a code change.
 
 The per-round FLOPs models count the work of ONE flooding round at padded
 shapes (``p_pad × n_pad`` dense tiles vs ``p_pad × r`` gathered edges plus
@@ -26,11 +29,39 @@ in ``repro.kernels.ldpc_peel.kernel`` — they are the same expressions the
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 
 __all__ = ["HardwareCaps", "detect_caps", "seeded_dense_round_flops",
-           "seeded_gather_round_flops", "pick_seeded_mode"]
+           "seeded_gather_round_flops", "pick_seeded_mode",
+           "MXU_ADVANTAGE_ENV", "DEFAULT_TPU_MXU_ADVANTAGE"]
+
+# Placeholder MXU advantage on TPU until ROADMAP item 5's profiling lands,
+# and the env var that overrides it per deployment (positive float).
+DEFAULT_TPU_MXU_ADVANTAGE = 8.0
+MXU_ADVANTAGE_ENV = "REPRO_MXU_ADVANTAGE"
+
+
+def _tpu_mxu_advantage() -> float:
+    """The TPU ``mxu_advantage``: the ``REPRO_MXU_ADVANTAGE`` env override
+    when set (validated positive float — a bad value fails loudly here
+    rather than silently skewing every auto dispatch), else the
+    placeholder."""
+    raw = os.environ.get(MXU_ADVANTAGE_ENV)
+    if raw is None:
+        return DEFAULT_TPU_MXU_ADVANTAGE
+    try:
+        val = float(raw)
+    except ValueError:
+        raise ValueError(
+            f"{MXU_ADVANTAGE_ENV}={raw!r} is not a float; expected a "
+            "positive FLOPs multiplier (e.g. 8.0)") from None
+    if not val > 0.0 or val != val or val == float("inf"):
+        raise ValueError(
+            f"{MXU_ADVANTAGE_ENV}={raw!r} must be a finite positive "
+            "FLOPs multiplier")
+    return val
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -43,8 +74,9 @@ class HardwareCaps:
 
     ``mxu_advantage`` — effective dense-matmul FLOPs discount vs scalar VPU
     work: the dense round's FLOPs count is divided by it before comparing
-    against the gather round's.  1.0 on CPU/interpret; 8.0 placeholder on
-    TPU until real profiling (ROADMAP item 5) supplies measured values.
+    against the gather round's.  1.0 on CPU/interpret; on TPU the
+    ``REPRO_MXU_ADVANTAGE`` env override when set, else the 8.0 placeholder
+    until real profiling (ROADMAP item 5) supplies measured values.
     """
 
     platform: str
@@ -52,11 +84,16 @@ class HardwareCaps:
 
 
 def detect_caps(platform: str | None = None) -> HardwareCaps:
-    """Capabilities of the default JAX backend (or an explicit platform)."""
+    """Capabilities of the default JAX backend (or an explicit platform).
+
+    The env override is read per call (not cached at import), so tests and
+    long-lived processes that adjust ``REPRO_MXU_ADVANTAGE`` see the new
+    value on the next dispatch decision."""
     if platform is None:
         platform = jax.default_backend()
-    return HardwareCaps(platform=platform,
-                        mxu_advantage=8.0 if platform == "tpu" else 1.0)
+    return HardwareCaps(
+        platform=platform,
+        mxu_advantage=_tpu_mxu_advantage() if platform == "tpu" else 1.0)
 
 
 def seeded_dense_round_flops(spec, V: int, *, bp: int = 128) -> int:

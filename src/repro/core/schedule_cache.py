@@ -1,0 +1,153 @@
+"""Cross-step LRU cache of pattern-compiled peeling schedules.
+
+The peeling elimination order is a pure function of ``(code, erasure
+pattern)`` — never of the payload values — and straggler patterns recur
+heavily (worker straggling is sticky; the EMA telemetry exists because of
+it).  :class:`ScheduleCache` closes that loop: the first decode of a
+pattern pays the one-time symbolic solve
+(:func:`repro.core.decoder.compile_peel_schedule`, O(rounds · edges) host
+work), every later decode of the same pattern replays the cached
+:class:`~repro.core.decoder.PeelSchedule` as straight-line gather/FMA
+arithmetic (``backend="replay"``) with zero round-loop or convergence
+overhead.
+
+Keys are ``(id(code), packed erasure bitmask)``.  The cache holds a strong
+reference to every code it has seen, so ``id()`` can never be recycled
+onto a different live code object; a stale-by-content entry is impossible
+because the mask bytes ARE the pattern and the schedule stores the same
+fingerprint (``PeelSchedule.mask_key``), which the decode entry points
+re-verify against concrete masks.
+
+Eviction is LRU by access order with a fixed ``capacity``; a recurring
+straggler working set therefore stays resident while one-off patterns age
+out.  Hits/misses/evictions and the per-solve latency are recorded via
+:mod:`repro.obs` when a registry is enabled (``sched_cache.hit`` /
+``sched_cache.miss`` / ``sched_cache.evict`` counters, the
+``sched_cache.solve_s`` latency histogram, and a ``sched_cache.hit_rate``
+gauge), so serving/distributed runs can gate on the realized hit rate.
+
+Thread-safety: a single lock around every operation — the driver loops
+are single-threaded hosts, but the serving batcher's admission path may
+touch the cache from callback context.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from repro.core.decoder import (
+    PeelSchedule,
+    compile_peel_schedule,
+    erasure_mask_key,
+)
+from repro.obs import metrics as _obs_metrics
+
+__all__ = ["ScheduleCache", "DEFAULT_CAPACITY"]
+
+DEFAULT_CAPACITY = 256
+
+
+class ScheduleCache:
+    """LRU ``(code, erasure pattern) -> PeelSchedule`` with obs counters."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        if int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[tuple, PeelSchedule] = OrderedDict()
+        self._codes: dict[int, object] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, code, erased) -> PeelSchedule:
+        """The schedule for ``(code, erased)`` — cached, or solved on miss.
+
+        ``erased`` must be a CONCRETE (N,) mask; under jit the pattern is a
+        tracer and there is nothing to key on — solve at dispatch time
+        (where the mask is host-known, e.g. the async pipeline's plan loop)
+        and pass the schedule into the decode instead.
+        """
+        if isinstance(erased, jax.core.Tracer):
+            raise ValueError(
+                "ScheduleCache.get needs a CONCRETE erasure mask (the cache "
+                "key is the packed pattern); under jit, look the schedule "
+                "up outside the traced region and pass it via schedule=")
+        key = (id(code), erasure_mask_key(erased))
+        reg = _obs_metrics.active()
+        with self._lock:
+            sched = self._entries.get(key)
+            if sched is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                if reg is not None:
+                    reg.counter("sched_cache.hit").inc()
+                    self._record_rate(reg)
+                return sched
+        t0 = time.perf_counter()
+        sched = compile_peel_schedule(code, erased)
+        solve_s = time.perf_counter() - t0
+        with self._lock:
+            self.misses += 1
+            if reg is not None:
+                reg.counter("sched_cache.miss").inc()
+                reg.histogram("sched_cache.solve_s",
+                              bins=_obs_metrics.LATENCY_BINS).observe(solve_s)
+                self._record_rate(reg)
+            self._codes[id(code)] = code
+            self._entries[key] = sched
+            while len(self._entries) > self.capacity:
+                old_key, _ = self._entries.popitem(last=False)
+                self.evictions += 1
+                if reg is not None:
+                    reg.counter("sched_cache.evict").inc()
+                if not any(k[0] == old_key[0] for k in self._entries):
+                    self._codes.pop(old_key[0], None)
+        return sched
+
+    def get_batch(self, code, erased) -> tuple[PeelSchedule, ...]:
+        """Per-slot schedules for a concrete (B, N) mask batch — the
+        ``schedules=`` operand of the batched replay decodes; each slot
+        hits or misses independently."""
+        if isinstance(erased, jax.core.Tracer):
+            raise ValueError(
+                "ScheduleCache.get_batch needs CONCRETE per-slot erasure "
+                "masks; under jit, look the schedules up outside the traced "
+                "region and pass them via schedules=")
+        e = np.asarray(erased, bool)
+        if e.ndim != 2:
+            raise ValueError(f"erased must be (B, N); got shape {e.shape}")
+        return tuple(self.get(code, e[b]) for b in range(e.shape[0]))
+
+    def _record_rate(self, reg) -> None:
+        total = self.hits + self.misses
+        if total:
+            reg.gauge("sched_cache.hit_rate").set(self.hits / total)
+
+    def stats(self) -> dict:
+        """Hit/miss/eviction counters, occupancy, and the realized hit
+        rate — what the replay benchmark gates on."""
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hit_rate": self.hits / total if total else 0.0,
+        }
+
+    def clear(self) -> None:
+        """Drop every entry (counters keep accumulating — they describe
+        the cache's lifetime, not its current contents)."""
+        with self._lock:
+            self._entries.clear()
+            self._codes.clear()

@@ -91,7 +91,7 @@ __all__ = ["DistributedRunResult", "DistributedCodedGD",
            "delay_step_control"]
 
 BUDGET_MODES = ("fixed", "telemetry")
-MASTER_DECODES = ("single", "sharded")
+MASTER_DECODES = ("single", "sharded", "replay")
 WORKER_ENCODES = ("materialized", "seeded", "seeded-fused")
 
 
@@ -197,6 +197,11 @@ class DistributedCodedGD:
     # default — any engine backend).  "sharded": the decode itself runs
     # over the workers mesh with check tiles partitioned across devices
     # (repro.distributed.sharded_decode) — for N past one device; stays
+    # bit-identical to the single-device sparse decode.  "replay": the
+    # pattern-compiled decode — the step's concrete mask (known on the host
+    # at dispatch) looks its peeling schedule up in a cross-step
+    # ScheduleCache (recurring straggler patterns pay the symbolic solve
+    # once) and the decode is the straight-line numeric replay; stays
     # bit-identical to the single-device sparse decode.
     master_decode: str = "single"
     # "materialized": workers hold their rows of the encoded C (the default
@@ -219,6 +224,11 @@ class DistributedCodedGD:
     # wait-for cut the estimator chose, so q̂ would converge to its own
     # decision instead of to anything about the workers).
     straggler_factor: float = 2.0
+    # master_decode="replay" only: the cross-step LRU of compiled peeling
+    # schedules.  None = the driver builds its own; pass one to share it
+    # (e.g. the pipelined driver hands its cache to the wrapped sync
+    # driver so warm patterns carry across).
+    schedule_cache: object | None = None
 
     def __post_init__(self) -> None:
         if self.budget_mode not in BUDGET_MODES:
@@ -267,6 +277,9 @@ class DistributedCodedGD:
             # Check tiles partitioned over the workers axis, once at build.
             self._sharded_tables = shard_check_tables(self.scheme.code,
                                                       self.mesh)
+        if self.master_decode == "replay" and self.schedule_cache is None:
+            from repro.core.schedule_cache import ScheduleCache
+            self.schedule_cache = ScheduleCache()
         # Which addressable shard of a replicated array lives on the master
         # device: the worker program's replicated output hands the master
         # program its operand ZERO-COPY via that shard's buffer, instead of
@@ -361,6 +374,44 @@ class DistributedCodedGD:
                                          else rounds)
 
             return worker_jit, jax.jit(master_program)
+
+        if self.master_decode == "replay":
+            # Replay master program: the decode dispatch stays EAGER — the
+            # step's mask is concrete on the host at dispatch, so the
+            # engine looks the pattern's compiled schedule up in the
+            # cross-step cache (hit → no symbolic solve) and the numeric
+            # replay jits internally keyed on the schedule's segment
+            # shapes.  Only the value-level epilogue/update is jitted
+            # here.  Replay reproduces the sparse flooding arithmetic
+            # bit-for-bit, so the sync-parity gates hold unchanged.
+            r_eng = dataclasses.replace(eng, backend="replay",
+                                        schedule_cache=self.schedule_cache)
+            fixed_mode = self.budget_mode == "fixed"
+
+            @jax.jit
+            def replay_epilogue(values, erased, theta):
+                c_hat, unresolved = eng.systematic(
+                    DecodeResult(values, erased, jnp.int32(0)))
+                g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+                theta2 = scheme.projection(theta - scheme.lr * g)
+                return theta2, n_unres
+
+            def master_program(z, worker_mask, theta, budget):
+                erased = topo.to_symbol_erasure(worker_mask)
+                z = r_eng.erase(z, erased)    # idempotent, mirrors recover()
+                if fixed_mode:
+                    dec = r_eng.decode(z, erased)
+                    values, er2, rounds = (dec.values, dec.erased,
+                                           dec.rounds_used)
+                else:
+                    dec = r_eng.decode_batch(z[None], erased[None],
+                                             adaptive=True, budgets=budget)
+                    values, er2, rounds = (dec.values[0], dec.erased[0],
+                                           dec.rounds_used[0])
+                theta2, n_unres = replay_epilogue(values, er2, theta)
+                return theta2, n_unres, rounds
+
+            return worker_jit, master_program
 
         # Master program: a SINGLE-DEVICE launch (inputs committed to the
         # master device pin it there) — decode of the gathered survivors

@@ -208,14 +208,29 @@ class AsyncDistributedCodedGD:
     auto_staleness: bool = False
     budget_mode: str = "fixed"
     worker_encode: str = "materialized"
+    # "single" (default) or "replay": which decode the fused master program
+    # runs.  "replay" pre-solves each step's peeling schedule HOST-SIDE in
+    # the plan loop (the step-t mask is known before any device work, so
+    # the symbolic solve never sits on the decode critical path) and the
+    # per-step decode is the straight-line numeric replay — bit-identical
+    # to "single" over a sparse engine.  Passed through to the wrapped
+    # synchronous driver so the depth-1 parity reference runs the SAME
+    # decode and shares the SAME schedule cache.
+    master_decode: str = "single"
     estimator: StragglerRateEstimator | None = None
     lag_estimator: ArrivalLagEstimator | None = None
     max_rounds: int | None = None
     straggler_factor: float = 2.0
+    schedule_cache: object | None = None
 
     def __post_init__(self) -> None:
         if self.depth < 1:
             raise ValueError(f"depth must be >= 1; got {self.depth}")
+        if self.master_decode not in ("single", "replay"):
+            raise ValueError(
+                f"unknown pipeline master_decode {self.master_decode!r}; "
+                "want 'single' or 'replay' (the sharded decode has no "
+                "pipelined master program)")
         if self.max_staleness < 0:
             raise ValueError(
                 f"max_staleness must be >= 0; got {self.max_staleness}")
@@ -231,10 +246,13 @@ class AsyncDistributedCodedGD:
         self._sync = DistributedCodedGD(
             self.scheme, self.topology, self.mesh,
             budget_mode=self.budget_mode, worker_encode=self.worker_encode,
+            master_decode=self.master_decode,
             estimator=self.estimator, max_rounds=self.max_rounds,
-            straggler_factor=self.straggler_factor)
+            straggler_factor=self.straggler_factor,
+            schedule_cache=self.schedule_cache)
         self.mesh = self._sync.mesh
         self.estimator = self._sync.estimator
+        self.schedule_cache = self._sync.schedule_cache
         if self.lag_estimator is None:
             self.lag_estimator = ArrivalLagEstimator()
         self.max_rounds = self._sync.max_rounds
@@ -266,6 +284,55 @@ class AsyncDistributedCodedGD:
         scheme, topo = self.scheme, self.topology
         eng = scheme.engine
         fixed = self.budget_mode == "fixed"
+
+        if self.master_decode == "replay":
+            # Replay variant: the decode dispatch stays EAGER (the mask is
+            # concrete host data, the schedule is a cache hit — pre-solved
+            # in the plan loop — and the replay executors jit internally
+            # keyed on segment shapes); the value-level epilogue/update/
+            # average/metric is ONE jitted program whose elementwise chain
+            # is the same arithmetic as the fused variant below, so the
+            # depth-1 parity gate against the sync replay driver holds.
+            from repro.core.decoder import DecodeResult
+            r_eng = dataclasses.replace(eng, backend="replay",
+                                        schedule_cache=self.schedule_cache)
+
+            def replay_epilogue(values, erased, theta, tbar, fold_dg, t,
+                                theta_star):
+                c_hat, unresolved = eng.systematic(
+                    DecodeResult(values, erased, jnp.int32(0)))
+                g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+                if with_folds:
+                    g = g + fold_dg
+                theta2 = scheme.projection(theta - scheme.lr * g)
+                tbar2 = (tbar * t + theta2) / (t + 1.0)
+                if loss_fn is None:
+                    err = jnp.linalg.norm(theta2 - theta_star)
+                else:
+                    err = loss_fn(theta2)
+                return theta2, tbar2, n_unres, err, unresolved
+
+            epilogue = jax.jit(replay_epilogue, donate_argnums=(3,))
+
+            def replay_master(z, worker_mask, theta, tbar, fold_dg, t,
+                              budget, theta_star):
+                erased = topo.to_symbol_erasure(jnp.asarray(worker_mask))
+                z = r_eng.erase(z, erased)
+                if fixed:
+                    dec = r_eng.decode(z, erased)
+                    values, er2, rounds = (dec.values, dec.erased,
+                                           dec.rounds_used)
+                else:
+                    dec = r_eng.decode_batch(z[None], erased[None],
+                                             adaptive=True, budgets=budget)
+                    values, er2, rounds = (dec.values[0], dec.erased[0],
+                                           dec.rounds_used[0])
+                theta2, tbar2, n_unres, err, u = epilogue(
+                    values, er2, theta, tbar, fold_dg, t, theta_star)
+                return theta2, tbar2, n_unres, rounds, err, u
+
+            replay_master._cache_size = epilogue._cache_size
+            return replay_master
 
         def master_program(z, worker_mask, theta, tbar, fold_dg, t, budget,
                            theta_star):
@@ -404,6 +471,15 @@ class AsyncDistributedCodedGD:
                              rate=float(rate), cutoff=float(cutoff),
                              observed=observed)
             plan.record()
+            if self.master_decode == "replay":
+                # Pre-solve the step's peeling schedule NOW: the mask is
+                # host data before any device work, so a cold pattern's
+                # symbolic solve overlaps the worker matvecs instead of
+                # sitting in the decode path; the step's decode then hits
+                # the cache unconditionally.
+                with _span("master/schedule_solve", lane="master", step=t):
+                    self.schedule_cache.get(code, np.asarray(
+                        self.topology.to_symbol_erasure(jnp.asarray(cut))))
             ctrl.append(plan)
 
         use_folds = (delay_model is not None and self.staleness_decay > 0.0

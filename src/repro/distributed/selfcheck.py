@@ -178,6 +178,7 @@ def check_grad_agg_parity(*, n_shards: int = 64, dim: int = 17,
 def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
                           q0: float = 0.25, backend: str = "sparse",
                           worker_encode: str = "materialized",
+                          master_decode: str = "single",
                           seed: int = 0) -> int:
     """Depth-1 / zero-fold-window pipeline vs the synchronous driver.
 
@@ -187,6 +188,11 @@ def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
     control plane shared through ``delay_step_control``).  The iterates,
     unresolved counts, round counts, and budgets must match exactly; the
     assertion names the first diverging step.  Returns total steps checked.
+
+    ``master_decode="replay"`` puts the pattern-compiled replay decode on
+    BOTH drivers (each with its own schedule cache): parity then proves
+    the pipeline's plan-time schedule pre-solve and eager replay dispatch
+    change no bit relative to the synchronous replay step.
     """
     scheme, prob = _build_scheme(K, worker_encode, backend, seed)
     code = scheme.code
@@ -199,9 +205,11 @@ def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
             ("delay", None, DelayModel(tau=1.0, mu=1.0)))
     for name, model, delay_model in legs:
         sync = DistributedCodedGD(scheme, topo, mesh,
+                                  master_decode=master_decode,
                                   worker_encode=worker_encode)
         pipe = AsyncDistributedCodedGD(scheme, topo, mesh, depth=1,
                                        max_staleness=0,
+                                       master_decode=master_decode,
                                        worker_encode=worker_encode)
         rs = sync.run(theta0, model, steps, key=key,
                       theta_star=prob.theta_star, delay_model=delay_model)
@@ -213,6 +221,7 @@ def check_pipeline_parity(*, K: int = 64, n_workers: int = 8, steps: int = 6,
             bad = int(np.argmax(ref != got))
             raise AssertionError(
                 f"pipeline backend={backend} worker_encode={worker_encode} "
+                f"master_decode={master_decode} "
                 f"leg={name}: final iterates diverge at coordinate {bad}: "
                 f"{ref[bad]!r} != {got[bad]!r}")
         for field in ("unresolved", "rounds", "budgets", "wait_for"):
@@ -235,10 +244,13 @@ def main(argv=None) -> int:
     ap.add_argument("--backends", default="dense,sparse,pallas",
                     help="comma-separated decode backends to check")
     ap.add_argument("--master-decode", default="single",
-                    choices=["single", "sharded"],
+                    choices=["single", "sharded", "replay"],
                     help="sharded = the master decode itself runs over the "
                          "mesh (check tiles partitioned; reference stays "
-                         "the single-device sparse decode)")
+                         "the single-device sparse decode); replay = the "
+                         "pattern-compiled schedule replay with a cross-step "
+                         "cache (reference likewise the single-device "
+                         "sparse decode)")
     ap.add_argument("--worker-encode", default="materialized",
                     choices=["materialized", "seeded", "seeded-fused"],
                     help="seeded = workers hold only generator gather "
@@ -271,17 +283,24 @@ def main(argv=None) -> int:
     # one uniform loop so --json and the human output cannot drift.
     checks = []
     if args.pipeline:
-        for backend in args.backends.split(","):
+        # Replay overrides the scheme backend on both drivers, so one
+        # sparse-scheme run is the whole matrix (as with sharded below).
+        backends = (["sparse"] if args.master_decode == "replay"
+                    else args.backends.split(","))
+        for backend in backends:
             checks.append((
                 "pipeline", backend,
-                {"worker_encode": args.worker_encode},
+                {"worker_encode": args.worker_encode,
+                 "master_decode": args.master_decode},
                 functools.partial(check_pipeline_parity, K=args.K,
                                   n_workers=args.workers, steps=args.steps,
                                   q0=args.q0, backend=backend,
-                                  worker_encode=args.worker_encode),
+                                  worker_encode=args.worker_encode,
+                                  master_decode=args.master_decode),
                 lambda steps, backend=backend: (
                     f"parity OK: pipeline backend={backend} "
-                    f"worker_encode={args.worker_encode} W={args.workers} "
+                    f"worker_encode={args.worker_encode} "
+                    f"master_decode={args.master_decode} W={args.workers} "
                     f"devices={n_dev} steps={steps} "
                     "(bit-identical iterates)")))
     elif args.grad_agg:
@@ -295,8 +314,9 @@ def main(argv=None) -> int:
                     f"parity OK: grad-agg backend={backend} W={args.workers} "
                     f"devices={n_dev} masks={steps} (bit-identical sums)")))
     else:
-        if args.master_decode == "sharded":
-            # The sharded rounds ARE the sparse neighbor-table rounds, so
+        if args.master_decode in ("sharded", "replay"):
+            # The sharded rounds ARE the sparse neighbor-table rounds (and
+            # replay reproduces the sparse flooding arithmetic exactly), so
             # the bit-parity reference is the sparse single-device decode.
             backends = ["sparse"]
         else:

@@ -23,6 +23,12 @@ operand at all.  The caller passes a hashable
 regenerated in-register from the seed inside the flooding round
 (``seeded_h_tile``), so H costs zero bytes of HBM storage and traffic —
 same erasure trajectories, values bit-identical to the tiled path.
+
+``peel_decode_replay_pallas`` drops the round structure entirely: it takes
+a precompiled ``repro.core.PeelSchedule`` (value-independent elimination
+order) and replays the resolved edges as one fused gather/FMA launch —
+O(resolved edges) work instead of O(rounds x p x r_max), bit-identical to
+the flooding trajectory under the matching tie-break rule.
 """
 from repro.kernels.ldpc_peel.kernel import (
     check_pass,
@@ -34,6 +40,7 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_fused_batch_adaptive_tiled,
     decode_fused_batch_tiled,
     decode_fused_tiled,
+    decode_replay,
     decode_seeded,
     decode_seeded_adaptive,
     decode_seeded_batch,
@@ -51,6 +58,7 @@ from repro.kernels.ldpc_peel.ops import (
     peel_decode_batch_seeded_pallas,
     peel_decode_batch_tiled_pallas,
     peel_decode_pallas,
+    peel_decode_replay_pallas,
     peel_decode_seeded_pallas,
     peel_decode_tiled_pallas,
     peel_round_pallas,
@@ -65,11 +73,13 @@ __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_seeded_pallas", "peel_decode_batch_seeded_pallas",
            "peel_decode_adaptive_seeded_pallas",
            "peel_decode_batch_adaptive_seeded_pallas",
+           "peel_decode_replay_pallas",
            "check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive", "decode_fused_batch_adaptive",
            "decode_fused_tiled", "decode_fused_batch_tiled",
            "decode_fused_adaptive_tiled",
            "decode_fused_batch_adaptive_tiled",
+           "decode_replay",
            "decode_seeded", "decode_seeded_batch",
            "decode_seeded_adaptive", "decode_seeded_batch_adaptive",
            "seeded_h_tile"]

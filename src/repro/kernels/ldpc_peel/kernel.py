@@ -102,6 +102,16 @@ gather-FMA — bit-identical to ``repro.core.encoding.gather_encode`` over
 ``seeded_generator_rows`` tables, with zero table operand traffic.  The
 row offset is a TRACED scalar so sharded workers can encode their row
 slice under ``shard_map`` without per-shard recompilation.
+
+:func:`decode_replay` is the pattern-compiled fast path: it takes a PACKED
+:class:`repro.core.decoder.PeelSchedule` (per-round sentinel-padded entry
+segments) and applies the whole pre-solved elimination order in ONE
+``pallas_call`` — no flooding loop, no convergence mask, no H operand;
+work is O(schedule entries · r_max), i.e. proportional to the resolved
+edges, not rounds × p·r.  Its edge-sum duplicates the decoder's
+scan-boundary compensated chain (:func:`_replay_edge_sum`), so replayed
+values are bit-identical to the ``backend="replay"`` executors and hence
+to the sparse flooding decode.
 """
 from __future__ import annotations
 
@@ -118,7 +128,7 @@ __all__ = ["check_pass", "decode_fused", "decode_fused_batch",
            "decode_fused_adaptive_tiled", "decode_fused_batch_adaptive_tiled",
            "decode_seeded", "decode_seeded_batch", "decode_seeded_adaptive",
            "decode_seeded_batch_adaptive", "seeded_h_tile",
-           "encode_seeded_fused", "detect_interpret"]
+           "encode_seeded_fused", "decode_replay", "detect_interpret"]
 
 SEEDED_MODES = ("dense_tile", "gather")
 
@@ -1339,3 +1349,129 @@ def encode_seeded_fused(st, y: jax.Array, row0: jax.Array, *, n_out: int,
         out_shape=[jax.ShapeDtypeStruct((n_out, V), jnp.float32)],
         interpret=interpret,
     )(row0, y)
+
+
+# ------------------------------------------------------- schedule replay --
+
+
+def _replay_edge_sum(nv, w):
+    """``repro.core.decoder._edge_sum``'s exact op sequence, duplicated so
+    kernels stay import-free of ``core.decoder`` (which imports ops.py):
+    lone multiplies OUTSIDE a ``lax.scan``, Neumaier-compensated adds
+    INSIDE it.  The scan boundary is what pins the IEEE op sequence
+    per-element regardless of how many schedule entries the operand
+    carries — must stay in lockstep with the decoder's copy for replay
+    bit-parity."""
+    wx = w.reshape(w.shape + (1,) * (nv.ndim - w.ndim))
+    pt = jnp.moveaxis(nv * wx, 1, 0)                # (r_max, rows, ...)
+
+    def body(carry, x):
+        s, c = carry
+        t = s + x
+        big = jnp.abs(s) >= jnp.abs(x)
+        c = c + jnp.where(big, (s - t) + x, (x - t) + s)
+        return (t, c), None
+
+    (s, c), _ = jax.lax.scan(body, (pt[0], jnp.zeros_like(pt[0])), pt[1:])
+    return s + c
+
+
+def _replay_kernel(nidx_ref, w_ref, coeff_ref, tgt_ref, vals_ref, erased_ref,
+                   out_vals_ref, out_erased_ref, *, rounds: int, maxseg: int,
+                   n_real: int):
+    """Replay a packed peeling schedule: ``rounds`` segments of ``maxseg``
+    entries each (sentinel-padded), every entry one resolving check's
+    gather + compensated edge-sum + guarded divide, scattered back through
+    an inverse-index gather (targets are unique within a round by
+    construction, so a masked max over the entry axis recovers the writer
+    exactly — the resolved value is MOVED, never re-accumulated, keeping
+    its bits)."""
+    nidx = nidx_ref[...]                            # (R*maxseg, r_max) i32
+    w = w_ref[...]                                  # (R*maxseg, r_max) f32
+    cf = coeff_ref[...][:, 0]                       # (R*maxseg,)
+    tgt = tgt_ref[...][:, 0]                        # (R*maxseg,) i32
+    n_pad = vals_ref.shape[0]
+
+    ent = jax.lax.broadcasted_iota(jnp.int32, (maxseg, n_pad), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (maxseg, n_pad), 1)
+    colv = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)[:, 0]
+
+    def round_body(t, carry):
+        vals, e = carry
+        b = t * maxseg
+        idx_t = jax.lax.dynamic_slice_in_dim(nidx, b, maxseg)
+        w_t = jax.lax.dynamic_slice_in_dim(w, b, maxseg)
+        cf_t = jax.lax.dynamic_slice_in_dim(cf, b, maxseg)
+        tg_t = jax.lax.dynamic_slice_in_dim(tgt, b, maxseg)
+        nv = vals[idx_t]                            # (maxseg, r_max, BV)
+        sums = _replay_edge_sum(nv, w_t)
+        new_val = -sums / jnp.where(cf_t == 0.0, 1.0, cf_t)[:, None]
+        # inverse-gather scatter: which entry (if any) writes each column
+        inv = jnp.max(jnp.where(col == tg_t[:, None], ent, -1), axis=0)
+        # sentinel targets land on padding columns; keep those rows exactly
+        # +0.0 so later rounds' sentinel gathers read the same zero the
+        # executor's concat row provides
+        hit = (inv >= 0) & (colv < n_real)
+        picked = new_val[jnp.maximum(inv, 0)]
+        vals = jnp.where(hit[:, None], picked, vals)
+        e = jnp.where(hit[:, None], 0.0, e)
+        return vals, e
+
+    vals, e = jax.lax.fori_loop(0, rounds, round_body,
+                                (vals_ref[...], erased_ref[...]))
+    out_vals_ref[...] = vals
+    out_erased_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "maxseg", "n_real",
+                                             "bv", "interpret"))
+def decode_replay(nidx: jax.Array, w: jax.Array, coeff: jax.Array,
+                  tgt: jax.Array, values: jax.Array, erased_f: jax.Array, *,
+                  rounds: int, maxseg: int, n_real: int, bv: int = 128,
+                  interpret: bool | None = None):
+    """Whole schedule replay in ONE ``pallas_call`` — no flooding loop, no
+    convergence mask, no H operand: only the resolving checks' edges ride
+    in as the packed schedule.
+
+    Inputs (packed/padded by ops.py): ``nidx (R·maxseg, r_max) i32``
+    neighbor columns (sentinel ``n_real`` on padding slots/entries — points
+    at a guaranteed-zero padded row), ``w (R·maxseg, r_max) f32`` pre-masked
+    edge weights, ``coeff (R·maxseg, 1) f32`` target-slot coefficients (0 on
+    padding entries), ``tgt (R·maxseg, 1) i32`` target columns (sentinel
+    ``n_real`` on padding entries), ``values (n_pad, V) f32`` with
+    ``n_pad % 128 == 0`` and ``n_pad > n_real``, ``erased_f (n_pad, 1)``.
+
+    ``interpret=None`` = backend-detected (compiled on TPU, else interpret).
+    The schedule gathers lower like the seeded gather round — exact in
+    interpret mode everywhere; TPU lowering tuning rides ROADMAP item 5.
+
+    Returns (values (n_pad, V) f32, erased (n_pad, 1) f32).
+    """
+    interpret = detect_interpret(interpret)
+    n_pad, V = values.shape
+    S, r_max = nidx.shape
+    grid = (V // bv,)
+    return pl.pallas_call(
+        functools.partial(_replay_kernel, rounds=rounds, maxseg=maxseg,
+                          n_real=n_real),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S, r_max), lambda j: (0, 0)),   # schedule: resident
+            pl.BlockSpec((S, r_max), lambda j: (0, 0)),
+            pl.BlockSpec((S, 1), lambda j: (0, 0)),
+            pl.BlockSpec((S, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n_pad, bv), lambda j: (0, j)),  # payload slice
+            pl.BlockSpec((n_pad, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_pad, bv), lambda j: (0, j)),
+            # every grid step replays the identical trajectory and rewrites
+            # the same mask block — benign (sequential grid on TPU).
+            pl.BlockSpec((n_pad, 1), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, V), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nidx, w, coeff, tgt, values, erased_f)

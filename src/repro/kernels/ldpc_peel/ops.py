@@ -40,6 +40,13 @@ round implementation — dense regenerated-tile matmul vs the
 edge-proportional gather/segment-sum round (same erasure trajectory,
 O(p·r) instead of O(p·N) FLOPs per round).
 
+:func:`peel_decode_replay_pallas` wraps the pattern-compiled REPLAY
+kernel: it packs a pre-solved :class:`repro.core.decoder.PeelSchedule`
+into sentinel-padded per-round segments (host-side, cached on the
+schedule) and applies the whole elimination order in ONE ``pallas_call``
+— no flooding loop, no H operand, values bit-identical to the
+``backend="replay"`` executors under the matching tie-break rule.
+
 :func:`encode_seeded_fused_pallas` is the ENCODE-side twin: the seeded
 LDGM generator gather (``z = gather(G_rows, y)``) fused into one
 ``pallas_call`` that regenerates each output row's (column, weight) pairs
@@ -53,6 +60,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.padding import pad_axis_to
 from repro.kernels.ldpc_peel.kernel import (
@@ -65,6 +73,7 @@ from repro.kernels.ldpc_peel.kernel import (
     decode_fused_batch_adaptive_tiled,
     decode_fused_batch_tiled,
     decode_fused_tiled,
+    decode_replay,
     decode_seeded,
     decode_seeded_adaptive,
     decode_seeded_batch,
@@ -82,7 +91,7 @@ __all__ = ["peel_round_pallas", "peel_decode_pallas",
            "peel_decode_seeded_pallas", "peel_decode_batch_seeded_pallas",
            "peel_decode_adaptive_seeded_pallas",
            "peel_decode_batch_adaptive_seeded_pallas",
-           "encode_seeded_fused_pallas"]
+           "encode_seeded_fused_pallas", "peel_decode_replay_pallas"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "bp", "bv"))
@@ -619,3 +628,96 @@ def encode_seeded_fused_pallas(st, y, row0=0, *, n_out: int | None = None,
     return _encode_seeded_fused_impl(y, r0, st=st, n_out=int(n_out),
                                      interpret=detect_interpret(interpret),
                                      bo=bo, bv=bv)
+
+
+# ----------------------------------------------------- schedule replay --
+
+
+def _pack_replay(sched, rule: str, rounds: int):
+    """Pack ``rounds`` schedule segments into dense sentinel-padded arrays
+    for the fused replay kernel: every round becomes ``maxseg`` entries
+    (real ones first, then no-op padding whose neighbor/target indices are
+    the sentinel ``N`` — a guaranteed-zero padded row/column).  Built
+    host-side once per ``(rule, rounds)`` prefix and cached on the
+    schedule next to the executor operands."""
+    key = ("packed", rule, rounds)
+    cached = sched._ops.get(key)
+    if cached is not None:
+        return cached
+    off = np.asarray(sched.offsets)
+    segs = [(int(off[k]), int(off[k + 1])) for k in range(rounds)]
+    maxseg = max([s1 - s0 for s0, s1 in segs] + [1])
+    R = max(rounds, 1)
+    nidx = np.full((R * maxseg, sched.r_max), sched.N, np.int32)
+    w = np.zeros((R * maxseg, sched.r_max), np.float32)
+    cf = np.zeros((R * maxseg, 1), np.float32)
+    tg = np.full((R * maxseg, 1), sched.N, np.int32)
+    src_i = getattr(sched, f"idx_{rule}")
+    src_w = getattr(sched, f"w_{rule}")
+    src_c = getattr(sched, f"coeff_{rule}")
+    for k, (s0, s1) in enumerate(segs):
+        n = s1 - s0
+        nidx[k * maxseg:k * maxseg + n] = src_i[s0:s1]
+        w[k * maxseg:k * maxseg + n] = src_w[s0:s1]
+        cf[k * maxseg:k * maxseg + n, 0] = src_c[s0:s1]
+        tg[k * maxseg:k * maxseg + n, 0] = sched.target[s0:s1]
+    # concrete even if first packed under a caller's jit trace — cached
+    # tracers would poison later eager replays of the same schedule
+    with jax.ensure_compile_time_eval():
+        cached = (jnp.asarray(nidx), jnp.asarray(w), jnp.asarray(cf),
+                  jnp.asarray(tg), maxseg)
+    sched._ops[key] = cached
+    return cached
+
+
+@partial(jax.jit, static_argnames=("rounds", "maxseg", "n_real", "interpret",
+                                   "bv"))
+def _peel_decode_replay_impl(nidx, w, cf, tg, values, erased, *, rounds: int,
+                             maxseg: int, n_real: int, interpret: bool,
+                             bv: int = 128):
+    squeeze = values.ndim == 1
+    vals = values[:, None] if squeeze else values
+    N, V = vals.shape
+    # pad N past the sentinel row (n_pad > N always) and up to the lane
+    # multiple; sentinel gathers then read a real zero row, exactly like
+    # the executors' concatenated zero row
+    n_pad = N + 1 + (-(N + 1)) % 128
+    vp = jnp.concatenate([vals.astype(jnp.float32),
+                          jnp.zeros((n_pad - N, V), jnp.float32)])
+    vp = pad_axis_to(vp, bv, -1)
+    ep = jnp.concatenate([erased.astype(jnp.float32)[:, None],
+                          jnp.zeros((n_pad - N, 1), jnp.float32)])
+    out_v, out_e = decode_replay(nidx, w, cf, tg, vp, ep, rounds=rounds,
+                                 maxseg=maxseg, n_real=n_real,
+                                 bv=min(bv, vp.shape[1]), interpret=interpret)
+    out_vals = out_v[:N, :V].astype(vals.dtype)
+    out_erased = out_e[:N, 0] > 0.0
+    if squeeze:
+        out_vals = out_vals[:, 0]
+    return out_vals, out_erased
+
+
+def peel_decode_replay_pallas(sched, values, erased, rounds: int | None = None,
+                              *, rule: str = "hi",
+                              interpret: bool | None = None, bv: int = 128):
+    """Replay a pre-solved peeling schedule in ONE kernel launch.
+
+    ``sched`` is a :class:`repro.core.decoder.PeelSchedule` (passed
+    duck-typed — ops stays import-free of ``core.decoder``); values (N,)
+    or (N, V); erased (N,) bool.  ``rounds`` clips the replayed prefix
+    (default: the whole schedule — budgets are host-known whenever the
+    schedule is, so budget clipping is a pack-time slice, not a traced
+    mask).  ``rule`` picks the duplicate-check tie-break: ``"hi"`` matches
+    the single-pattern dense/sparse scatter (and ``backend="replay"``'s
+    single-pattern executor), ``"lo"`` the batch-major/kernel merges.
+    Values are bit-identical to the matching executor; work is
+    O(schedule entries · r_max).
+    """
+    rounds = sched.n_rounds if rounds is None else min(int(rounds),
+                                                       sched.n_rounds)
+    nidx, w, cf, tg, maxseg = _pack_replay(sched, rule, rounds)
+    return _peel_decode_replay_impl(nidx, w, cf, tg, values, erased,
+                                    rounds=rounds, maxseg=maxseg,
+                                    n_real=sched.N,
+                                    interpret=detect_interpret(interpret),
+                                    bv=bv)

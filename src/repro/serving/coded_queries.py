@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.decoder import DecodeResult
+from repro.core.schedule_cache import ScheduleCache
 from repro.obs import metrics as _obs_metrics
 from repro.obs.trace import span as _span
 from repro.serving.slot_lifecycle import SlotPool
@@ -125,6 +127,21 @@ class CodedQueryBatcher:
                                   else int(rounds_per_launch))
         if self.mode == "continuous" and self.rounds_per_launch < 1:
             raise ValueError("rounds_per_launch must be >= 1")
+        # Replay serving: each slot's decode is the straight-line replay of
+        # its pattern's compiled schedule — there is no round loop to chunk,
+        # and carrying partially-peeled state across launches would key the
+        # schedule cache on transient partial masks (correct, but every
+        # lookup a miss).  Grant the full budget per launch so every slot
+        # retires in its admission launch and the cache keys stay the
+        # admission-time straggler patterns.
+        self._replay = (mode == "continuous"
+                        and getattr(scheme, "decode_backend", "") == "replay")
+        if self._replay and self.rounds_per_launch < self.budget:
+            raise ValueError(
+                "backend='replay' serving is straight-line schedule replay: "
+                f"rounds_per_launch ({self.rounds_per_launch}) must cover "
+                f"the full budget ({self.budget}) so slots never carry "
+                "partial decode state across launches")
         self.queue: deque[CodedQuery] = deque()
         self.finished: list[CodedQuery] = []
         self.launches = 0   # batched decode launches issued
@@ -163,6 +180,11 @@ class CodedQueryBatcher:
     def _make_continuous_fns(self):
         scheme = self.scheme
         eng = scheme.engine
+        if self._replay and eng.schedule_cache is None:
+            # the scheme did not bring a cache: give the batcher its own,
+            # so per-slot patterns still hit across admissions
+            eng = dataclasses.replace(eng, schedule_cache=ScheduleCache())
+        self.schedule_cache = eng.schedule_cache if self._replay else None
         C = jnp.asarray(scheme.C)
 
         def init(theta_B, mask_B, vals_B, erased_B, fresh_B):
@@ -190,7 +212,30 @@ class CodedQueryBatcher:
             return (dec.values, dec.erased, dec.rounds_used, g, n_unres,
                     dec.erased.sum(axis=1))
 
-        return jax.jit(init), jax.jit(launch)
+        if not self._replay:
+            return jax.jit(init), jax.jit(launch)
+
+        # Replay dispatch needs the CONCRETE per-slot masks (the schedule
+        # cache keys on the packed pattern), so the launch stays eager at
+        # this level: the engine looks each slot's schedule up (hit → no
+        # solve) and the replay executors jit internally keyed on the
+        # schedules' segment shapes.  Only the value-level epilogue is
+        # jitted here.
+        @jax.jit
+        def epilogue(values, erased, rounds_used):
+            c_hat, unresolved = eng.systematic(
+                DecodeResult(values, erased, rounds_used))
+            g, n_unres = scheme.finish_gradient(c_hat, unresolved)
+            return g, n_unres
+
+        def replay_launch(vals, er, budgets_B):
+            dec = eng.decode_batch(vals, er, adaptive=True,
+                                   budgets=budgets_B)
+            g, n_unres = epilogue(dec.values, dec.erased, dec.rounds_used)
+            return (dec.values, dec.erased, dec.rounds_used, g, n_unres,
+                    dec.erased.sum(axis=1))
+
+        return jax.jit(init), replay_launch
 
     # ---------------------------------------------------------------- intake
 

@@ -1,0 +1,73 @@
+"""check_regression CLI surface: the section registry, --list-sections,
+and the unknown-section guard (a typo'd --sections in CI must fail loudly
+instead of silently gating nothing)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _write_bench(path, data=None):
+    path.write_text(json.dumps(data if data is not None else {
+        "schema_version": 10, "results": []}))
+    return str(path)
+
+
+def test_list_sections_prints_registry(capsys):
+    assert cr.main(["--list-sections"]) == 0
+    out = capsys.readouterr().out
+    for name, (desc, _) in cr.SECTIONS.items():
+        assert name in out and desc in out
+
+
+def test_list_sections_needs_no_files(capsys):
+    # --list-sections must work without --baseline/--new (discoverability
+    # from a clean checkout); plain invocation without them still errors
+    assert cr.main(["--list-sections"]) == 0
+    capsys.readouterr()
+    with pytest.raises(SystemExit):
+        cr.main([])
+
+
+def test_unknown_section_fails(tmp_path, capsys):
+    b = _write_bench(tmp_path / "b.json")
+    assert cr.main(["--baseline", b, "--new", b,
+                    "--sections", "batched,serving_typo"]) == 1
+    out = capsys.readouterr().out
+    assert "unknown sections" in out and "serving_typo" in out
+    # ... and the known-sections hint lists the registry
+    assert "batched" in out
+
+
+def test_registry_covers_every_runner():
+    # every section has a one-line description and a callable runner
+    assert set(cr.SECTIONS) >= {"batched", "serving", "large_n", "seeded",
+                                "seeded_gather", "replay", "distributed",
+                                "pipeline", "obs"}
+    for name, (desc, runner) in cr.SECTIONS.items():
+        assert isinstance(desc, str) and desc
+        assert callable(runner)
+
+
+def test_empty_overlap_exits_one(tmp_path):
+    # two benches with no comparable records -> None results -> exit 1
+    b = _write_bench(tmp_path / "b.json")
+    assert cr.main(["--baseline", b, "--new", b,
+                    "--sections", "batched"]) == 1
+
+
+def test_replay_self_comparison_passes():
+    # the repo's checked-in bench vs itself: ratios are exactly 1.0 and
+    # the hard replay floors hold -> exit 0
+    bench = Path(__file__).resolve().parents[1] / "BENCH_decoder_scaling.json"
+    if not bench.exists():
+        pytest.skip("no checked-in benchmark json")
+    data = json.loads(bench.read_text())
+    if not data.get("replay"):
+        pytest.skip("benchmark json has no replay section yet")
+    assert cr.main(["--baseline", str(bench), "--new", str(bench),
+                    "--sections", "replay"]) == 0

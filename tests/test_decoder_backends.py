@@ -61,10 +61,14 @@ def _assert_backend_parity(code, cw, rx, erased, iters):
             err_msg=f"backend={name}: erasure mask diverged")
         assert int(res.rounds_used) == iters
         assert res.values.shape == cw.shape
-        # values: f32-summation-order agreement with the dense reference
+        # values: f32-summation-order agreement with the dense reference.
+        # Anchored to the same conditioning measure as the truth check: on
+        # an ill-conditioned instance the resolution chain amplifies each
+        # backend's (different) per-round rounding by the same factor it
+        # amplifies dense's deviation from the codeword.
         np.testing.assert_allclose(
             np.asarray(res.values), np.asarray(ref.values),
-            rtol=5e-2, atol=5e-2,
+            rtol=truth_atol, atol=truth_atol,
             err_msg=f"backend={name}: values diverged from dense")
         # and every recovered coordinate matches the true codeword
         ok = ~np.asarray(res.erased)
@@ -140,8 +144,12 @@ def test_single_round_sparse_matches_dense_exactly_on_mask():
         v_d, e_d = peel_round(H, jnp.asarray(code.H_mask), v_d, e_d)
         v_s, e_s = peel_round_sparse(idx, coeff, v_s, e_s)
         np.testing.assert_array_equal(np.asarray(e_d), np.asarray(e_s))
+        # Values: the two rounds associate each check's row sum
+        # differently (dense matvec vs the sparse compensated chain), so a
+        # near-cancelling sum bounds the ABSOLUTE error of the resolved
+        # value, not its relative error.
         np.testing.assert_allclose(np.asarray(v_d), np.asarray(v_s),
-                                   rtol=1e-4, atol=1e-4)
+                                   rtol=1e-3, atol=1e-3)
 
 
 def test_adaptive_sparse_matches_dense_rounds():

@@ -191,6 +191,65 @@ def test_report_renders_summary(tmp_path, capsys):
     assert "tracking" in out
 
 
+# ------------------------------------------- report on partial inputs
+
+
+def test_report_metrics_only_no_trace_file(tmp_path, capsys):
+    # The common partial export: a metrics JSONL with no .trace.json
+    # sibling (no tracer was active, or the file was not shipped).  The
+    # report must render from the JSONL alone — --trace is opt-in.
+    path = tmp_path / "run.jsonl"
+    with metrics.recording() as reg:
+        reg.counter("distributed.steps_total", driver="sync").inc(2)
+        reg.export_jsonl(path)
+    assert not path.with_suffix(".trace.json").exists()
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "steps" in out
+
+
+def test_report_empty_run(tmp_path, capsys):
+    # A registry that recorded nothing still exports a meta header; the
+    # report must render the run section, not crash on zero entries.
+    path = tmp_path / "empty.jsonl"
+    metrics.MetricsRegistry().export_jsonl(path)
+    assert report.main([str(path)]) == 0
+    assert "metrics: 0" in capsys.readouterr().out
+    # ... and a completely empty file (no meta line either) works too
+    bare = tmp_path / "bare.jsonl"
+    bare.write_text("")
+    assert report.main([str(bare)]) == 0
+    assert "metrics: 0" in capsys.readouterr().out
+
+
+def test_report_unknown_metric_names(tmp_path, capsys):
+    # Names no report section knows about (user-defined instrumentation,
+    # or a newer exporter than this report) must not crash the renderer —
+    # they count toward the run total and are otherwise skipped.
+    path = tmp_path / "unknown.jsonl"
+    with metrics.recording() as reg:
+        reg.counter("sched_cache.hit").inc(7)
+        reg.gauge("sched_cache.hit_rate").set(0.875)
+        reg.histogram("my.custom.latency",
+                      bins=metrics.LATENCY_BINS).observe(0.25)
+        reg.info("user.build", {"commit": "abc123"})
+        reg.export_jsonl(path)
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "metrics: 4" in out
+
+
+def test_report_zero_count_histogram_renders():
+    # A histogram that was created but never observed has count 0; the
+    # known-name sections must render its mean as nan, not divide away.
+    reg = metrics.MetricsRegistry()
+    reg.histogram("distributed.step.rounds", bins=metrics.ROUND_BINS,
+                  driver="sync")
+    entries = [v for v in reg.snapshot().values()]
+    text = report.summarize({}, entries)
+    assert "rounds_used" in text and "nan" in text
+
+
 def test_enable_default_logging_idempotent():
     logger = logging.getLogger("repro")
     before_handlers = list(logger.handlers)

@@ -1,0 +1,465 @@
+"""Pattern-compiled peeling: symbolic schedule solve, numeric replay
+(bit-identity with the flooding backends across all four decode entry
+points), the cross-step schedule cache, engine/serving/distributed
+dispatch, and the fused replay kernel.
+
+The acceptance-scale bit-identity runs at N = 8192 on a parity-only code
+(the decode trajectory depends only on H and the mask, so no generator is
+ever needed); structural and error-path tests use a small code.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PeelSchedule,
+    ScheduleCache,
+    Scheme2,
+    compile_peel_schedule,
+    erasure_mask_key,
+    make_regular_ldpc,
+    peel_decode,
+    peel_decode_adaptive,
+    peel_decode_batch,
+    peel_decode_batch_adaptive,
+    second_moment,
+)
+from repro.core.engine import CodedComputeEngine
+from repro.core.ldpc import make_parity_only_ldpc
+from repro.obs import metrics as obs_metrics
+
+SMALL = make_regular_ldpc(48, l=3, r=6, seed=0)
+BIG_N = 8192
+BIG = make_parity_only_ldpc(BIG_N // 2, l=3, r=6, seed=0)
+
+
+def _mask(code, q=0.25, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.random(code.N) < q
+
+
+def _payload(code, seed=0, V=None):
+    rng = np.random.default_rng(1000 + seed)
+    shape = (code.N,) if V is None else (code.N, V)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def _rx(vals, erased):
+    v = np.asarray(vals)
+    e = np.asarray(erased, bool)
+    return np.where(e if v.ndim == e.ndim else e[..., None], 0.0, v)
+
+
+# -------------------------------------------------------- schedule solve
+
+
+def test_schedule_structure_and_prefix_property():
+    erased = _mask(SMALL, q=0.3, seed=3)
+    sched = compile_peel_schedule(SMALL, erased)
+    assert isinstance(sched, PeelSchedule)
+    assert sched.N == SMALL.N
+    assert sched.n_erased == int(erased.sum())
+    assert sched.n_resolved == sched.target.size
+    # offsets delimit per-round segments: strictly growing, ending at the
+    # resolved count (a round that resolves nothing ends the decode)
+    off = np.asarray(sched.offsets)
+    assert off[0] == 0 and off[-1] == sched.n_resolved
+    assert (np.diff(off) > 0).all()
+    assert sched.n_rounds == len(off) - 1
+    # every resolved variable was erased, and is resolved exactly once
+    assert len(set(sched.target.tolist())) == sched.n_resolved
+    assert all(erased[t] for t in sched.target)
+    assert sched.fully_resolved == (sched.n_resolved == sched.n_erased)
+    assert sched.mask_key == erasure_mask_key(erased)
+    # prefix property: a budget-D flooding decode resolves exactly the
+    # first D rounds' segments
+    for D in range(sched.n_rounds + 1):
+        dec = peel_decode(SMALL, _payload(SMALL), erased, D,
+                          backend="sparse")
+        expect = set(sched.target[: int(off[min(D, sched.n_rounds)])])
+        got = set(np.flatnonzero(erased & ~np.asarray(dec.erased)))
+        assert got == expect, f"round budget {D}"
+
+
+def test_schedule_is_value_independent():
+    erased = _mask(SMALL, q=0.3, seed=4)
+    a = compile_peel_schedule(SMALL, erased)
+    b = compile_peel_schedule(SMALL, erased)
+    np.testing.assert_array_equal(a.target, b.target)
+    np.testing.assert_array_equal(a.offsets, b.offsets)
+    np.testing.assert_array_equal(a.w_hi, b.w_hi)
+
+
+def test_compile_schedule_errors():
+    with pytest.raises(ValueError, match="LDPCCode"):
+        compile_peel_schedule((jnp.zeros((8, 16)), jnp.zeros((8, 16))),
+                              np.zeros(16, bool))
+    with pytest.raises(ValueError, match="erased must be"):
+        compile_peel_schedule(SMALL, np.zeros(SMALL.N + 1, bool))
+
+    def traced(e):
+        return compile_peel_schedule(SMALL, e).n_rounds
+
+    with pytest.raises(ValueError, match="CONCRETE erasure mask"):
+        jax.jit(traced)(jnp.zeros(SMALL.N, bool))
+
+
+def test_stale_schedule_fingerprint_rejected():
+    e1, e2 = _mask(SMALL, seed=5), _mask(SMALL, seed=6)
+    sched = compile_peel_schedule(SMALL, e1)
+    with pytest.raises(ValueError, match="does not match the erasure mask"):
+        peel_decode(SMALL, _payload(SMALL), e2, 8, backend="replay",
+                    schedule=sched)
+    other = make_regular_ldpc(24, l=3, r=6, seed=1)
+    with pytest.raises(ValueError, match="solved for N"):
+        peel_decode(other, _payload(other), _mask(other), 8,
+                    backend="replay", schedule=sched)
+    with pytest.raises(ValueError, match="only meaningful"):
+        peel_decode(SMALL, _payload(SMALL), e1, 8, backend="sparse",
+                    schedule=sched)
+
+
+# ------------------------- bit-identity at N=8192, all four entry points
+
+
+def test_replay_bit_identical_single_fixed_large():
+    erased = _mask(BIG, seed=10)
+    rx = _rx(_payload(BIG, seed=10), erased)
+    ref = peel_decode(BIG, rx, erased, 8, backend="sparse")
+    got = peel_decode(BIG, rx, erased, 8, backend="replay")
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+
+
+def test_replay_bit_identical_single_adaptive_large():
+    erased = _mask(BIG, seed=11)
+    rx = _rx(_payload(BIG, seed=11, V=2), erased)
+    ref = peel_decode_adaptive(BIG, rx, erased, 32, backend="sparse")
+    got = peel_decode_adaptive(BIG, rx, erased, 32, backend="replay")
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    assert int(got.rounds_used) == int(ref.rounds_used)
+
+
+def test_replay_bit_identical_batch_fixed_large():
+    B = 3
+    erased = np.stack([_mask(BIG, seed=20 + b) for b in range(B)])
+    rx = _rx(np.stack([_payload(BIG, seed=20 + b) for b in range(B)]),
+             erased)
+    ref = peel_decode_batch(BIG, rx, erased, 8, backend="sparse")
+    got = peel_decode_batch(BIG, rx, erased, 8, backend="replay")
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+
+
+def test_replay_bit_identical_batch_adaptive_large():
+    B = 3
+    erased = np.stack([_mask(BIG, seed=30 + b) for b in range(B)])
+    rx = _rx(np.stack([_payload(BIG, seed=30 + b) for b in range(B)]),
+             erased)
+    budgets = jnp.asarray([32, 2, 7], jnp.int32)
+    ref = peel_decode_batch_adaptive(BIG, rx, erased, backend="sparse",
+                                     budgets=budgets)
+    got = peel_decode_batch_adaptive(BIG, rx, erased, backend="replay",
+                                     budgets=budgets)
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    np.testing.assert_array_equal(np.asarray(got.rounds_used),
+                                  np.asarray(ref.rounds_used))
+
+
+@pytest.mark.parametrize("D", [0, 1, 3, 8])
+def test_replay_budget_prefix_matches_flooding(D):
+    erased = _mask(SMALL, q=0.3, seed=40)
+    rx = _rx(_payload(SMALL, seed=40), erased)
+    ref = peel_decode(SMALL, rx, erased, D, backend="sparse")
+    got = peel_decode(SMALL, rx, erased, D, backend="replay")
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+
+
+def test_replay_under_jit_requires_schedules():
+    erased = _mask(SMALL, seed=41)
+    rx = _rx(_payload(SMALL, seed=41), erased)
+
+    def dec(v, e):
+        return peel_decode_batch(SMALL, v, e, 8, backend="replay").values
+
+    with pytest.raises(ValueError, match="schedules= precompiled"):
+        jax.jit(dec)(jnp.asarray(rx)[None], jnp.asarray(erased)[None])
+    # with pre-solved schedules the same jitted program traces fine
+    sched = compile_peel_schedule(SMALL, erased)
+    out = jax.jit(lambda v, e: peel_decode_batch(
+        SMALL, v, e, 8, backend="replay", schedules=(sched,)))(
+        jnp.asarray(rx)[None], jnp.asarray(erased)[None])
+    # batch replay follows the "lo" rule, so parity is against the batch
+    # flooding executor.  Under the USER'S outer jit the closed-over
+    # schedule operands are trace constants, so XLA's reciprocal fold may
+    # cost the last ulp on resolved values (bit-exact when called eagerly
+    # — the library's own jit keeps operands runtime); the erasure
+    # trajectory is exact either way.
+    ref = peel_decode_batch(SMALL, jnp.asarray(rx)[None],
+                            jnp.asarray(erased)[None], 8, backend="sparse")
+    np.testing.assert_array_equal(np.asarray(out.erased),
+                                  np.asarray(ref.erased))
+    np.testing.assert_allclose(np.asarray(out.values),
+                               np.asarray(ref.values), rtol=1e-6)
+    eager = peel_decode_batch(SMALL, jnp.asarray(rx)[None],
+                              jnp.asarray(erased)[None], 8,
+                              backend="replay", schedules=(sched,))
+    np.testing.assert_array_equal(np.asarray(eager.values),
+                                  np.asarray(ref.values))
+
+
+# -------------------------------------------------------- schedule cache
+
+
+def test_cache_hit_miss_lru_and_stats():
+    cache = ScheduleCache(capacity=2)
+    m1, m2, m3 = (_mask(SMALL, seed=s) for s in (50, 51, 52))
+    s1 = cache.get(SMALL, m1)
+    assert cache.get(SMALL, m1) is s1          # hit returns same object
+    cache.get(SMALL, m2)
+    assert (cache.hits, cache.misses) == (1, 2)
+    cache.get(SMALL, m3)                       # evicts m1 (LRU)
+    assert cache.evictions == 1 and len(cache) == 2
+    s1b = cache.get(SMALL, m1)                 # re-solve after eviction
+    assert s1b is not s1
+    st = cache.stats()
+    assert st["misses"] == 4 and st["size"] == 2 and st["capacity"] == 2
+    assert st["hit_rate"] == pytest.approx(1 / 5)
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.stats()["misses"] == 4        # counters are lifetime
+
+
+def test_cache_batch_and_validation():
+    cache = ScheduleCache()
+    masks = np.stack([_mask(SMALL, seed=s) for s in (60, 60, 61)])
+    scheds = cache.get_batch(SMALL, masks)
+    assert len(scheds) == 3 and scheds[0] is scheds[1]
+    assert cache.misses == 2 and cache.hits == 1
+    with pytest.raises(ValueError, match="must be >= 1"):
+        ScheduleCache(capacity=0)
+    with pytest.raises(ValueError, match="\\(B, N\\)"):
+        cache.get_batch(SMALL, masks[0])
+    with pytest.raises(ValueError, match="CONCRETE erasure mask"):
+        jax.jit(lambda e: cache.get(SMALL, e) and e)(jnp.asarray(masks[0]))
+
+
+def test_cache_distinct_codes_do_not_collide():
+    other = make_regular_ldpc(48, l=3, r=6, seed=9)
+    cache = ScheduleCache()
+    m = _mask(SMALL, seed=70)
+    sa = cache.get(SMALL, m)
+    sb = cache.get(other, m)
+    assert sa is not sb and cache.misses == 2
+
+
+def test_cache_obs_counters():
+    cache = ScheduleCache()
+    m1, m2 = _mask(SMALL, seed=80), _mask(SMALL, seed=81)
+    with obs_metrics.recording() as reg:
+        cache.get(SMALL, m1)
+        cache.get(SMALL, m1)
+        cache.get(SMALL, m2)
+        assert reg.counter("sched_cache.hit").value == 1
+        assert reg.counter("sched_cache.miss").value == 2
+        assert reg.gauge("sched_cache.hit_rate").value == pytest.approx(1 / 3)
+        assert reg.histogram("sched_cache.solve_s").count == 2
+
+
+# ------------------------------------------------------- engine dispatch
+
+
+def _engines(cache=None):
+    kw = dict(decode_iters=8)
+    return (CodedComputeEngine(SMALL, backend="sparse", **kw),
+            CodedComputeEngine(SMALL, backend="replay",
+                               schedule_cache=cache, **kw))
+
+
+def test_engine_replay_matches_sparse_and_uses_cache():
+    cache = ScheduleCache()
+    ref_eng, rep_eng = _engines(cache)
+    erased = jnp.asarray(_mask(SMALL, seed=90))
+    rx = jnp.asarray(_rx(_payload(SMALL, seed=90), erased))
+    ref = ref_eng.decode(rx, erased)
+    got = rep_eng.decode(rx, erased)
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    assert cache.misses == 1
+    rep_eng.decode(rx, erased)
+    assert cache.hits == 1
+    assert rep_eng.debug_info()["schedule_cache_capacity"] == cache.capacity
+
+
+def test_engine_replay_batch_adaptive_matches_sparse():
+    cache = ScheduleCache()
+    ref_eng, rep_eng = _engines(cache)
+    B = 4
+    erased = jnp.asarray(np.stack([_mask(SMALL, seed=100 + b)
+                                   for b in range(B)]))
+    rx = jnp.asarray(_rx(np.stack([_payload(SMALL, seed=100 + b)
+                                   for b in range(B)]), erased))
+    budgets = jnp.asarray([8, 1, 3, 8], jnp.int32)
+    ref = ref_eng.decode_batch(rx, erased, adaptive=True, budgets=budgets)
+    got = rep_eng.decode_batch(rx, erased, adaptive=True, budgets=budgets)
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.erased),
+                                  np.asarray(ref.erased))
+    np.testing.assert_array_equal(np.asarray(got.rounds_used),
+                                  np.asarray(ref.rounds_used))
+    assert cache.misses == B
+
+
+# ------------------------------------------------------ serving batcher
+
+
+def test_serving_batcher_replay_matches_sparse():
+    from repro.data import make_linear_problem
+    from repro.serving import CodedQuery, CodedQueryBatcher
+
+    prob = make_linear_problem(m=256, k=SMALL.K, seed=0)
+    mom = second_moment(prob.X, prob.y)
+
+    def scheme(backend):
+        return Scheme2.build(SMALL, mom, lr=prob.lr, decode_iters=8,
+                             decode_backend=backend)
+
+    rng = np.random.default_rng(7)
+    pats = rng.random((3, SMALL.N)) < 0.25      # recurring patterns
+    queries = {}
+    for backend in ("sparse", "replay"):
+        queries[backend] = [
+            CodedQuery(i, rng_theta, pats[i % 3])
+            for i, rng_theta in enumerate(
+                np.random.default_rng(8).standard_normal(
+                    (9, SMALL.K)).astype(np.float32))]
+        bat = CodedQueryBatcher(scheme(backend), n_slots=4,
+                                rounds_per_launch=8)
+        for q in queries[backend]:
+            bat.submit(q)
+        bat.run()
+        if backend == "replay":
+            # 3 recurring patterns -> 3 solves, plus at most one more for
+            # the padding mask of the final partial launch; the rest of
+            # the 9-query stream hits the cache
+            st = bat.schedule_cache.stats()
+            assert st["misses"] <= 4 and st["hits"] >= 5
+            assert st["hit_rate"] > 0.5
+    for qs, qr in zip(queries["sparse"], queries["replay"]):
+        assert qr.unresolved == qs.unresolved
+        np.testing.assert_array_equal(np.asarray(qr.gradient),
+                                      np.asarray(qs.gradient))
+
+
+def test_serving_batcher_replay_rejects_chunked_budget():
+    from repro.data import make_linear_problem
+    from repro.serving import CodedQueryBatcher
+
+    prob = make_linear_problem(m=256, k=SMALL.K, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    scheme = Scheme2.build(SMALL, mom, lr=prob.lr, decode_iters=8,
+                           decode_backend="replay")
+    with pytest.raises(ValueError, match="rounds_per_launch"):
+        CodedQueryBatcher(scheme, n_slots=4, rounds_per_launch=2)
+
+
+# ----------------------------------------- distributed + pipeline matrix
+
+
+def test_distributed_master_replay_parity():
+    from repro.distributed.selfcheck import check_parity
+
+    assert check_parity(K=64, n_workers=8, steps=4, q0=0.25,
+                        backend="sparse", master_decode="replay") == 4
+
+
+def test_pipeline_master_replay_parity():
+    from repro.distributed.selfcheck import check_pipeline_parity
+
+    assert check_pipeline_parity(K=64, n_workers=8, steps=4, q0=0.25,
+                                 backend="sparse",
+                                 master_decode="replay") == 8
+
+
+def test_pipeline_rejects_sharded_master_decode():
+    from repro.core import Scheme2
+    from repro.data import make_linear_problem
+    from repro.distributed import WorkerTopology, make_worker_mesh
+    from repro.distributed.pipeline import AsyncDistributedCodedGD
+
+    prob = make_linear_problem(m=256, k=64, seed=0)
+    mom = second_moment(prob.X, prob.y)
+    code = make_regular_ldpc(64, l=3, r=6, seed=0)
+    scheme = Scheme2.build(code, mom, lr=prob.lr, decode_iters=8,
+                           decode_backend="sparse")
+    with pytest.raises(ValueError, match="single.*replay"):
+        AsyncDistributedCodedGD(
+            scheme=scheme, topology=WorkerTopology(8, code.N),
+            mesh=make_worker_mesh(), master_decode="sharded")
+
+
+# --------------------------------------------------- fused replay kernel
+
+
+def test_replay_kernel_bit_parity_and_single_launch():
+    from repro.kernels.ldpc_peel import peel_decode_replay_pallas
+
+    erased = _mask(SMALL, q=0.3, seed=110)
+    rx = jnp.asarray(_rx(_payload(SMALL, seed=110, V=2), erased))
+    sched = compile_peel_schedule(SMALL, erased)
+    ref = peel_decode(SMALL, rx, erased, sched.n_rounds, backend="replay")
+    v, e = peel_decode_replay_pallas(sched, rx, jnp.asarray(erased),
+                                     rule="hi", bv=8)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(ref.erased))
+    # ONE fused launch: exactly one pallas_call anywhere in the jaxpr
+    # (the op jits its impl, so walk nested call jaxprs too)
+    jaxpr = jax.make_jaxpr(
+        lambda vv, ee: peel_decode_replay_pallas(sched, vv, ee, rule="hi",
+                                                 bv=8))(rx,
+                                                        jnp.asarray(erased))
+
+    def count_pallas(jx):
+        n = 0
+        for eq in jx.eqns:
+            if "pallas" in eq.primitive.name:
+                n += 1
+            for v in eq.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    n += count_pallas(inner)
+        return n
+
+    assert count_pallas(jaxpr.jaxpr) == 1
+
+
+def test_replay_kernel_lo_rule_matches_batch_executor():
+    from repro.kernels.ldpc_peel import peel_decode_replay_pallas
+
+    erased = _mask(SMALL, q=0.3, seed=111)
+    rx = _rx(_payload(SMALL, seed=111), erased)
+    sched = compile_peel_schedule(SMALL, erased)
+    ref = peel_decode_batch(SMALL, jnp.asarray(rx)[None],
+                            jnp.asarray(erased)[None], sched.n_rounds,
+                            backend="replay", schedules=(sched,))
+    v, e = peel_decode_replay_pallas(sched, jnp.asarray(rx),
+                                     jnp.asarray(erased), rule="lo", bv=8)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ref.values)[0])
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(ref.erased)[0])

@@ -60,6 +60,7 @@ from repro.core.encoding import (
 from repro.core.engine import CodedComputeEngine
 from repro.core.hwcaps import (
     HardwareCaps,
+    detect_caps,
     pick_seeded_mode,
     seeded_dense_round_flops,
     seeded_gather_round_flops,
@@ -265,6 +266,40 @@ def test_auto_crossover_follows_mxu_advantage():
     assert pick_seeded_mode(
         tiny, 1, caps=HardwareCaps("tpu", 8.0)) == "dense_tile"
     assert "auto" in SEEDED_MODES
+
+
+def test_mxu_advantage_env_override(monkeypatch):
+    """REPRO_MXU_ADVANTAGE replaces the TPU placeholder (read per call, so
+    the monkeypatched env is seen immediately); CPU caps ignore it, and the
+    default path still reports the placeholder when the var is unset."""
+    from repro.core import hwcaps
+
+    monkeypatch.delenv(hwcaps.MXU_ADVANTAGE_ENV, raising=False)
+    assert detect_caps("tpu").mxu_advantage \
+        == hwcaps.DEFAULT_TPU_MXU_ADVANTAGE
+    assert detect_caps("cpu").mxu_advantage == 1.0
+
+    monkeypatch.setenv(hwcaps.MXU_ADVANTAGE_ENV, "3.5")
+    assert detect_caps("tpu").mxu_advantage == 3.5
+    assert detect_caps("cpu").mxu_advantage == 1.0  # CPU stays scalar
+
+    # a low measured advantage flips the tiny-code crossover back to gather
+    tiny = seeded_structure(8, 16, 8, 0)
+    ratio = (seeded_dense_round_flops(tiny, 1)
+             / seeded_gather_round_flops(tiny, 1))
+    monkeypatch.setenv(hwcaps.MXU_ADVANTAGE_ENV, str(ratio / 2))
+    assert pick_seeded_mode(tiny, 1, caps=detect_caps("tpu")) == "gather"
+
+
+@pytest.mark.parametrize("bad", ["fast", "", "0", "-2.0", "nan", "inf"])
+def test_mxu_advantage_env_rejects_bad_values(monkeypatch, bad):
+    from repro.core import hwcaps
+
+    monkeypatch.setenv(hwcaps.MXU_ADVANTAGE_ENV, bad)
+    with pytest.raises(ValueError, match=hwcaps.MXU_ADVANTAGE_ENV):
+        detect_caps("tpu")
+    # CPU detection never consults the override, so it cannot be broken
+    assert detect_caps("cpu").mxu_advantage == 1.0
 
 
 def test_modeled_flops_ratio_at_16384():
